@@ -1,0 +1,71 @@
+"""Paper Fig. 8(a): traffic-light accuracy — FL-trained vision encoder vs
+a single-client (centrally pre-trained) baseline, on held-out data from
+every town. Claim reproduced: FL across non-IID towns improves held-out
+accuracy (paper: 79.9% -> 92.66%)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import ShapeConfig
+from repro.configs import get_config
+from repro.configs.common import reduced
+from repro.core.fedavg import fedavg, make_fl_round, stack_clients
+from repro.core.steps import make_train_step
+from repro.data.partition import fleet_datasets
+from repro.data.pipeline import batches, client_round_batches
+from repro.data.synthetic import DrivingDataConfig, TownWorld
+from repro.models import build_model
+from repro.train.optimizer import Adam
+
+
+def _acc(model, params, data, bs=64):
+    correct = n = 0
+    for i in range(0, len(data["light"]) - bs + 1, bs):
+        b = {k: jnp.asarray(v[i:i + bs]) for k, v in data.items()}
+        _, m = model.loss(params, b)
+        correct += float(m["acc"]) * bs
+        n += bs
+    return correct / max(n, 1)
+
+
+def run(quick: bool = False):
+    cfg = reduced(get_config("flad_vision"))
+    dcfg = DrivingDataConfig(feature_dim=cfg.prefix_dim,
+                             patches=cfg.prefix_tokens or 8,
+                             num_waypoints=cfg.num_waypoints,
+                             num_light_classes=cfg.num_light_classes,
+                             n_towns=4)
+    clients, rounds, locsteps, bs = (4, 6, 2, 16) if quick \
+        else (8, 15, 2, 16)
+    datasets = fleet_datasets(dcfg, clients, 384, beta=0.3)
+    world = TownWorld(dcfg)
+    rng = np.random.default_rng(99)
+    heldout = [world.sample(t, 192, rng) for t in range(dcfg.n_towns)]
+
+    model = build_model(cfg)
+    params0 = model.init(jax.random.PRNGKey(0))
+    opt = Adam(lr=2e-3)
+    shape = ShapeConfig("fl", dcfg.patches, bs, "train")
+
+    step = jax.jit(make_train_step(cfg, shape, opt, remat=False))
+    p, o = params0, opt.init(params0)
+    it = batches(datasets[0], bs, epochs=rounds * locsteps + 1)
+    for _ in range(rounds * locsteps):
+        p, o, _ = step(p, o, next(it))
+    base = np.mean([_acc(model, p, d) for d in heldout])
+    emit("fl_accuracy/single_client", f"{base:.4f}")
+
+    fl_round = jax.jit(make_fl_round(cfg, shape, opt, local_steps=locsteps,
+                                     remat=False))
+    cp = stack_clients(params0, clients)
+    co = jax.vmap(opt.init)(cp)
+    for r in range(rounds):
+        rb = client_round_batches(datasets, locsteps, bs, round_idx=r)
+        cp, co, _ = fl_round(cp, co,
+                             {k: jnp.asarray(v) for k, v in rb.items()})
+    fl_acc = np.mean([_acc(model, fedavg(cp), d) for d in heldout])
+    emit("fl_accuracy/flad_fl", f"{fl_acc:.4f}",
+         f"delta=+{fl_acc-base:.4f} (paper: 0.799->0.927)")

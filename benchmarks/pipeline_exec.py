@@ -1,0 +1,74 @@
+"""Paper Fig. 6(a,b): SWIFT vs greedy-matching pipeline execution time
+under the Eq. 10 cost model — (a) sweep cluster size at fixed model,
+(b) sweep model size at cluster 5. Reproduced claims: SWIFT <= greedy
+where both are feasible; greedy becomes infeasible at large cluster /
+model sizes where SWIFT still solves."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.sched.costmodel import CostParams, Unit, make_fleet, model_units
+from repro.sched import swift as SW
+
+
+def _fleet(n, rng):
+    # heterogeneous, arrival-ordered (greedy consumes them in this order)
+    return make_fleet(
+        [dict(cmp=rng.uniform(0.4, 4) * 1e12,
+              mem=rng.uniform(2, 8) * 1e9, com=0.125e9) for _ in range(n)],
+        stb=rng.uniform(0, 1, n), dwl=rng.uniform(600, 3600, n))
+
+
+def _best_swift(res: SW.SwiftResult):
+    pipes = list(res.essential.values())
+    if res.initial is not None:
+        pipes.append(res.initial)
+    return min((p.time for p in pipes), default=None)
+
+
+def run(quick: bool = False, agent=None):
+    cp = CostParams()
+    rng = np.random.default_rng(1)
+
+    # (a) cluster-size sweep, ~5.5 GB model (paper's smallest)
+    units = [Unit(f"u{i}", 0.55e9, 5e13, 4e6) for i in range(10)]
+    for n in ((3, 5, 7) if quick else (3, 5, 7, 9)):
+        sw, gr = [], []
+        for rep in range(5):
+            fleet = _fleet(n, rng)
+            res = SW.swift(fleet, units, agent=agent, cp=cp)
+            g = SW.greedy_matching(fleet, units, cp)
+            t = _best_swift(res)
+            if t is not None:
+                sw.append(t)
+            if g is not None:
+                gr.append(g.time)
+        emit(f"pipeline_exec/swift_s/cluster{n}",
+             f"{np.median(sw):.2f}" if sw else "infeasible",
+             f"feasible={len(sw)}/5")
+        emit(f"pipeline_exec/greedy_s/cluster{n}",
+             f"{np.median(gr):.2f}" if gr else "infeasible",
+             f"feasible={len(gr)}/5")
+
+    # (b) model-size sweep at cluster 5 (paper: 5.55 / 11.1 / 14.0 GB)
+    for gb in (5.55, 11.1, 14.0):
+        units_b = [Unit(f"u{i}", gb * 1e9 / 10, 5e13 * gb / 5.55, 4e6)
+                   for i in range(10)]
+        sw, gr = [], []
+        for rep in range(5):
+            fleet = _fleet(5, rng)
+            res = SW.swift(fleet, units_b, agent=agent, cp=cp)
+            g = SW.greedy_matching(fleet, units_b, cp)
+            t = _best_swift(res)
+            if t is not None:
+                sw.append(t)
+            if g is not None:
+                gr.append(g.time)
+        emit(f"pipeline_exec/swift_s/model{gb}GB",
+             f"{np.median(sw):.2f}" if sw else "infeasible",
+             f"feasible={len(sw)}/5")
+        emit(f"pipeline_exec/greedy_s/model{gb}GB",
+             f"{np.median(gr):.2f}" if gr else "infeasible",
+             f"feasible={len(gr)}/5")

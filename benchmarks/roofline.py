@@ -1,0 +1,44 @@
+"""§Roofline: render the per-(arch x shape x mesh) roofline table from the
+dry-run JSON (results/dryrun_baseline_v4.json by default).
+
+Terms per device (TPU v5e: 197 TF bf16, 819 GB/s HBM, ~50 GB/s ICI):
+  compute_s    = HLO dot/conv FLOPs / peak
+  memory_s     = HLO operand+result bytes / HBM bw
+  collective_s = collective payload bytes / ICI link bw
+(all trip-count-corrected by the launch/hlo_parse walker).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_baseline_v4.json")
+
+
+def run(quick: bool = False, path: str = DEFAULT):
+    if not os.path.exists(path):
+        emit("roofline/status", "missing",
+             "run: python -m repro.launch.dryrun --all --both-meshes "
+             "--out results/dryrun_baseline_v4.json")
+        return
+    rows = json.load(open(path))
+    n_ok = sum(r["ok"] for r in rows)
+    emit("roofline/pairs_ok", f"{n_ok}/{len(rows)}")
+    fits = sum(1 for r in rows if r.get("fits_hbm"))
+    emit("roofline/pairs_fit_hbm", f"{fits}/{n_ok}")
+    print(f"{'arch':22s} {'shape':12s} {'mesh':8s} {'comp_s':>8s} "
+          f"{'mem_s':>8s} {'coll_s':>8s} {'dom':>7s} {'useful':>6s} "
+          f"{'peakGiB':>8s}")
+    for r in rows:
+        if not r["ok"]:
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} FAILED")
+            continue
+        rf = r["roofline"]
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{rf['compute_s']:8.4f} {rf['memory_s']:8.4f} "
+              f"{rf['collective_s']:8.4f} {r['dominant'][:7]:>7s} "
+              f"{(r['useful_ratio'] or 0):6.2f} "
+              f"{r.get('peak_bytes', 0)/2**30:8.1f}")

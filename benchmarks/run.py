@@ -1,0 +1,69 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  Fig. 5(a) SWIFT optimization time     -> swift_opt
+  Fig. 5(b) recovery time               -> recovery_bench
+  Fig. 6(a,b) pipeline execution time   -> pipeline_exec
+  Fig. 7(a,b) + Table 2 FHDP            -> fhdp_throughput
+  Fig. 8(a) FL accuracy                 -> fl_accuracy
+  Fig. 10 LLM/distillation quality      -> distill_quality
+  §Roofline table (from the dry-run)    -> roofline
+
+Prints ``name,value,derived`` CSV lines. ``--quick`` shrinks sweeps.
+"""
+import argparse
+import os
+import time
+import traceback
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list of benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (distill_quality, fhdp_throughput, fl_accuracy,
+                            pipeline_exec, recovery_bench, roofline,
+                            swift_opt)
+
+    agent_holder = {}
+
+    def run_swift():
+        agent_holder["agent"] = swift_opt.run(quick=args.quick)
+
+    def run_pipeline_exec():
+        pipeline_exec.run(quick=args.quick,
+                          agent=agent_holder.get("agent"))
+
+    jobs = [
+        ("swift_opt", run_swift),
+        ("pipeline_exec", run_pipeline_exec),
+        ("recovery", lambda: recovery_bench.run(quick=args.quick)),
+        ("fhdp_throughput", lambda: fhdp_throughput.run(quick=args.quick)),
+        ("fl_accuracy", lambda: fl_accuracy.run(quick=args.quick)),
+        ("distill_quality", lambda: distill_quality.run(quick=args.quick)),
+        ("roofline", lambda: roofline.run(quick=args.quick)),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for name, job in jobs:
+        if only and name not in only:
+            continue
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            job()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"=== {name} done in {time.time()-t0:.1f}s ===", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Fig. 5(a): SWIFT optimization time — phase 1 (greedy quick-start)
+vs phase 2 (DQN refinement) across cluster sizes. The claim reproduced:
+phase 1 is orders of magnitude faster and roughly constant, enabling
+immediate pipeline execution while phase 2 refines."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.sched.costmodel import CostParams, make_fleet, model_units
+from repro.sched import swift as SW
+
+
+def _fleet(n, rng):
+    return make_fleet(
+        [dict(cmp=rng.uniform(0.3, 4) * 1e12,
+              mem=rng.uniform(4, 32) * 1e9, com=0.125e9)
+         for _ in range(n)],
+        stb=rng.uniform(0, 1, n), dwl=rng.uniform(600, 3600, n))
+
+
+def run(quick: bool = False):
+    cp = CostParams()
+    units = model_units(get_config("flad_adllm"), seq_len=1024)
+    rng = np.random.default_rng(0)
+
+    def sampler():
+        return _fleet(int(rng.integers(3, 8)), rng), units
+
+    agent = SW.train_policy(sampler, episodes=30 if quick else 150, cp=cp)
+
+    sizes = (3, 5, 7) if quick else (3, 5, 7, 9, 11)
+    for n in sizes:
+        p1s, p2s = [], []
+        for rep in range(3):
+            fleet = _fleet(n, rng)
+            res = SW.swift(fleet, units, agent=agent, cp=cp)
+            p1s.append(res.phase1_s)
+            p2s.append(res.phase2_s)
+        emit(f"swift_opt/phase1_s/cluster{n}", f"{np.median(p1s):.5f}")
+        emit(f"swift_opt/phase2_s/cluster{n}", f"{np.median(p2s):.5f}",
+             f"ratio={np.median(p2s)/max(np.median(p1s),1e-9):.1f}x")
+    return agent

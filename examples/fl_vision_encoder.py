@@ -1,0 +1,108 @@
+"""End-to-end driver: federated training of the FLAD vision encoder
+(paper Fig. 1 training procedure / Fig. 8a evaluation).
+
+8 FL clients with town-non-IID driving data train the vision encoder via
+hierarchical FedAvg (client -> edge -> cloud = mean over the data/pod
+axes). We report held-out traffic-light accuracy of (a) a model trained
+on ONE town's data only (the "centralized-on-local-data" baseline the
+paper improves over) and (b) the FL global model — reproducing the
+direction of Fig. 8a (79.9% -> 92.66% there).
+
+    PYTHONPATH=src python examples/fl_vision_encoder.py --rounds 20
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ShapeConfig
+from repro.configs import get_config
+from repro.configs.common import reduced
+from repro.core.fedavg import client_specs, fedavg, make_fl_round, stack_clients
+from repro.data.partition import fleet_datasets
+from repro.data.synthetic import DrivingDataConfig, TownWorld
+from repro.data.pipeline import client_round_batches
+from repro.models import build_model
+from repro.train.optimizer import Adam
+
+
+def light_accuracy(model, params, data, batch=64):
+    correct = n = 0
+    for i in range(0, len(data["light"]) - batch + 1, batch):
+        b = {k: jnp.asarray(v[i:i + batch]) for k, v in data.items()}
+        _, metrics = model.loss(params, b)
+        correct += float(metrics["acc"]) * batch
+        n += batch
+    return correct / max(n, 1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--samples", type=int, default=512)
+    ap.add_argument("--full", action="store_true",
+                    help="full ~100M config (TPU scale; CPU: hours)")
+    args = ap.parse_args()
+
+    cfg = get_config("flad-vision")
+    if not args.full:
+        cfg = reduced(cfg)
+    dcfg = DrivingDataConfig(feature_dim=cfg.prefix_dim,
+                             patches=cfg.prefix_tokens or 8,
+                             num_waypoints=cfg.num_waypoints,
+                             num_light_classes=cfg.num_light_classes,
+                             n_towns=4)
+    datasets = fleet_datasets(dcfg, args.clients, args.samples, beta=0.3)
+    world = TownWorld(dcfg)
+    rng = np.random.default_rng(99)
+    heldout = {t: world.sample(t, 256, rng) for t in range(dcfg.n_towns)}
+
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params0 = model.init(key)
+    opt = Adam(lr=2e-3)
+    shape = ShapeConfig("fl", dcfg.patches, args.batch, "train")
+
+    # -- baseline: train on client 0's (single-town-skewed) data only
+    from repro.core.steps import make_train_step
+    step = jax.jit(make_train_step(cfg, shape, opt, remat=False))
+    p, o = params0, opt.init(params0)
+    from repro.data.pipeline import batches
+    it = batches(datasets[0], args.batch,
+                 epochs=args.rounds * args.local_steps + 1)
+    for _ in range(args.rounds * args.local_steps):
+        p, o, m = step(p, o, next(it))
+    base_acc = np.mean([light_accuracy(model, p, d)
+                        for d in heldout.values()])
+    print(f"single-client model: held-out light acc = {base_acc:.3f}")
+
+    # -- FLAD: hierarchical FedAvg over all clients
+    fl_round = jax.jit(make_fl_round(cfg, shape, opt,
+                                     local_steps=args.local_steps,
+                                     remat=False))
+    cp = stack_clients(params0, args.clients)
+    co = jax.vmap(opt.init)(cp)
+    for r in range(args.rounds):
+        rb = client_round_batches(datasets, args.local_steps, args.batch,
+                                  round_idx=r)
+        rb = {k: jnp.asarray(v) for k, v in rb.items()}
+        cp, co, metrics = fl_round(cp, co, rb)
+        if (r + 1) % 5 == 0:
+            print(f"round {r+1:3d} loss={float(np.mean(metrics['loss'])):.4f}")
+    global_params = fedavg(cp)
+    fl_acc = np.mean([light_accuracy(model, global_params, d)
+                      for d in heldout.values()])
+    print(f"FLAD FL model:       held-out light acc = {fl_acc:.3f}")
+    print(f"improvement: {base_acc:.3f} -> {fl_acc:.3f} "
+          f"(paper Fig. 8a: 0.799 -> 0.927)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quick manual smoke: every reduced arch runs loss + grad + decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import INPUT_SHAPES, ShapeConfig
+from repro.configs import ARCH_IDS, get_config, input_specs, reduced, state_specs
+from repro.configs.common import concrete_batch, cache_len, effective_window
+from repro.models import build_model
+
+SMOKE_SHAPE = ShapeConfig("smoke", 32, 2, "train")
+DECODE_SHAPE = ShapeConfig("smoke-dec", 64, 2, "decode")
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    failures = []
+    for arch in ARCH_IDS:
+        cfg = reduced(get_config(arch))
+        model = build_model(cfg)
+        try:
+            params = model.init(key)
+            n = sum(x.size for x in jax.tree.leaves(params))
+            batch = concrete_batch(cfg, SMOKE_SHAPE, key)
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                                 for g in jax.tree.leaves(grads)))
+            ok = bool(jnp.isfinite(loss)) and bool(jnp.isfinite(gnorm))
+            msg = f"{arch:24s} params={n:9d} loss={float(loss):8.4f} gnorm={float(gnorm):10.4f}"
+            # decode
+            if cfg.family != "vision":
+                st = model.init_state(2, 64)
+                tok = jnp.zeros((2, 1), jnp.int32)
+                logits, st = model.decode_step(params, tok, st, 5)
+                ok = ok and bool(jnp.all(jnp.isfinite(logits)))
+                msg += f" dec_logits={logits.shape}"
+            print(("OK  " if ok else "BAD ") + msg)
+            if not ok:
+                failures.append(arch)
+        except Exception as e:  # noqa
+            import traceback
+            traceback.print_exc()
+            print(f"FAIL {arch}: {type(e).__name__}: {e}")
+            failures.append(arch)
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("all ok")
+
+
+if __name__ == "__main__":
+    main()

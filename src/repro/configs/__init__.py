@@ -1,0 +1,42 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full published config; ``reduced(cfg)``
+returns the CPU-smoke variant (<=2 layers, d_model<=512, <=4 experts).
+``input_specs(cfg, shape)`` returns jax.ShapeDtypeStruct stand-ins for every
+model input of a (arch, shape) pair — no device allocation.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.config import INPUT_SHAPES, LONG_CONTEXT_WINDOW, ModelConfig, ShapeConfig
+from repro.configs.common import input_specs, reduced, state_specs  # noqa: F401
+
+ARCH_IDS = [
+    "internvl2_2b",
+    "qwen2_5_32b",
+    "qwen3_32b",
+    "xlstm_350m",
+    "qwen3_moe_30b_a3b",
+    "yi_34b",
+    "seamless_m4t_large_v2",
+    "dbrx_132b",
+    "hymba_1_5b",
+    "qwen3_14b",
+    # the paper's own models
+    "flad_vision",
+    "flad_adllm",
+]
+
+
+def _canon(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_canon(name)}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict:
+    return {a: get_config(a) for a in ARCH_IDS}

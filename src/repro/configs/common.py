@@ -1,0 +1,123 @@
+"""Shared helpers: reduced smoke variants and ShapeDtypeStruct input specs."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (INPUT_SHAPES, LONG_CONTEXT_WINDOW, ModelConfig,
+                          MoEConfig, ShapeConfig)
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """CPU-smoke variant of the same family: 2 layers, d_model<=256,
+    <=4 experts, tiny vocab."""
+    kw = dict(
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        param_dtype="float32",
+        q_chunk=64,
+        kv_chunk=64,
+    )
+    if cfg.moe.num_experts:
+        kw["moe"] = MoEConfig(num_experts=4, top_k=2, d_expert=64)
+    if cfg.family == "ssm":
+        kw["num_kv_heads"] = 4
+        kw["ssm"] = dataclasses.replace(cfg.ssm, slstm_every=2)
+    if cfg.family == "hybrid":
+        kw["ssm"] = dataclasses.replace(cfg.ssm, state_size=8)
+    if cfg.family == "encdec":
+        kw["enc_layers"] = 1
+        kw["dec_layers"] = 1
+        kw["num_kv_heads"] = 4
+        kw["prefix_dim"] = 64
+    if cfg.family == "vlm":
+        kw["prefix_tokens"] = 8
+        kw["prefix_dim"] = 64
+    if cfg.family == "vision":
+        kw["prefix_dim"] = 32
+        kw["num_waypoints"] = cfg.num_waypoints
+        kw["num_light_classes"] = cfg.num_light_classes
+    return cfg.replace(name=cfg.name + "-smoke", **kw)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def effective_window(cfg: ModelConfig, shape: ShapeConfig):
+    """long_500k forces sub-quadratic attention: sliding window for
+    full-attention families (SSM paths are already O(1))."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm",):
+        return LONG_CONTEXT_WINDOW
+    return cfg.window
+
+
+def cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    w = effective_window(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+ENC_MEMORY_DECODE = 4096  # frames of encoder memory during enc-dec decode
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch ShapeDtypeStructs for train/prefill steps (decode state comes
+    from :func:`state_specs`)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if cfg.family == "vision":
+        p = cfg.prefix_tokens or 64
+        return {
+            "rgb": _sds((b, p, cfg.prefix_dim), jnp.float32),
+            "lidar": _sds((b, p, cfg.prefix_dim), jnp.float32),
+            "waypoints": _sds((b, cfg.num_waypoints, 2), jnp.float32),
+            "light": _sds((b,), tok),
+        }
+    if cfg.family == "encdec":
+        if shape.is_decode:
+            return {"tokens": _sds((b, 1), tok)}
+        half = s // 2
+        return {
+            "frames": _sds((b, half, cfg.prefix_dim), jnp.float32),
+            "tokens": _sds((b, half), tok),
+            "labels": _sds((b, half), tok),
+        }
+    if shape.is_decode:
+        return {"tokens": _sds((b, 1), tok)}
+    specs = {"tokens": _sds((b, s), tok), "labels": _sds((b, s), tok)}
+    if cfg.family == "vlm":
+        specs["tokens"] = _sds((b, s - cfg.prefix_tokens), tok)
+        specs["labels"] = _sds((b, s - cfg.prefix_tokens), tok)
+        specs["patches"] = _sds((b, cfg.prefix_tokens, cfg.prefix_dim),
+                                jnp.float32)
+    return specs
+
+
+def state_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Decode-state ShapeDtypeStructs via eval_shape (no allocation)."""
+    from repro.models import build_model
+    model = build_model(cfg)
+    cl = cache_len(cfg, shape)
+    st = jax.eval_shape(lambda: model.init_state(shape.global_batch, cl))
+    return st
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeConfig, key) -> dict:
+    """Materialize a random batch matching input_specs (small shapes only)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k_, v in specs.items():
+        key, sub = jax.random.split(key)
+        if v.dtype == jnp.int32:
+            hi = cfg.num_light_classes if k_ == "light" else cfg.vocab_size
+            out[k_] = jax.random.randint(sub, v.shape, 0, max(hi, 2), jnp.int32)
+        else:
+            out[k_] = jax.random.normal(sub, v.shape, v.dtype)
+    return out

@@ -1,0 +1,19 @@
+"""InternVL2-2B backbone: InternViT-300M (stubbed frontend) + InternLM2-1.8B
+decoder [arXiv:2404.16821]. The language backbone consumes 256 projected
+patch embeddings (prefix) + text tokens."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    rope_theta=1e6,
+    prefix_tokens=256,
+    prefix_dim=1024,   # InternViT-300M feature width (stub frontend)
+)

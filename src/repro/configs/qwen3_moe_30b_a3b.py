@@ -1,0 +1,18 @@
+"""Qwen3-30B-A3B: 128 experts, top-8, fine-grained d_expert=768
+[hf:Qwen/Qwen3-30B-A3B]."""
+from repro.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=768,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+    moe=MoEConfig(num_experts=128, top_k=8, d_expert=768),
+)

@@ -1,0 +1,137 @@
+"""Activation-sharding constraints at block boundaries.
+
+At train shapes the per-layer residual stream dominates HBM (scan-of-remat
+saves one [B/dp, S, d] tensor per layer); sharding its sequence dim over the
+``model`` axis (Megatron sequence parallelism) divides that footprint by the
+tensor-parallel degree. XLA/GSPMD inserts the required gathers around the
+head-sharded attention/FFN matmuls.
+
+The rules are installed for the duration of a trace (``lower()`` runs the
+tracing synchronously), so jitted functions capture them:
+
+    with act_rules(batch_axes=("data",), seq_axis="model"):
+        lowered = jax.jit(step, ...).lower(...)
+
+Models call :func:`constrain` on the residual stream between blocks; with no
+rules installed it is the identity, so tests and single-device runs are
+unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ActRules:
+    batch_axes: Optional[Tuple[str, ...]] = None  # residual dim 0
+    seq_axis: Optional[str] = None                # residual dim 1
+    # mesh axis sizes for divisibility checks (avoids lowering failures on
+    # odd dims)
+    batch_size_div: int = 1
+    seq_div: int = 1
+    mesh: object = None          # explicit Mesh -> NamedSharding constraints
+
+
+_RULES: Optional[ActRules] = None
+
+
+@contextlib.contextmanager
+def act_rules(*, batch_axes=None, seq_axis=None, batch_div=1, seq_div=1,
+              mesh=None):
+    global _RULES
+    prev = _RULES
+    _RULES = ActRules(tuple(batch_axes) if batch_axes else None, seq_axis,
+                      batch_div, seq_div, mesh)
+    try:
+        yield
+    finally:
+        _RULES = prev
+
+
+def rules_for(mesh, shape_kind: str = "train"):
+    """Standard rules for a production mesh: batch over the data axes,
+    sequence over ``model`` for train/prefill activations."""
+    names = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in names)
+    bdiv = 1
+    for a in batch:
+        bdiv *= mesh.shape[a]
+    seq = "model" if "model" in names and shape_kind != "decode" else None
+    return dict(batch_axes=batch, seq_axis=seq, batch_div=bdiv,
+                seq_div=mesh.shape.get("model", 1) if seq else 1, mesh=mesh)
+
+
+def current() -> Optional[ActRules]:
+    return _RULES
+
+
+def constrain(x: jax.Array, seq_dim: int = 1) -> jax.Array:
+    """Constrain ``x``: dim 0 over the batch axes, ``seq_dim`` over the
+    sequence axis (Megatron-SP layout). Identity when no rules installed or
+    dims do not divide."""
+    r = _RULES
+    if r is None or x.ndim <= seq_dim:
+        return x
+    b = r.batch_axes if (r.batch_axes and x.shape[0] % r.batch_size_div == 0) \
+        else None
+    s = r.seq_axis if (r.seq_axis and x.shape[seq_dim] % r.seq_div == 0) \
+        else None
+    if b is None and s is None:
+        return x
+    spec = [b] + [None] * (x.ndim - 1)
+    if s is not None:
+        spec[seq_dim] = s
+    spec = P(*spec)
+    if r.mesh is not None:
+        from jax.sharding import NamedSharding
+        spec = NamedSharding(r.mesh, spec)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_map(x: jax.Array, dims: dict) -> jax.Array:
+    """Constrain arbitrary dims: {dim: 'batch'|'seq'} (seq = tensor axis)."""
+    r = _RULES
+    if r is None:
+        return x
+    spec = [None] * x.ndim
+    ok = False
+    for d, kind in dims.items():
+        if d >= x.ndim:
+            continue
+        if kind == "batch" and r.batch_axes \
+                and x.shape[d] % r.batch_size_div == 0:
+            spec[d] = r.batch_axes
+            ok = True
+        elif kind == "seq" and r.seq_axis and x.shape[d] % r.seq_div == 0:
+            spec[d] = r.seq_axis
+            ok = True
+    if not ok:
+        return x
+    sp = P(*spec)
+    if r.mesh is not None:
+        from jax.sharding import NamedSharding
+        sp = NamedSharding(r.mesh, sp)
+    return jax.lax.with_sharding_constraint(x, sp)
+
+
+def constrain_vocab(x: jax.Array) -> jax.Array:
+    """Constrain logits [B, s, V]: batch over data axes, vocab over the
+    tensor axis (vocab-parallel CE)."""
+    r = _RULES
+    if r is None or x.ndim != 3:
+        return x
+    b = r.batch_axes if (r.batch_axes and x.shape[0] % r.batch_size_div == 0) \
+        else None
+    v = r.seq_axis if (r.seq_axis and x.shape[2] % r.seq_div == 0) else None
+    if b is None and v is None:
+        return x
+    spec = P(b, None, v)
+    if r.mesh is not None:
+        from jax.sharding import NamedSharding
+        spec = NamedSharding(r.mesh, spec)
+    return jax.lax.with_sharding_constraint(x, spec)

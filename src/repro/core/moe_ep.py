@@ -1,0 +1,133 @@
+"""Expert-parallel MoE dispatch via shard_map + all_to_all.
+
+GSPMD cannot partition a scatter into an [E, cap, d] buffer that is sharded
+on both dims (it falls back to "involuntary full rematerialization" —
+measured 10-40x collective/memory inflation on the 16x16 mesh). This module
+does what a datacenter MoE does explicitly:
+
+  * tokens stay on their (data, seq) shard; routing + capacity are LOCAL;
+  * each device builds its [E, cap_loc, d] send buffer and ``all_to_all``s
+    expert slabs along the ``model`` axis (experts are sharded over
+    ``model``, paper-analogue: per-cluster expert placement);
+  * expert FFN runs on [E_loc, world*cap_loc, d]; the inverse all_to_all
+    returns outputs; the combine is local.
+
+Expert weights are [E, d, de] sharded (model, data, -): the d shards are
+all-gathered over ``data`` once per layer inside the block.
+
+Differentiable end-to-end (all_to_all/gather transposes), so it drops into
+the jit train step as a shard_map island.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import ModelConfig
+
+
+def _local_dispatch(xt, logits, e: int, k: int, cap: int):
+    """Local top-k routing + capacity assignment (argsort ranking).
+
+    xt: [t, d]; logits: [t, E]. Returns (buf [E, cap, d], slot [t*k],
+    keep [t*k], gate_vals [t, k], probs [t, E], gate_idx [t, k]).
+    """
+    t, d = xt.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
+                                        1e-9)
+    flat_e = gate_idx.reshape(t * k)
+    order = jnp.argsort(flat_e)
+    starts = jnp.searchsorted(flat_e[order], jnp.arange(e))
+    pos_sorted = jnp.arange(t * k) - starts[flat_e[order]]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype)
+    xk = jnp.repeat(xt, k, axis=0)
+    buf = buf.at[slot].set(xk, mode="drop")
+    return buf[:-1].reshape(e, cap, d), slot, keep, gate_vals, probs, gate_idx
+
+
+def moe_block_ep(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                 mesh: Mesh, seq_sharded: bool = True):
+    """Drop-in replacement for blocks.moe_block under a production mesh."""
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    de = cfg.moe.d_expert
+    ep = mesh.shape["model"]
+    assert e % ep == 0, (e, ep)
+    e_loc = e // ep
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bdiv = 1
+    for a in batch_axes:
+        bdiv *= mesh.shape[a]
+    b, s, d = x.shape
+    seq_sharded = seq_sharded and s % ep == 0
+    b_sh = batch_axes if (batch_axes and b % bdiv == 0) else None
+    t_loc = (b // (bdiv if b_sh else 1)) * (s // (ep if seq_sharded else 1))
+    cap = max(int(math.ceil(t_loc * k * cfg.moe.capacity_factor / e)),
+              min(t_loc, k))
+
+    xspec = P(b_sh, "model" if seq_sharded else None, None)
+    wspec_i = P("model", "data" if "data" in mesh.axis_names else None, None)
+    wspec_o = P("model", None, "data" if "data" in mesh.axis_names else None)
+
+    def body(router, wi, wg, wo, xl):
+        bl, sl, _ = xl.shape
+        t = bl * sl
+        xt = xl.reshape(t, d)
+        # gather the d-shards of this rank's experts (once per layer)
+        if "data" in mesh.axis_names and wi.shape[1] != d:
+            wi = lax.all_gather(wi, "data", axis=1, tiled=True)
+            wg = lax.all_gather(wg, "data", axis=1, tiled=True)
+        if "data" in mesh.axis_names and wo.shape[2] != d:
+            wo = lax.all_gather(wo, "data", axis=2, tiled=True)
+
+        logits = xt.astype(jnp.float32) @ router
+        buf, slot, keep, gate_vals, probs, gate_idx = _local_dispatch(
+            xt, logits, e, k, cap)
+
+        # exchange expert slabs along the model axis
+        send = buf.reshape(ep, e_loc, cap, d)
+        recv = lax.all_to_all(send, "model", split_axis=0, concat_axis=0,
+                              tiled=False)          # [ep, e_loc, cap, d]
+        expert_in = recv.transpose(1, 0, 2, 3).reshape(e_loc, ep * cap, d)
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, wg)) \
+            * jnp.einsum("ecd,edf->ecf", expert_in, wi)
+        out = jnp.einsum("ecf,efd->ecd", h, wo)     # [e_loc, ep*cap, d]
+
+        back = out.reshape(e_loc, ep, cap, d).transpose(1, 0, 2, 3)
+        got = lax.all_to_all(back, "model", split_axis=0, concat_axis=0,
+                             tiled=False)           # [ep, e_loc, cap, d]
+        flat = jnp.concatenate(
+            [got.reshape(e * cap, d),
+             jnp.zeros((1, d), got.dtype)], axis=0)
+        picked = flat[slot].reshape(t, k, d)
+        w = jnp.where(keep.reshape(t, k), gate_vals, 0.0).astype(picked.dtype)
+        yl = jnp.einsum("tkd,tk->td", picked, w,
+                        preferred_element_type=jnp.float32)
+        yl = yl.reshape(bl, sl, d).astype(xl.dtype)
+
+        # Switch-style load-balance + router-z aux (local means, averaged
+        # across the mesh so every rank sees the same scalar)
+        me = probs.mean(0)
+        ce = jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32).mean(0)
+        aux = e * jnp.sum(me * ce) * cfg.moe.aux_loss_weight
+        zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) \
+            * cfg.moe.router_z_weight
+        aux = lax.pmean(aux + zl, mesh.axis_names)
+        return yl, aux
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), wspec_i, wspec_i, wspec_o, xspec),
+        out_specs=(xspec, P()),
+        check_vma=False)
+    return fn(p["router"], p["wi"], p["wg"], p["wo"], x)

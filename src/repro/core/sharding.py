@@ -1,0 +1,234 @@
+"""Sharding rules for the tensor (baseline) distribution strategy.
+
+Axis conventions (see launch/mesh.py):
+  * ``data``  — FL-client / data-parallel axis (paper: vehicles under an edge);
+                also used as the FSDP axis for parameters/optimizer state.
+  * ``model`` — tensor-parallel axis (heads / d_ff / experts / vocab);
+                the FHDP *pipeline* strategy reuses this axis for stages.
+  * ``pod``   — cloud-level axis (multi-pod only). Parameters are replicated
+                across pods; gradients/params are reduced over it (the
+                paper's cloud aggregation).
+
+Every rule validates divisibility against the actual mesh before applying —
+odd vocabularies (92553, 32001, 256206) and small head counts degrade to
+replication per-dimension instead of failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+FSDP = "data"          # parameter-sharding axis (ZeRO-3 style)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, dim_size: int, axis):
+    """Return axis if dim_size divides evenly over it, else None."""
+    return axis if axis and dim_size % _axis_size(mesh, axis) == 0 else None
+
+
+def batch_axes(mesh: Mesh):
+    """The combined data-parallel axes: ('pod','data') or ('data',)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# --------------------------------------------------------------------------
+# Parameter rules, keyed by the *leaf name* (last DictKey in the tree path).
+# Each value is a spec over the TRAILING dims; leading stack dims (layers,
+# super-blocks, experts-as-leading in xlstm) are replicated unless the rule
+# consumes them.
+# --------------------------------------------------------------------------
+# (trailing_spec, ) entries use: 'T' tensor axis, 'F' fsdp axis, None repl.
+_TRAILING_RULES = {
+    # embeddings / heads
+    "table": (None, "T"),           # [V, d]  d on model (psum on unembed)
+    # attention
+    "wq": ("F", "T"),               # [d, nq*hd]
+    "wk": ("F", "T"),
+    "wv": ("F", "T"),
+    "wo": ("T", "F"),               # [nq*hd, d] (also mlp wo [f, d])
+    "bq": ("T",),
+    "bk": ("T",),
+    "bv": ("T",),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    # mlp
+    "wi": ("F", "T"),               # [d, f]
+    "wg": ("F", "T"),
+    # norms
+    "scale": (None,),
+    "ln": (None,),
+    "gn": (None,),
+    "enc_ln": (None,),
+    # recurrent cells
+    "w_in": ("F", "T"),             # [d, 2di]
+    "conv": (None, "T"),            # [K, di]
+    "w_if": ("F", None),            # [di, 2nh]
+    "b_if": (None,),
+    "w_out": ("T", "F"),            # [di, d]
+    "w_dt1": ("F", None),
+    "w_dt2": (None, "T"),
+    "b_dt": ("T",),
+    "wB": ("T", None),              # [di, N]
+    "wC": ("T", None),
+    "A_log": ("T", None),
+    "D": ("T",),
+    # slstm
+    "r": (None, None, "T"),         # [nh, dh, 4dh]
+    # generic linear
+    "w": ("F", "T"),                # head [d, V]: vocab-parallel logits
+    "b": (None,),
+    # vision / vlm extras
+    "modality_emb": (None, None),
+    "queries": (None, None),
+}
+
+# MoE expert tensors carry a leading expert dim -> expert parallelism on the
+# tensor axis (paper: per-cluster expert placement analogue).
+_MOE_RULES = {
+    "router": (None, None),
+    "wi": ("T", "F", None),         # [E, d, de]
+    "wg": ("T", "F", None),
+    "wo": ("T", None, "F"),         # [E, de, d]
+}
+
+
+def _resolve(mesh: Mesh, shape, trailing, *, fsdp: bool):
+    """Build a full PartitionSpec: replicate leading stack dims, apply the
+    trailing rule with per-dim divisibility checks."""
+    n = len(shape)
+    k = len(trailing)
+    if k > n:                       # e.g. scalar-ish leaves
+        trailing = trailing[-n:]
+        k = len(trailing)
+    spec = [None] * (n - k)
+    for dim, rule in zip(shape[n - k:], trailing):
+        ax = None
+        if rule == "T":
+            ax = _fit(mesh, dim, MODEL)
+        elif rule == "F" and fsdp:
+            ax = _fit(mesh, dim, FSDP)
+        spec.append(ax)
+    return P(*spec)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return entry.key
+    return ""
+
+
+def _in_moe(path) -> bool:
+    return any(isinstance(e, jax.tree_util.DictKey) and e.key == "moe"
+               for e in path)
+
+
+def param_specs(mesh: Mesh, params_shape, *, fsdp: bool = True):
+    """PartitionSpec pytree for a parameter (or optimizer-state) pytree.
+
+    ``params_shape``: pytree of ShapeDtypeStruct / arrays (shapes are enough).
+    ``fsdp=False`` keeps parameters replicated over the data axis (used for
+    low-latency decode where per-layer all-gathers would serialize).
+    """
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        table = _MOE_RULES if (_in_moe(path) and name in _MOE_RULES) \
+            else _TRAILING_RULES
+        trailing = table.get(name)
+        if trailing is None:
+            return P()
+        return _resolve(mesh, leaf.shape, trailing, fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# --------------------------------------------------------------------------
+# Batch / decode-state rules
+# --------------------------------------------------------------------------
+def batch_specs(mesh: Mesh, batch_shape):
+    """Shard the leading (global-batch) dim of every input over the combined
+    data axes."""
+    dp = batch_axes(mesh)
+
+    def rule(path, leaf):
+        if leaf.shape and leaf.shape[0] % _axis_size(mesh, dp) == 0:
+            return P(dp)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+# Decode-state leaves by name. KV caches: [(L,) B, nkv, S, hd] — batch on
+# data, head_dim on model (always 16-divisible across the assigned archs;
+# falls back to replication when not). SSM states shard batch + inner dim.
+_STATE_RULES = {
+    # trailing [B, nkv, S, hd]: batch over data, cache SEQUENCE over the
+    # tensor axis (KV-parallel decode: per-shard partial softmax + combine;
+    # hd-sharding forces an involuntary resharding of every cache update
+    # against the attention einsum's layout)
+    "k": ("D", None, "T", None),
+    "v": ("D", None, "T", None),
+    "pos": (None,),
+    "C": ("D", None, "T", None),       # mlstm [B, nh, dh, dh]
+    "n": ("D", None, "T"),
+    "m": ("D", None),
+    "h": ("D", "T"),                   # mamba [B, di, N] -> wait h is [B,di,N]
+    "c": ("D", None, "T"),             # slstm [B, nh, dh]
+    "conv": ("D", None, "T"),          # [B, K-1, di]
+    # enc-dec cross-attention memory (tuple under this key): [L,B,nkv,S,hd]
+    "cross_kv": ("D", None, None, "T"),
+}
+# mamba h [B, di, N]: trailing rule length 2 would hit (di, N); use explicit
+_STATE_RULES_3D = {"h": ("D", "T", None)}
+
+
+def state_specs_sharding(mesh: Mesh, state_shape):
+    dp = batch_axes(mesh)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        trailing = None
+        if name in _STATE_RULES_3D and len(leaf.shape) >= 3:
+            # disambiguate mamba h [B,di,N] vs slstm h [B,nh,dh]
+            trailing = _STATE_RULES_3D[name] if leaf.shape[-1] <= 64 \
+                else _STATE_RULES.get(name)
+        if trailing is None:
+            trailing = _STATE_RULES.get(name)
+        if trailing is None:
+            return P()
+        shape = leaf.shape
+        n, k = len(shape), len(trailing)
+        if k > n:
+            trailing = trailing[-n:]
+            k = n
+        spec = [None] * (n - k)
+        for dim, r in zip(shape[n - k:], trailing):
+            ax = None
+            if r == "T":
+                ax = _fit(mesh, dim, MODEL)
+            elif r == "D":
+                ax = _fit(mesh, dim, dp)
+            spec.append(ax)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, state_shape)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,118 @@
+"""Jittable step builders for the tensor (baseline) strategy.
+
+``make_train_step``  — loss + grad + optimizer update (train shapes)
+``make_prefill_step``— context ingestion into the decode state
+``make_serve_step``  — one-token decode against a KV cache / SSM state
+
+The FHDP (FL × pipeline) strategy lives in :mod:`repro.core.fhdp`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.configs.common import effective_window
+from repro.models import build_model
+from repro.train.optimizer import Adam
+
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                    optimizer: Optional[Adam] = None, *, remat: bool = True,
+                    grad_accum: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``grad_accum > 1`` scans over microbatches of the global batch,
+    accumulating gradients — divides activation memory by the accumulation
+    factor at the cost of re-gathering FSDP-sharded weights per microbatch.
+    """
+    model = build_model(cfg)
+    opt = optimizer or Adam()
+    window = effective_window(cfg, shape)
+
+    def loss_fn(p, b):
+        return model.loss(p, b, remat=remat, window=window)
+
+    if grad_accum <= 1:
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, dict(metrics, loss=loss)
+
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            a = grad_accum
+            return x.reshape((a, x.shape[0] // a) + x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / grad_accum,
+                acc, grads)
+            return acc, (loss, metrics)
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        grads, (losses, metrics) = jax.lax.scan(body, zeros, mbs)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = jax.tree.map(lambda x: x.mean(), metrics)
+        return params, opt_state, dict(metrics, loss=losses.mean())
+
+    return train_step
+
+
+def make_loss_fn(cfg: ModelConfig, shape: ShapeConfig, *, remat: bool = True):
+    model = build_model(cfg)
+    window = effective_window(cfg, shape)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat, window=window)
+
+    return loss_fn
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig):
+    model = build_model(cfg)
+    window = effective_window(cfg, shape)
+
+    def prefill_step(params, batch, state):
+        if cfg.family in ("ssm",):
+            return model.prefill(params, batch, state)
+        return model.prefill(params, batch, state, window=window)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, shape: ShapeConfig):
+    """serve_step(params, tokens [B,1], state, pos) -> (logits, state)."""
+    model = build_model(cfg)
+    window = effective_window(cfg, shape)
+
+    def serve_step(params, tokens, state, pos):
+        return model.decode_step(params, tokens, state, pos, window=window)
+
+    if cfg.family == "ssm":
+        def serve_step(params, tokens, state, pos):   # noqa: F811
+            return model.decode_step(params, tokens, state, pos)
+
+    return serve_step
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocation."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(params_shape, optimizer: Optional[Adam] = None):
+    opt = optimizer or Adam()
+    return jax.eval_shape(opt.init, params_shape)

@@ -1,0 +1,50 @@
+"""Non-IID data partitioning across virtual vehicles (paper §6.1: '50
+virtual vehicles with controlled non-IID characteristics based on CARLA
+town environments').
+
+``town_partition``: each vehicle is pinned to one town (hard non-IID).
+``dirichlet_partition``: vehicle i draws its town mixture from
+Dirichlet(beta) — beta -> 0 approaches hard partitioning, beta -> inf is
+IID. The paper's "non-IID level 2" maps to beta ~ 0.5 here.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.data.synthetic import DrivingDataConfig, TownWorld
+
+
+def dirichlet_mixtures(n_vehicles: int, n_towns: int, beta: float,
+                       seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.dirichlet([beta] * n_towns, size=n_vehicles)
+
+
+def vehicle_dataset(world: TownWorld, mixture: np.ndarray, n: int,
+                    seed: int = 0) -> Dict[str, np.ndarray]:
+    """Draw n samples for one vehicle from its town mixture."""
+    rng = np.random.default_rng(seed)
+    towns = rng.choice(len(mixture), size=n, p=mixture)
+    parts = []
+    for t in range(len(mixture)):
+        cnt = int((towns == t).sum())
+        if cnt:
+            parts.append((t, world.sample(t, cnt, rng)))
+    out: Dict[str, np.ndarray] = {}
+    keys = parts[0][1].keys()
+    for k in keys:
+        out[k] = np.concatenate([p[1][k] for p in parts], axis=0)
+    perm = rng.permutation(n)
+    return {k: v[perm] for k, v in out.items()}
+
+
+def fleet_datasets(cfg: DrivingDataConfig, n_vehicles: int,
+                   samples_per_vehicle: int, *, beta: float = 0.5,
+                   seed: int = 0) -> List[Dict[str, np.ndarray]]:
+    world = TownWorld(cfg)
+    mix = dirichlet_mixtures(n_vehicles, cfg.n_towns, beta, seed)
+    return [vehicle_dataset(world, mix[i], samples_per_vehicle,
+                            seed=seed + 1 + i)
+            for i in range(n_vehicles)]

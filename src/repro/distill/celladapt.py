@@ -1,0 +1,135 @@
+"""CELLAdapt — Cloud-Edge LLM Adaptation (paper §3.3 / §5.2).
+
+The AD-LLM is a decoder LM that consumes vision-encoder features (prefix
+embeddings) plus context tokens (navigation/notice instructions) and
+regresses future waypoints from its final hidden states.
+
+Pipeline (paper Fig. 1):
+  1. cloud: distill the general LLM into the AD-LLM on public AD data;
+  2. edge: distill AD-LLM (teacher, LLaMA-7B in the paper) into the compact
+     ADM (student, LLaMA-3B) with an L1 loss on waypoint outputs;
+  3. edge: LoRA-fine-tune on the region's vehicle features (personalize).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distill.lora import LoRAConfig, init_lora, make_lora_loss, merge_lora
+from repro.models import blocks as B
+from repro.models import lm
+from repro.train.optimizer import Adam
+
+
+def adllm_config(base: ModelConfig, *, feature_dim: int = 256,
+                 feature_tokens: int = 64, num_waypoints: int = 10
+                 ) -> ModelConfig:
+    return base.replace(prefix_tokens=feature_tokens,
+                        prefix_dim=feature_dim,
+                        num_waypoints=num_waypoints)
+
+
+def init_adllm(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    params = lm.init(k1, cfg)
+    params["wp_head"] = B.init_linear(k2, cfg.d_model,
+                                      cfg.num_waypoints * 2, cfg.dtype,
+                                      bias=True)
+    return params
+
+
+def adllm_waypoints(params, cfg: ModelConfig, features, tokens,
+                    window=None) -> jnp.ndarray:
+    """features: [B, P, F] vision-encoder output; tokens: [B, S] context.
+    Returns waypoints [B, W, 2] regressed from the last hidden state."""
+    x, _, _ = lm.forward(params, cfg, tokens, prefix_embeds=features,
+                         window=window, hidden_only=True)
+    h = x[:, -1]
+    wp = B.linear(params["wp_head"], h).astype(jnp.float32)
+    return wp.reshape(h.shape[0], cfg.num_waypoints, 2)
+
+
+def waypoint_l1(pred, target) -> jnp.ndarray:
+    return jnp.abs(pred - target).mean()
+
+
+# --------------------------------------------------------------------------
+# Step 2: edge knowledge distillation (teacher AD-LLM -> student ADM)
+# --------------------------------------------------------------------------
+def make_distill_step(tcfg: ModelConfig, scfg: ModelConfig, *,
+                      lr: float = 1e-3):
+    """L1 alignment of student waypoints to teacher waypoints (paper: 'the
+    L1-norm loss is adopted to align the outputs (i.e., waypoints) of the
+    teacher and student models')."""
+    opt = Adam(lr=lr)
+
+    def loss_fn(sp, tp, batch):
+        t_wp = jax.lax.stop_gradient(
+            adllm_waypoints(tp, tcfg, batch["features"], batch["tokens"]))
+        s_wp = adllm_waypoints(sp, scfg, batch["features"], batch["tokens"])
+        return waypoint_l1(s_wp, t_wp)
+
+    @jax.jit
+    def step(sp, opt_state, tp, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(sp, tp, batch)
+        sp, opt_state = opt.update(grads, opt_state, sp)
+        return sp, opt_state, loss
+
+    return step, opt
+
+
+# --------------------------------------------------------------------------
+# Step 3: edge LoRA fine-tuning on regional features
+# --------------------------------------------------------------------------
+def make_finetune_step(cfg: ModelConfig, params, *,
+                       lora_cfg: Optional[LoRAConfig] = None,
+                       lr: float = 1e-3):
+    """LoRA fine-tune of the AD-LLM against ground-truth waypoints from the
+    region's vehicles. Only the factors train (0.1–1% of params, §2.5)."""
+    lora_cfg = lora_cfg or LoRAConfig()
+    key = jax.random.PRNGKey(0)
+    lora = init_lora(key, params, lora_cfg)
+    opt = Adam(lr=lr)
+
+    def loss_fn(lora, batch):
+        merged = merge_lora(params, lora, lora_cfg)
+        wp = adllm_waypoints(merged, cfg, batch["features"], batch["tokens"])
+        return waypoint_l1(wp, batch["waypoints"])
+
+    @jax.jit
+    def step(lora, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(lora, batch)
+        lora, opt_state = opt.update(grads, opt_state, lora)
+        return lora, opt_state, loss
+
+    return step, lora, opt
+
+
+# --------------------------------------------------------------------------
+# Step 1: cloud distillation of a general LLM into the AD-LLM
+# --------------------------------------------------------------------------
+def make_cloud_distill_step(gcfg: ModelConfig, acfg: ModelConfig, *,
+                            lr: float = 1e-3, temp: float = 2.0):
+    """Token-level KD (KL on soft logits) from the general LLM to the
+    AD-LLM on public AD corpora — the cloud-side abstraction step."""
+    opt = Adam(lr=lr)
+
+    def loss_fn(ap, gp, batch):
+        g_logits, _, _ = lm.forward(gp, gcfg, batch["tokens"])
+        a_logits, _, _ = lm.forward(ap, acfg, batch["tokens"])
+        gt = jax.nn.log_softmax(
+            jax.lax.stop_gradient(g_logits) / temp, axis=-1)
+        at = jax.nn.log_softmax(a_logits / temp, axis=-1)
+        return (jnp.exp(gt) * (gt - at)).sum(-1).mean() * temp * temp
+
+    @jax.jit
+    def step(ap, opt_state, gp, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(ap, gp, batch)
+        ap, opt_state = opt.update(grads, opt_state, ap)
+        return ap, opt_state, loss
+
+    return step, opt

@@ -1,0 +1,85 @@
+"""LoRA adapters over parameter pytrees (paper §2.5/§5.2: PEFT makes
+on-vehicle/edge personalization feasible under memory constraints).
+
+``init_lora`` creates {path: (A, B)} factors for every 2-D weight whose
+leaf name matches ``targets``; ``merge_lora`` returns params with
+w + scale * A @ B folded in (for inference/serving); ``apply_lora`` keeps
+the factors separate so only (A, B) receive gradients during fine-tuning.
+The fused base+low-rank matmul lives in kernels/lora_matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TARGETS = ("wq", "wk", "wv", "wo")
+
+
+def _leaf_name(path) -> str:
+    for e in reversed(path):
+        if isinstance(e, jax.tree_util.DictKey):
+            return e.key
+    return ""
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 8
+    alpha: float = 16.0
+    targets: Tuple[str, ...] = DEFAULT_TARGETS
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+
+def init_lora(key, params, cfg: LoRAConfig):
+    """Factor pytree with the same structure as ``params``; non-target
+    leaves hold None."""
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(i, path, leaf):
+        if _leaf_name(path) in cfg.targets and leaf.ndim >= 2:
+            din, dout = leaf.shape[-2], leaf.shape[-1]
+            lead = leaf.shape[:-2]
+            a = jax.random.normal(keys[i], lead + (din, cfg.rank)) \
+                * din ** -0.5
+            b = jnp.zeros(lead + (cfg.rank, dout))
+            return {"A": a.astype(jnp.float32), "B": b}
+        return None
+
+    out = []
+    for i, (path, leaf) in enumerate(leaves):
+        out.append(make(i, path, leaf))
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def merge_lora(params, lora, cfg: LoRAConfig):
+    """w + scale * A @ B for every adapted leaf (batched over leading
+    stack dims)."""
+    def merge(p, f):
+        if f is None:
+            return p
+        delta = jnp.einsum("...ir,...ro->...io", f["A"], f["B"]) * cfg.scale
+        return (p.astype(jnp.float32) + delta).astype(p.dtype)
+
+    return jax.tree.map(merge, params, lora,
+                        is_leaf=lambda x: x is None
+                        or (isinstance(x, dict) and "A" in x))
+
+
+def lora_param_count(lora) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora))
+
+
+def make_lora_loss(loss_fn: Callable, params, cfg: LoRAConfig):
+    """loss over the factors only: lora_loss(lora, batch)."""
+    def lora_loss(lora, batch):
+        return loss_fn(merge_lora(params, lora, cfg), batch)
+
+    return lora_loss

@@ -1,0 +1,110 @@
+"""Blocked online-softmax attention (flash attention) as a Pallas TPU
+kernel.
+
+TPU adaptation notes (vs the CUDA original): tiles live in VMEM sized for
+the MXU (block dims multiples of 128 where the dtype allows); the running
+(m, l, acc) statistics persist in VMEM scratch across the innermost
+(sequential) KV-block grid dimension, while (batch, head, q-block) are
+parallel grid dims. GQA is handled in the index map (q head h reads kv
+head h // group). Causal and sliding-window masks are applied from
+absolute positions, so the same kernel serves train, prefill and the
+windowed long_500k path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            bq: int, bk: int, q_offset: int):
+    kv_i = pl.program_id(3)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)        # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)        # [bk, d]
+    v = v_ref[0, 0]                            # [bk, d]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qp = q_offset + pl.program_id(2) * bq \
+        + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kp = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p.astype(jnp.float32), v.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == pl.num_programs(3) - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...][:, None], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, scale: Optional[float] = None,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D]. Returns [B, Hq, Sq, D]."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    grid = (b, hq, sq // bq, skv // bk)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk,
+                               q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

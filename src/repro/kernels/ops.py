@@ -1,0 +1,77 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel
+body executes in Python for correctness validation; on TPU backends they
+compile to Mosaic. ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lora_matmul as _lm
+from repro.kernels import mlstm as _ml
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "q_offset", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, scale=None, causal=True, window=None,
+                    q_offset=0, block_q=128, block_k=128, interpret=None):
+    return _fa.flash_attention(q, k, v, scale=scale, causal=causal,
+                               window=window, q_offset=q_offset,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_auto_interpret(interpret))
+
+
+# Differentiable wrapper: pallas_call has no autodiff rule, so the VJP
+# recomputes the oracle's linearization (flash-attention backward is a
+# recompute anyway; on TPU this would be the backward kernel).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_ad(q, k, v, scale, causal, window, q_offset):
+    return _fa.flash_attention(q, k, v, scale=scale, causal=causal,
+                               window=window, q_offset=q_offset,
+                               interpret=_auto_interpret(None))
+
+
+def _fa_fwd(q, k, v, scale, causal, window, q_offset):
+    out = flash_attention_ad(q, k, v, scale, causal, window, q_offset)
+    return out, (q, k, v)
+
+
+def _fa_bwd(scale, causal, window, q_offset, res, g):
+    from repro.kernels import ref
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.flash_attention_ref(
+            q_, k_, v_, scale=scale, causal=causal, window=window,
+            q_offset=q_offset), q, k, v)
+    return vjp(g)
+
+
+flash_attention_ad.defvjp(_fa_fwd, _fa_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunked(q, k, v, ig, lf, *, chunk=64, interpret=None):
+    return _ml.mlstm_chunked(q, k, v, ig, lf, chunk=chunk,
+                             interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def lora_matmul(x, w, a, b, *, scale=1.0, block_m=256, block_n=256,
+                block_k=512, interpret=None):
+    return _lm.lora_matmul(x, w, a, b, scale=scale, block_m=block_m,
+                           block_n=block_n, block_k=block_k,
+                           interpret=_auto_interpret(interpret))

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+swept by tests/test_kernels.py)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, scale: Optional[float] = None,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        q_offset: int = 0):
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D] (GQA when Hq > Hkv).
+    Positions are absolute: q row i has position q_offset + i."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    qp = jnp.arange(sq) + q_offset
+    kp = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        mask &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def mlstm_chunked_ref(q, k, v, ig, lf, *, chunk: int = 64, C0=None, n0=None,
+                      m0=None):
+    """Stabilized mLSTM over the sequence, step-by-step (the exact
+    recurrence the chunked kernel reproduces).
+
+    q/k/v: [B, NH, S, DH] (k pre-scaled); ig/lf: [B, NH, S].
+    Returns (h [B, NH, S, DH], (C, n, m) final states).
+    """
+    b, nh, s, dh = q.shape
+    C = jnp.zeros((b, nh, dh, dh), jnp.float32) if C0 is None else C0
+    n = jnp.zeros((b, nh, dh), jnp.float32) if n0 is None else n0
+    m = jnp.full((b, nh), -1e30, jnp.float32) if m0 is None else m0
+
+    def step(carry, t):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, lf_t = t
+        m_new = jnp.maximum(lf_t + m, i_t)
+        fs = jnp.exp(lf_t + m - m_new)[..., None]
+        is_ = jnp.exp(i_t - m_new)[..., None]
+        C = fs[..., None] * C + is_[..., None] * (v_t[..., :, None]
+                                                  * k_t[..., None, :])
+        n = fs * n + is_ * k_t
+        num = jnp.einsum("bhij,bhj->bhi", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q_t)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    ts = (q.transpose(2, 0, 1, 3).astype(jnp.float32),
+          k.transpose(2, 0, 1, 3).astype(jnp.float32),
+          v.transpose(2, 0, 1, 3).astype(jnp.float32),
+          ig.transpose(2, 0, 1).astype(jnp.float32),
+          lf.transpose(2, 0, 1).astype(jnp.float32))
+    (C, n, m), hs = jax.lax.scan(step, (C, n, m), ts)
+    return hs.transpose(1, 2, 0, 3).astype(q.dtype), (C, n, m)
+
+
+def lora_matmul_ref(x, w, a, b, *, scale: float = 1.0):
+    """y = x @ w + scale * (x @ a) @ b.
+
+    x: [M, K]; w: [K, N]; a: [K, r]; b: [r, N]."""
+    base = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    low = (x.astype(jnp.float32) @ a.astype(jnp.float32)) \
+        @ b.astype(jnp.float32)
+    return (base + scale * low).astype(x.dtype)

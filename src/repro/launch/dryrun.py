@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh).
+
+The two lines above run before any other import — jax locks the device count
+on first backend init, and the production meshes need 512 host placeholders.
+Do NOT set this flag globally; tests and benches see one device.
+
+Per pair this records: compile success, ``memory_analysis`` (fits/overflow),
+``cost_analysis`` FLOPs/bytes (per-device, post-SPMD), the collective
+schedule parsed from compiled HLO, and the three roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import INPUT_SHAPES, TPU_V5E, ModelConfig, ShapeConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.common import cache_len, input_specs, state_specs
+from repro.core import act_sharding, sharding as shd
+from repro.core.steps import (abstract_opt_state, abstract_params,
+                              make_prefill_step, make_serve_step,
+                              make_train_step)
+from repro.launch import hlo_parse, hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.train.optimizer import Adam
+
+ASSIGNED = [a for a in ARCH_IDS if not a.startswith("flad_")]
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# per-arch overrides found by the §Perf hillclimb (EXPERIMENTS.md):
+# qwen2.5-32b fits at accum=1 (13.8 GiB), halving FSDP re-gathers
+# (collective term 24.7s -> 14.3s); yi-34b / qwen3-32b do not (16.1-18.6).
+HILLCLIMBED_ACCUM = {"qwen2.5-32b": 1}
+
+
+def default_grad_accum(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Smallest microbatching for which train activations fit 16 GiB HBM
+    (each accumulation step re-gathers FSDP weights, so less is more)."""
+    if shape.kind != "train":
+        return 1
+    if cfg.name in HILLCLIMBED_ACCUM:
+        return HILLCLIMBED_ACCUM[cfg.name]
+    if cfg.moe.num_experts and cfg.d_model >= 6144:
+        return 4                       # dbrx-class
+    if cfg.param_count() > 20e9 or cfg.prefix_tokens \
+            or cfg.family == "encdec" or cfg.moe.num_experts:
+        return 2
+    return 1
+
+
+def build_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                  strategy: str = "tensor", seq_shard: bool = True,
+                  fsdp: bool = True, remat: bool = True,
+                  grad_accum: Optional[int] = None):
+    """Lower the (train|prefill|serve) step for this shape on this mesh."""
+    if strategy == "pipeline":
+        from repro.core.fhdp import build_pipeline_lowered
+        return build_pipeline_lowered(cfg, shape, mesh, remat=remat)
+
+    params_abs = abstract_params(cfg)
+    pspecs = shd.param_specs(mesh, params_abs, fsdp=fsdp)
+    psh = _named(mesh, pspecs)
+    batch_abs = input_specs(cfg, shape)
+    bsh = _named(mesh, shd.batch_specs(mesh, batch_abs))
+
+    rules = act_sharding.rules_for(mesh, shape.kind) if seq_shard else {}
+    ctx = act_sharding.act_rules(**rules) if rules else _null_ctx()
+
+    if shape.kind == "train":
+        opt = Adam()
+        opt_abs = abstract_opt_state(params_abs, opt)
+        osh = _named(mesh, shd.param_specs(mesh, opt_abs, fsdp=fsdp))
+        if grad_accum is None:
+            grad_accum = default_grad_accum(cfg, shape)
+        step = make_train_step(cfg, shape, opt, remat=remat,
+                               grad_accum=grad_accum)
+        with ctx:
+            return jax.jit(step, in_shardings=(psh, osh, bsh),
+                           out_shardings=(psh, osh, None),
+                           donate_argnums=(0, 1)) \
+                .lower(params_abs, opt_abs, batch_abs)
+
+    st_abs = state_specs(cfg, shape)
+    ssh = _named(mesh, shd.state_specs_sharding(mesh, st_abs))
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, shape)
+        with ctx:
+            return jax.jit(step, in_shardings=(psh, bsh, ssh),
+                           out_shardings=(None, ssh),
+                           donate_argnums=(2,)) \
+                .lower(params_abs, batch_abs, st_abs)
+
+    # decode: one new token against the cache/state
+    step = make_serve_step(cfg, shape)
+    tok_abs = input_specs(cfg, shape)["tokens"]
+    tsh = _named(mesh, shd.batch_specs(mesh, {"t": tok_abs})["t"])
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    with ctx:
+        return jax.jit(step,
+                       in_shardings=(psh, tsh, ssh,
+                                     NamedSharding(mesh, P())),
+                       out_shardings=(None, ssh),
+                       donate_argnums=(2,)) \
+            .lower(params_abs, tok_abs, st_abs, pos_abs)
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def analyze(compiled, mesh, hw=TPU_V5E) -> dict:
+    """Roofline inputs from the compiled per-device module.
+
+    Primary source: the trip-count-aware HLO walk (hlo_parse) — XLA's own
+    ``cost_analysis`` counts while bodies once, undercounting every scanned
+    layer stack. The raw XLA numbers are kept alongside for reference.
+    """
+    out = {}
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        out["xla_flops"] = float(cost.get("flops", 0.0))
+        out["xla_bytes"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        out["cost_error"] = repr(e)
+    try:
+        mem = compiled.memory_analysis()
+        out["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)}
+        out["peak_bytes"] = (out["memory"].get("argument_size_in_bytes", 0)
+                             + out["memory"].get("output_size_in_bytes", 0)
+                             + out["memory"].get("temp_size_in_bytes", 0)
+                             - out["memory"].get("alias_size_in_bytes", 0))
+        out["fits_hbm"] = out["peak_bytes"] <= hw.hbm_bytes
+    except Exception as e:  # pragma: no cover
+        out["memory_error"] = repr(e)
+    try:
+        txt = compiled.as_text()
+        cost = hlo_parse.module_cost(txt)
+        out["flops"] = cost.flops
+        out["hbm_bytes"] = cost.bytes
+        out["collectives"] = {k: v for k, v in cost.collectives.items()
+                              if v["count"]}
+        out["collective_bytes"] = hlo_parse.collective_bytes_total(cost)
+        out["top_ops"] = dict(cost.op_counts.most_common(12))
+    except Exception as e:  # pragma: no cover
+        out["hlo_error"] = repr(e)
+        out["flops"] = out.get("xla_flops", 0.0)
+        out["hbm_bytes"] = out.get("xla_bytes", 0.0)
+        out["collective_bytes"] = 0
+    out["roofline"] = hlo_stats.roofline_terms(
+        flops=out.get("flops", 0.0), hbm_bytes=out.get("hbm_bytes", 0.0),
+        coll_bytes=out.get("collective_bytes", 0), hw=hw)
+    out["dominant"] = hlo_stats.dominant(out["roofline"])
+    return out
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             strategy: str = "tensor", seq_shard: bool = True,
+             fsdp: bool = True, remat: bool = True, verbose: bool = True,
+             grad_accum: Optional[int] = None,
+             keep_compiled: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    dbg = os.environ.get("DRYRUN_MESH")  # e.g. "4,4" or "2,2,4" for debugging
+    if dbg:
+        from repro.launch.mesh import _mk
+        dims = tuple(int(x) for x in dbg.split(","))
+        mesh = _mk(dims, ("pod", "data", "model")[-len(dims):])
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name, "strategy": strategy,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "multi_pod": multi_pod, "seq_shard": seq_shard, "fsdp": fsdp}
+    t0 = time.time()
+    try:
+        lowered = build_lowered(cfg, shape, mesh, strategy=strategy,
+                                seq_shard=seq_shard, fsdp=fsdp, remat=remat,
+                                grad_accum=grad_accum)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        rec.update(analyze(compiled, mesh))
+        n = cfg.param_count()
+        rec["params"] = n
+        rec["active_params"] = cfg.active_param_count()
+        # useful-model-FLOPs ratio (per device, fwd+bwd for train)
+        tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+        mult = 6 if shape.kind == "train" else 2
+        model_flops = mult * cfg.active_param_count() * tokens
+        per_dev = model_flops / mesh.devices.size
+        rec["model_flops_per_dev"] = per_dev
+        rec["useful_ratio"] = (per_dev / rec["flops"]) if rec.get("flops") \
+            else None
+        rec["ok"] = True
+        if keep_compiled:
+            rec["_compiled"] = compiled
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    if verbose:
+        status = "OK " if rec["ok"] else "FAIL"
+        extra = ""
+        if rec["ok"]:
+            r = rec["roofline"]
+            extra = (f" lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                     f"compute={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s "
+                     f"coll={r['collective_s']:.4f}s dom={rec['dominant']}")
+        else:
+            extra = " " + rec["error"][:200]
+        print(f"[dryrun] {status} {arch:22s} {shape_name:12s} "
+              f"{rec['mesh']:8s}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--strategy", default="tensor",
+                    choices=["tensor", "pipeline"])
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch.replace("-", "_").replace(".", "_")]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                records.append(run_pair(
+                    arch, shape, multi_pod=mp, strategy=args.strategy,
+                    seq_shard=not args.no_seq_shard, fsdp=not args.no_fsdp))
+    n_ok = sum(r["ok"] for r in records)
+    print(f"[dryrun] {n_ok}/{len(records)} pairs lowered+compiled")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1, default=str)
+        print(f"[dryrun] wrote {args.out}")
+    if n_ok != len(records):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

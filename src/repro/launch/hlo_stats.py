@@ -1,0 +1,86 @@
+"""Parse compiled HLO for roofline inputs.
+
+``collective_bytes(hlo_text)`` sums the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute in
+the (post-SPMD, per-device) module — ``cost_analysis`` does not report
+collective traffic, so this is the collective roofline term's numerator.
+
+``count_ops`` tallies op kinds (used to spot remat-duplicated compute and
+layout-change churn during perf iterations).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import Counter
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = TYPE op-name(` — TYPE may be a tuple `(bf16[..], ...)`.
+_LINE_RE = re.compile(
+    r"=\s+(?P<type>\([^)]*\)|\S+)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?P<suffix>-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Per-collective-kind {count, bytes} from per-device HLO text."""
+    out: Dict[str, dict] = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for m in _LINE_RE.finditer(hlo_text):
+        if m.group("suffix") == "-start":
+            continue  # avoid double counting async pairs (tuple holds both)
+        op = m.group("op")
+        out[op]["count"] += 1
+        out[op]["bytes"] += _type_bytes(m.group("type"))
+    return out
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+_OP_RE = re.compile(r"=\s+(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9-]*)\(")
+
+
+def count_ops(hlo_text: str) -> Counter:
+    return Counter(m.group(1) for m in _OP_RE.finditer(hlo_text))
+
+
+def fusion_flops_fallback(cost: dict) -> float:
+    return float(cost.get("flops", 0.0))
+
+
+def roofline_terms(*, flops: float, hbm_bytes: float, coll_bytes: float,
+                   hw) -> dict:
+    """Three per-chip roofline terms in seconds (inputs are per-device)."""
+    return {
+        "compute_s": flops / hw.peak_flops,
+        "memory_s": hbm_bytes / hw.hbm_bw,
+        "collective_s": coll_bytes / hw.ici_bw,
+    }
+
+
+def dominant(terms: dict) -> str:
+    return max(terms, key=lambda k: terms[k]).replace("_s", "")

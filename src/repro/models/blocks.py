@@ -1,0 +1,386 @@
+"""Core transformer building blocks (pure-function JAX, dict pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; every ``init_*`` returns one.
+  * activations flow as [batch, seq, d_model]; attention internals use
+    [batch, heads, seq, head_dim].
+  * all softmax/statistics in float32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+NEG_INF = -1e30
+
+# optional Pallas kernel backend for self-attention (TPU fast path; on CPU
+# the kernels run in interpret mode, so this is off by default here)
+_KERNEL_BACKEND = False
+
+
+def set_kernel_backend(on: bool) -> None:
+    global _KERNEL_BACKEND
+    _KERNEL_BACKEND = on
+
+
+def kernel_backend() -> bool:
+    return _KERNEL_BACKEND
+
+
+# ---------------------------------------------------------------- norms ----
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rms_norm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [B, H, S, D]; positions: [B, S] or [S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,S,half]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    dt = cfg.dtype
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, nq * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, nkv * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, nkv * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (nq * hd, d)) * (nq * hd) ** -0.5).astype(dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((nq * hd,), dt)
+        p["bk"] = jnp.zeros((nkv * hd,), dt)
+        p["bv"] = jnp.zeros((nkv * hd,), dt)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)  # [B,N,S,D]
+
+
+def _head_rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def dense_mha(q, k, v, *, scale, q_pos, kv_pos, causal, window):
+    """Reference attention. q:[B,Nq,Sq,D] k,v:[B,Nkv,Skv,D]."""
+    b, nq, sq, d = q.shape
+    nkv = k.shape[1]
+    g = nq // nkv
+    qg = q.reshape(b, nkv, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = kv_pos[None, :] >= 0
+    if causal:
+        mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return o.reshape(b, nq, sq, d)
+
+
+def chunked_mha(q, k, v, *, scale, q_pos, kv_pos, causal, window,
+                q_chunk=512, kv_chunk=1024):
+    """Memory-efficient online-softmax attention (never materializes Sq x Skv).
+
+    Single ``lax.scan`` over KV chunks; all Q rows are processed each
+    iteration. This shape is deliberate for GSPMD: Q keeps its (sequence-
+    over-``model``) sharding through the whole scan and K/V are gathered
+    once per layer — a per-(q-chunk x kv-chunk) inner loop forces XLA to
+    reshard Q and regather K/V on *every* iteration (measured 30x collective
+    blow-up on the 16x16 mesh; see EXPERIMENTS.md §Perf).
+    """
+    b, nq, sq, d = q.shape
+    nkv, skv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    kc = min(kv_chunk, skv)
+    while skv % kc:
+        kc -= 1
+    nkc = skv // kc
+
+    from repro.core.act_sharding import constrain
+    qg = constrain(q.reshape(b, nkv, g, sq, d), seq_dim=3)
+    kb = k.reshape(b, nkv, nkc, kc, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, nkv, nkc, kc, d).transpose(2, 0, 1, 3, 4)
+    kp = kv_pos.reshape(nkc, kc)
+
+    m0 = constrain(jnp.full((b, nkv, g, sq), NEG_INF, jnp.float32), seq_dim=3)
+    l0 = constrain(jnp.zeros((b, nkv, g, sq), jnp.float32), seq_dim=3)
+    a0 = constrain(jnp.zeros((b, nkv, g, sq, d), jnp.float32), seq_dim=3)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, inp):
+        # rematted: the backward pass recomputes the [*, Sq, kc] scores of
+        # one chunk at a time instead of storing them for every chunk
+        m, l, acc = carry
+        k_blk, v_blk, kpos = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kpos[None, :] >= 0
+        if causal:
+            mask = mask & (kpos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (kpos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, kp))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, nq, sq, d).astype(q.dtype)
+
+
+def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+              positions: jnp.ndarray,
+              cache: Optional[dict] = None,
+              causal: bool = True,
+              window: Optional[int] = None,
+              cross_kv: Optional[tuple] = None,
+              cross_pos: Optional[jnp.ndarray] = None,
+              use_chunked: Optional[bool] = None):
+    """Unified attention: self (train/prefill/decode w/ cache) or cross.
+
+    Returns (output, new_cache).
+    """
+    b, s, _ = x.shape
+    nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = _split_heads(q, nq, hd)
+    if "q_norm" in p:
+        q = _head_rmsnorm(q, p["q_norm"], cfg.norm_eps)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        kv_pos = cross_pos
+        new_cache = cache
+        q = q  # no rope on cross-attention queries (enc-dec convention)
+    else:
+        k = x @ p["wk"]
+        vv = x @ p["wv"]
+        if "bk" in p:
+            k, vv = k + p["bk"], vv + p["bv"]
+        k = _split_heads(k, nkv, hd)
+        v = _split_heads(vv, nkv, hd)
+        if "k_norm" in p:
+            k = _head_rmsnorm(k, p["k_norm"], cfg.norm_eps)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if cache is not None:
+            k, v, kv_pos, new_cache = update_kv_cache(cache, k, v, positions)
+        else:
+            kv_pos = positions if positions.ndim == 1 else positions[0]
+            new_cache = None
+
+    scale = hd ** -0.5
+    q_pos1 = positions if positions.ndim == 1 else positions[0]
+    # Pallas fast path (TPU; interpret-mode on CPU): contiguous self-
+    # attention without a ring cache maps 1:1 onto the flash kernel.
+    if (kernel_backend() and cross_kv is None and cache is None
+            and s % 128 == 0 and k.shape[2] % 128 == 0 and hd % 8 == 0):
+        from repro.kernels import ops as kops
+        o = kops.flash_attention_ad(q, k, v, scale, causal, window,
+                                    int(k.shape[2] - s))
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, nq * hd)
+        return (o @ p["wo"]).astype(x.dtype), new_cache
+    if use_chunked is None:
+        use_chunked = (s > 1024) and cross_kv is None
+    if use_chunked:
+        o = chunked_mha(q, k, v, scale=scale, q_pos=q_pos1, kv_pos=kv_pos,
+                        causal=causal, window=window,
+                        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    else:
+        o = dense_mha(q, k, v, scale=scale, q_pos=q_pos1, kv_pos=kv_pos,
+                      causal=causal, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, nq * hd)
+    return (o @ p["wo"]).astype(x.dtype), new_cache
+
+
+# ------------------------------------------------------------- kv cache ----
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                  stacked: int = 0) -> dict:
+    """cache_len is the ring size (== window for sliding-window attention)."""
+    shape = (batch, cfg.num_kv_heads, cache_len, cfg.hd)
+    if stacked:
+        shape = (stacked,) + shape
+    pos_shape = (stacked, cache_len) if stacked else (cache_len,)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "pos": jnp.full(pos_shape, -1, jnp.int32),
+    }
+
+
+def update_kv_cache(cache: dict, k_new, v_new, positions):
+    """Write new K/V at ring positions; return full cache views + new cache.
+
+    k_new: [B, Nkv, S_new, D]; positions: [S_new] or [B, S_new] (shared ring
+    index — batch-uniform positions assumed).
+    """
+    ring = cache["k"].shape[2]
+    pos1 = positions if positions.ndim == 1 else positions[0]
+    idx = pos1 % ring
+    k = cache["k"].at[:, :, idx, :].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[:, :, idx, :].set(v_new.astype(cache["v"].dtype))
+    pos = cache["pos"].at[idx].set(pos1)
+    new_cache = {"k": k, "v": v, "pos": pos}
+    return k, v, pos, new_cache
+
+
+# ----------------------------------------------------------------- ffn -----
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.dtype
+    return {
+        "wi": (jax.random.normal(ks[0], (d, f)) * d ** -0.5).astype(dt),
+        "wg": (jax.random.normal(ks[1], (d, f)) * d ** -0.5).astype(dt),
+        "wo": (jax.random.normal(ks[2], (f, d)) * f ** -0.5).astype(dt),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+
+
+# ----------------------------------------------------------------- moe -----
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, e, de = cfg.d_model, cfg.moe.num_experts, cfg.moe.d_expert
+    ks = jax.random.split(key, 4)
+    dt = cfg.dtype
+    return {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "wi": (jax.random.normal(ks[1], (e, d, de)) * d ** -0.5).astype(dt),
+        "wg": (jax.random.normal(ks[2], (e, d, de)) * d ** -0.5).astype(dt),
+        "wo": (jax.random.normal(ks[3], (e, de, d)) * de ** -0.5).astype(dt),
+    }
+
+
+def moe_block(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """Top-k MoE with capacity-based scatter/gather dispatch.
+
+    Never materializes a [T, E, cap] dispatch tensor (the one-hot einsum
+    formulation is O(T*E*cap) memory — infeasible at 1M-token global
+    batches). Tokens over capacity are dropped (contribute zero), standard
+    GShard semantics. Returns (out, aux_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = xt.astype(jnp.float32) @ p["router"]          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)          # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(t * k * cfg.moe.capacity_factor / e))
+    # position of each (token, choice) within its expert queue via argsort
+    # ranking — the one-hot-cumsum formulation materializes a [T*k, E]
+    # integer tensor (hundreds of GB at 1M-token batches)
+    flat_e = gate_idx.reshape(t * k)                        # [T*k]
+    order = jnp.argsort(flat_e)                             # stable
+    starts = jnp.searchsorted(flat_e[order], jnp.arange(e))  # [E]
+    pos_sorted = jnp.arange(t * k) - starts[flat_e[order]]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)     # overflow -> pad
+
+    # dispatch: scatter token activations into [E*cap(+pad), d]
+    from repro.core.act_sharding import constrain_map
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    xk = jnp.repeat(xt, k, axis=0)                          # [T*k, d]
+    buf = buf.at[slot].set(xk, mode="drop")
+    # expert-parallel: expert dim over the tensor axis (all-to-all
+    # dispatch), capacity slots over the data axis — leaving cap unsharded
+    # replicates every expert's work across the data axis (measured 16x
+    # FLOP inflation on the 16x16 mesh; EXPERIMENTS.md §Perf).
+    expert_in = constrain_map(buf[:-1].reshape(e, cap, d),
+                              {0: "seq", 1: "batch"})
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", expert_in, p["wi"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["wo"])     # [E, cap, d]
+    expert_out = constrain_map(expert_out, {0: "seq", 1: "batch"})
+
+    # combine: gather each (token, choice)'s expert output, weight, sum over k
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(e * cap, d),
+         jnp.zeros((1, d), expert_out.dtype)], axis=0)
+    got = flat_out[slot].reshape(t, k, d)                   # [T, k, d]
+    w = jnp.where(keep.reshape(t, k), gate_vals, 0.0).astype(got.dtype)
+    out = jnp.einsum("tkd,tk->td", got, w,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # load-balance aux loss (Switch): E * sum(frac_tokens * frac_probs)
+    me = probs.mean(0)                                      # [E]
+    ce = jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32).mean(0)
+    aux = e * jnp.sum(me * ce) * cfg.moe.aux_loss_weight
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) \
+        * cfg.moe.router_z_weight
+    return out.reshape(b, s, d), aux + zloss
+
+
+# ------------------------------------------------------------ embedding ----
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * d ** -0.5).astype(dtype)}
+
+
+def embed(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["table"][tokens]
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bsd,vd->bsv", x, p["table"],
+                      preferred_element_type=jnp.float32)
+
+
+def init_linear(key, din: int, dout: int, dtype, bias: bool = False) -> dict:
+    p = {"w": (jax.random.normal(key, (din, dout)) * din ** -0.5).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    return y + p["b"] if "b" in p else y

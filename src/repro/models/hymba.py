@@ -1,0 +1,91 @@
+"""Hymba-style hybrid blocks: parallel attention heads + Mamba heads fused by
+mean of per-path norms (arXiv:2411.13676), followed by a SwiGLU FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import blocks as B
+from repro.models import recurrent as R
+
+
+def init_block(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": B.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "attn": B.init_attention(k1, cfg),
+        "mamba": R.init_mamba(k2, cfg),
+        "attn_norm": B.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "ssm_norm": B.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "ln2": B.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "ffn": B.init_mlp(k3, cfg),
+    }
+
+
+def apply_block(p, x, cfg: ModelConfig, *, positions, kv_cache=None,
+                ssm_state=None, window=None, step=False):
+    h = B.rms_norm(p["ln1"], x, cfg.norm_eps)
+    a, new_kv = B.attention(p["attn"], h, cfg, positions=positions,
+                            cache=kv_cache, window=window)
+    if step:
+        s, new_ssm = R.apply_mamba_step(p["mamba"], x, ssm_state, cfg)
+    else:
+        s, new_ssm = R.apply_mamba_seq(p["mamba"], x, cfg, state=ssm_state)
+    fused = 0.5 * (B.rms_norm(p["attn_norm"], a, cfg.norm_eps)
+                   + B.rms_norm(p["ssm_norm"], s, cfg.norm_eps))
+    x = x + fused
+    x = x + B.mlp(p["ffn"], B.rms_norm(p["ln2"], x, cfg.norm_eps))
+    return x, new_kv, new_ssm
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    lkeys = jax.random.split(ks[0], cfg.num_layers)
+    return {
+        "embed": B.init_embedding(ks[1], cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "blocks": jax.vmap(lambda k: init_block(k, cfg))(lkeys),
+        "ln_f": B.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "head": B.init_linear(ks[2], cfg.d_model, cfg.vocab_size, cfg.dtype),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    one = R.init_mamba_state(cfg, batch)
+    ssm = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), one)
+    return {"kv": B.init_kv_cache(cfg, batch, cache_len, stacked=cfg.num_layers),
+            "ssm": ssm}
+
+
+def forward(params, cfg: ModelConfig, tokens, *, positions=None, states=None,
+            window=None, step=False, logits_slice=None, hidden_only=False,
+            remat=False, **_):
+    x = B.embed(params["embed"], tokens)
+    if positions is None:
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    kv = states["kv"] if states is not None else None
+    ssm = states["ssm"] if states is not None else None
+
+    from repro.core.act_sharding import constrain
+
+    def body(h, layer):
+        lp, lkv, lssm = layer
+        h, nkv, nssm = apply_block(lp, h, cfg, positions=positions,
+                                   kv_cache=lkv, ssm_state=lssm,
+                                   window=window, step=step)
+        return constrain(h), (nkv, nssm)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (nkv, nssm) = jax.lax.scan(body, x, (params["blocks"], kv, ssm))
+    x = B.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    new_states = {"kv": nkv, "ssm": nssm} if states is not None else None
+    if hidden_only:
+        return x, new_states, jnp.zeros((), jnp.float32)
+    logits = B.linear(params["head"], x).astype(jnp.float32)
+    return logits, new_states, jnp.zeros((), jnp.float32)

@@ -1,0 +1,121 @@
+"""Decoder-only LM covering the dense / moe / vlm families.
+
+Layers are parameter-stacked on axis 0 and executed with ``jax.lax.scan`` so
+the lowered HLO stays O(1) in depth (critical for 512-device dry-run compiles
+and for pipeline-stage slicing in FHDP).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import blocks as B
+
+
+def init_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": B.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "attn": B.init_attention(k1, cfg),
+        "ln2": B.init_rmsnorm(cfg.d_model, cfg.dtype),
+    }
+    if cfg.moe.num_experts:
+        p["moe"] = B.init_moe(k2, cfg)
+    else:
+        p["ffn"] = B.init_mlp(k2, cfg)
+    return p
+
+
+def apply_block(p: dict, x, cfg: ModelConfig, *, positions, cache=None,
+                window=None, use_chunked=None):
+    a, new_cache = B.attention(p["attn"], B.rms_norm(p["ln1"], x, cfg.norm_eps),
+                               cfg, positions=positions, cache=cache,
+                               window=window, use_chunked=use_chunked)
+    x = x + a
+    h = B.rms_norm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        from repro.core import act_sharding
+        r = act_sharding.current()
+        if r is not None and r.mesh is not None \
+                and "model" in getattr(r.mesh, "axis_names", ()):
+            from repro.core.moe_ep import moe_block_ep
+            f, aux = moe_block_ep(p["moe"], h, cfg, mesh=r.mesh,
+                                  seq_sharded=r.seq_axis is not None)
+        else:
+            f, aux = B.moe_block(p["moe"], h, cfg)
+    else:
+        f, aux = B.mlp(p["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + f, new_cache, aux
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    params = {
+        "embed": B.init_embedding(ks[1], cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "blocks": jax.vmap(lambda k: init_block(k, cfg))(layer_keys),
+        "ln_f": B.init_rmsnorm(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = B.init_linear(ks[2], cfg.d_model, cfg.vocab_size,
+                                       cfg.dtype)
+    if cfg.prefix_tokens:  # vlm projector (stub ViT output -> d_model)
+        params["projector"] = B.init_linear(ks[3], cfg.prefix_dim, cfg.d_model,
+                                            cfg.dtype)
+    return params
+
+
+def _scan_blocks(params, x, cfg: ModelConfig, *, positions, caches=None,
+                 window=None, remat=False, use_chunked=None):
+    """Run the stacked block pytree over x. caches: stacked kv cache or None."""
+    from repro.core.act_sharding import constrain
+
+    def body(carry, layer):
+        h = carry
+        lp, lc = layer
+        out, new_cache, aux = apply_block(lp, h, cfg, positions=positions,
+                                          cache=lc, window=window,
+                                          use_chunked=use_chunked)
+        return constrain(out), (new_cache, aux)
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    xs = (params["blocks"], caches)
+    x, (new_caches, auxs) = jax.lax.scan(fn, x, xs)
+    return x, new_caches, auxs.sum()
+
+
+def forward(params, cfg: ModelConfig, tokens, *, positions=None, caches=None,
+            prefix_embeds=None, window=None, remat=False, use_chunked=None,
+            logits_slice: Optional[int] = None, hidden_only: bool = False):
+    """tokens: [B, S] int32. Returns (logits [B, S(, V)], new_caches, aux)."""
+    x = B.embed(params["embed"], tokens)
+    npfx = 0
+    if prefix_embeds is not None:
+        pfx = B.linear(params["projector"], prefix_embeds.astype(x.dtype))
+        x = jnp.concatenate([pfx, x], axis=1)
+        npfx = pfx.shape[1]
+    if positions is None:
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, new_caches, aux = _scan_blocks(params, x, cfg, positions=positions,
+                                      caches=caches, window=window,
+                                      remat=remat, use_chunked=use_chunked)
+    x = B.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    if npfx:
+        x = x[:, npfx:]
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    if hidden_only:
+        return x, new_caches, aux
+    if cfg.tie_embeddings:
+        logits = B.unembed(params["embed"], x)
+    else:
+        logits = B.linear(params["head"], x).astype(jnp.float32)
+    return logits, new_caches, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    return B.init_kv_cache(cfg, batch, cache_len, stacked=cfg.num_layers)

@@ -1,0 +1,399 @@
+"""Recurrent cells: mLSTM / sLSTM (xLSTM, arXiv:2405.04517) and Mamba-style
+selective SSM (for Hymba's parallel heads, arXiv:2411.13676).
+
+All cells expose:
+  init(key, cfg)                  -> params
+  apply_seq(p, x, cfg)            -> (y, final_state)   # train/prefill
+  apply_step(p, x_t, state, cfg)  -> (y_t, new_state)   # decode
+  init_state(cfg, batch)          -> state pytree
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def _norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: [B,S,C]; w: [K,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out
+
+
+# ================================================================ mLSTM =====
+def mlstm_dims(cfg: ModelConfig):
+    di = cfg.ssm.expand * cfg.d_model
+    nh = cfg.num_heads
+    dh = di // nh
+    return di, nh, dh
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, nh, dh = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    dt = cfg.dtype
+    s = d ** -0.5
+    si = di ** -0.5
+    return {
+        "ln": jnp.ones((d,), dt),
+        "w_in": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dt),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm.conv_kernel, di)) * 0.1).astype(dt),
+        "wq": (jax.random.normal(ks[2], (di, di)) * si).astype(dt),
+        "wk": (jax.random.normal(ks[3], (di, di)) * si).astype(dt),
+        "wv": (jax.random.normal(ks[4], (di, di)) * si).astype(dt),
+        "w_if": (jax.random.normal(ks[5], (di, 2 * nh)) * si).astype(jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((nh,)), jnp.linspace(3.0, 6.0, nh)]),
+        "gn": jnp.ones((di,), dt),
+        "w_out": (jax.random.normal(ks[6], (di, d)) * si).astype(dt),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    di, nh, dh = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.conv_kernel - 1, di), cfg.dtype),
+    }
+
+
+def _mlstm_qkvgates(p, x, cfg, conv_state=None):
+    di, nh, dh = mlstm_dims(cfg)
+    xz = _norm(x, p["ln"]) @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if conv_state is not None:  # decode: prepend cached conv inputs
+        xi_full = jnp.concatenate([conv_state, xi], axis=1)
+        new_conv = xi_full[:, -(cfg.ssm.conv_kernel - 1):, :]
+        k = p["conv"].shape[0]
+        xi = sum(xi_full[:, i:i + xi.shape[1], :] * p["conv"][i]
+                 for i in range(k))
+    else:
+        xi = _causal_conv(xi, p["conv"])
+        new_conv = None
+    xi = jax.nn.silu(xi)
+    b, s, _ = xi.shape
+
+    def heads(t):
+        return t.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)  # [B,NH,S,DH]
+
+    q = heads(xi @ p["wq"]).astype(jnp.float32)
+    k_ = heads(xi @ p["wk"]).astype(jnp.float32) * dh ** -0.5
+    v = heads(xi @ p["wv"]).astype(jnp.float32)
+    gates = xi.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)        # [B,S,NH]
+    log_f = -jax.nn.softplus(-fg)                # log sigmoid(f)
+    return q, k_, v, ig.transpose(0, 2, 1), log_f.transpose(0, 2, 1), z, new_conv
+
+
+def _mlstm_update(C, n, m, q_t, k_t, v_t, i_t, lf_t):
+    """One stabilized mLSTM step. shapes: C [B,NH,DH,DH]; q/k/v [B,NH,DH];
+    i/lf [B,NH]."""
+    m_new = jnp.maximum(lf_t + m, i_t)
+    fs = jnp.exp(lf_t + m - m_new)[..., None]
+    is_ = jnp.exp(i_t - m_new)[..., None]
+    C_new = fs[..., None] * C + is_[..., None] * (v_t[..., :, None] * k_t[..., None, :])
+    n_new = fs * n + is_ * k_t
+    num = jnp.einsum("bhij,bhj->bhi", C_new, q_t)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q_t)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return C_new, n_new, m_new, h
+
+
+def mlstm_chunk_body(C, n, m, q, k, v, ig, lf):
+    """Process one chunk of the stabilized mLSTM in parallel (TFLA-style
+    chunkwise form — the per-step recurrence unrolled exactly).
+
+    q/k/v: [B,NH,c,DH]; ig/lf: [B,NH,c]; carry C [B,NH,DH,DH], n [B,NH,DH],
+    m [B,NH]. Returns (C', n', m', h [B,NH,c,DH]).
+
+    With b_t = cumsum(lf) (inclusive) and M_t = running max of (i_j - b_j):
+      m_t   = b_t + max(m_in, M_t)
+      h_t   = [ Σ_{j<=t} e^{b_t-b_j+i_j-m_t} v_j (k_j.q_t)
+                + e^{m_in+b_t-m_t} C_in q_t ] / den_t
+    This is the oracle mirrored by kernels/mlstm (same math, same
+    stabilization), and what the Pallas kernel tiles into VMEM.
+    """
+    c = q.shape[2]
+    b_ = jnp.cumsum(lf, axis=-1)                      # [B,NH,c]
+    a_ = ig - b_                                      # i_j - b_j
+    M = jax.lax.cummax(a_, axis=2)                    # running max
+    m_t = b_ + jnp.maximum(m[..., None], M)           # [B,NH,c]
+    m_out = m_t[..., -1]
+
+    # decay matrix D_tj = exp(b_t - b_j + i_j - m_t), j <= t
+    D = b_[..., :, None] - b_[..., None, :] + ig[..., None, :] \
+        - m_t[..., :, None]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(tri, jnp.exp(D), 0.0)               # [B,NH,c,c]
+
+    S = jnp.einsum("bhtd,bhjd->bhtj", q, k)           # [B,NH,c,c]
+    inter_scale = jnp.exp(m[..., None] + b_ - m_t)    # [B,NH,c]
+    num = jnp.einsum("bhtj,bhjd->bhtd", S * D, v) \
+        + inter_scale[..., None] * jnp.einsum("bhij,bhtj->bhti", C, q)
+    n_t = jnp.einsum("bhtj,bhjd->bhtd", D, k) \
+        + inter_scale[..., None] * n[..., None, :]
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", n_t, q)),
+                      jnp.exp(-m_t))[..., None]
+    h = num / den
+
+    # end-of-chunk carry
+    w_k = jnp.exp(b_[..., -1:] - b_ + ig - m_out[..., None])  # [B,NH,c]
+    carry_scale = jnp.exp(m + b_[..., -1] - m_out)
+    C_out = carry_scale[..., None, None] * C \
+        + jnp.einsum("bhtd,bhte->bhde", v * w_k[..., None], k)
+    n_out = carry_scale[..., None] * n \
+        + jnp.einsum("bhtd,bht->bhd", k, w_k)
+    return C_out, n_out, m_out, h
+
+
+def apply_mlstm_seq(p, x, cfg: ModelConfig, state=None, chunk: int = 256):
+    """x: [B,S,d] -> (y [B,S,d], final_state). Chunkwise-parallel: intra-
+    chunk work is matmul-shaped (MXU-friendly), only the inter-chunk
+    recurrence is sequential — the per-timestep scan stored O(S) states for
+    the backward pass (16 TB-scale at train shapes; see EXPERIMENTS.md)."""
+    di, nh, dh = mlstm_dims(cfg)
+    b, s, _ = x.shape
+    if state is None:
+        state = init_mlstm_state(cfg, b)
+    # carry the depthwise-conv window across calls (chunked prefill /
+    # segment continuation must match token-by-token decode exactly)
+    q, k, v, ig, lf, z, new_conv = _mlstm_qkvgates(
+        p, x, cfg, conv_state=state["conv"])
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+
+    def split_chunks(t, heads=True):
+        if heads:  # [B,NH,S,DH] -> [nc,B,NH,c,DH]
+            return t.reshape(b, nh, nc, c, -1).transpose(2, 0, 1, 3, 4)
+        return t.reshape(b, nh, nc, c).transpose(2, 0, 1, 3)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        # rematted: backward recomputes one chunk's [c,c] decay/score
+        # matrices instead of storing them for every chunk
+        C, n, m = carry
+        qc, kc, vc, igc, lfc = inp
+        C, n, m, h = mlstm_chunk_body(C, n, m, qc, kc, vc, igc, lfc)
+        return (C, n, m), h
+
+    (C, n, m), hs = jax.lax.scan(
+        body, (state["C"], state["n"], state["m"]),
+        (split_chunks(q), split_chunks(k), split_chunks(v),
+         split_chunks(ig, False), split_chunks(lf, False)))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(b, nh, s, dh)
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, di).astype(x.dtype)
+    y = (_norm(h, p["gn"]) * jax.nn.silu(z)) @ p["w_out"]
+    return y, {"C": C, "n": n, "m": m, "conv": new_conv}
+
+
+def apply_mlstm_step(p, x_t, state, cfg: ModelConfig):
+    """x_t: [B,1,d]."""
+    di, nh, dh = mlstm_dims(cfg)
+    q, k, v, ig, lf, z, new_conv = _mlstm_qkvgates(p, x_t, cfg,
+                                                   conv_state=state["conv"])
+    C, n, m, h = _mlstm_update(state["C"], state["n"], state["m"],
+                               q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                               ig[:, :, 0], lf[:, :, 0])
+    b = x_t.shape[0]
+    h = h.reshape(b, 1, di).astype(x_t.dtype)
+    y = (_norm(h, p["gn"]) * jax.nn.silu(z)) @ p["w_out"]
+    return y, {"C": C, "n": n, "m": m, "conv": new_conv}
+
+
+# ================================================================ sLSTM =====
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    ks = jax.random.split(key, 3)
+    dt = cfg.dtype
+    return {
+        "ln": jnp.ones((d,), dt),
+        "w": (jax.random.normal(ks[0], (d, 4 * d)) * d ** -0.5).astype(jnp.float32),
+        "r": (jax.random.normal(ks[1], (nh, dh, 4 * dh)) * dh ** -0.5).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.linspace(3.0, 6.0, d),
+                              jnp.zeros((2 * d,))]),
+        "gn": jnp.ones((d,), dt),
+        "w_out": (jax.random.normal(ks[2], (d, d)) * d ** -0.5).astype(dt),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    d, nh = cfg.d_model, cfg.num_heads
+    dh = d // nh
+    z = lambda: jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, nh, dh), -1e30)}
+
+
+def _slstm_step(p, x_t, st, cfg):
+    """x_t: [B,d] (pre-normed); heads recurrence."""
+    d, nh = cfg.d_model, cfg.num_heads
+    dh = d // nh
+    b = x_t.shape[0]
+    pre = x_t.astype(jnp.float32) @ p["w"] + p["b"]          # [B,4d]
+    rec = jnp.einsum("bhj,hjk->bhk", st["h"], p["r"])        # [B,NH,4dh]
+    pre = pre.reshape(b, nh, 4 * dh) + rec
+    ig, fg, zg, og = jnp.split(pre, 4, axis=-1)
+    log_f = -jax.nn.softplus(-fg)
+    m_new = jnp.maximum(log_f + st["m"], ig)
+    fs, is_ = jnp.exp(log_f + st["m"] - m_new), jnp.exp(ig - m_new)
+    c = fs * st["c"] + is_ * jnp.tanh(zg)
+    n = fs * st["n"] + is_
+    h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1e-6)
+    return h.reshape(b, d), {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def apply_slstm_seq(p, x, cfg: ModelConfig, state=None, chunk: int = 128):
+    """sLSTM is a true nonlinear recurrence (h_{t-1} feeds the gates through
+    a matmul) — it cannot be parallelized over time. We scan chunks of
+    rematerialized inner scans so the backward pass stores O(S/chunk)
+    states instead of O(S)."""
+    b, s, d = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    xn = _norm(x, p["ln"])
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+    xc = xn.transpose(1, 0, 2).reshape(nc, c, b, d)
+
+    def inner(st, x_t):
+        h, st = _slstm_step(p, x_t, st, cfg)
+        return st, h
+
+    @jax.checkpoint
+    def outer(st, xck):
+        st, hs = jax.lax.scan(inner, st, xck)
+        return st, hs
+
+    state, hs = jax.lax.scan(outer, state, xc)
+    h = hs.reshape(s, b, d).transpose(1, 0, 2).astype(x.dtype)
+    return _norm(h, p["gn"]) @ p["w_out"], state
+
+
+def apply_slstm_step(p, x_t, state, cfg: ModelConfig):
+    xn = _norm(x_t, p["ln"])
+    h, state = _slstm_step(p, xn[:, 0], state, cfg)
+    y = _norm(h[:, None, :].astype(x_t.dtype), p["gn"]) @ p["w_out"]
+    return y, state
+
+
+# ================================================================ Mamba =====
+def mamba_dims(cfg: ModelConfig):
+    di = cfg.ssm.expand * cfg.d_model
+    return di, cfg.ssm.state_size
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, n = mamba_dims(cfg)
+    r = max(16, d // 16)
+    ks = jax.random.split(key, 7)
+    dt = cfg.dtype
+    return {
+        "ln": jnp.ones((d,), dt),
+        "w_in": (jax.random.normal(ks[0], (d, 2 * di)) * d ** -0.5).astype(dt),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm.conv_kernel, di)) * 0.1).astype(dt),
+        "wB": (jax.random.normal(ks[2], (di, n)) * di ** -0.5).astype(dt),
+        "wC": (jax.random.normal(ks[3], (di, n)) * di ** -0.5).astype(dt),
+        "w_dt1": (jax.random.normal(ks[4], (di, r)) * di ** -0.5).astype(dt),
+        "w_dt2": (jax.random.normal(ks[5], (r, di)) * r ** -0.5).astype(dt),
+        "b_dt": jnp.full((di,), -4.6),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": (jax.random.normal(ks[6], (di, d)) * di ** -0.5).astype(dt),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> dict:
+    di, n = mamba_dims(cfg)
+    return {"h": jnp.zeros((batch, di, n), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm.conv_kernel - 1, di), cfg.dtype)}
+
+
+def _mamba_proj(p, x, cfg, conv_state=None):
+    xz = _norm(x, p["ln"]) @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if conv_state is not None:
+        xi_full = jnp.concatenate([conv_state, xi], axis=1)
+        new_conv = xi_full[:, -(cfg.ssm.conv_kernel - 1):, :]
+        k = p["conv"].shape[0]
+        xi = sum(xi_full[:, i:i + xi.shape[1], :] * p["conv"][i]
+                 for i in range(k))
+    else:
+        new_conv_src = xi
+        xi = _causal_conv(xi, p["conv"])
+        new_conv = new_conv_src[:, -(cfg.ssm.conv_kernel - 1):, :] \
+            if xi.shape[1] >= cfg.ssm.conv_kernel - 1 else None
+    xi = jax.nn.silu(xi)
+    xf = xi.astype(jnp.float32)
+    dt = jax.nn.softplus(xf @ p["w_dt1"] @ p["w_dt2"] + p["b_dt"])  # [B,S,di]
+    Bm = xf @ p["wB"].astype(jnp.float32)                           # [B,S,N]
+    Cm = xf @ p["wC"].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                        # [di,N]
+    return xf, z, dt, Bm, Cm, A, new_conv
+
+
+def apply_mamba_seq(p, x, cfg: ModelConfig, state=None, chunk: int = 256):
+    """Chunked selective scan: sequential carry across chunks, associative
+    scan within. A full-sequence associative scan materializes
+    [B,S,d_inner,N] float32 three times over — tens of GB per layer at
+    train shapes; chunking bounds it to the chunk length."""
+    b, s, d = x.shape
+    di, n = mamba_dims(cfg)
+    if state is None:
+        state = init_mamba_state(cfg, b)
+    xf, z, dt, Bm, Cm, A, new_conv = _mamba_proj(p, x, cfg,
+                                                 conv_state=state["conv"])
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+
+    def ch(t):  # [B,S,...] -> [nc,B,c,...]
+        return t.reshape((b, nc, c) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    def combine(a, b_):
+        return (a[0] * b_[0], b_[0] * a[1] + b_[1])
+
+    def body(h0, inp):
+        xfc, dtc, Bc, Cc = inp
+        dA = jnp.exp(dtc[..., None] * A)                  # [B,c,di,N]
+        dBx = (dtc * xfc)[..., None] * Bc[:, :, None, :]
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+        _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        yc = jnp.einsum("bsdn,bsn->bsd", hs, Cc)
+        return hs[:, -1], yc
+
+    h_fin, ys = jax.lax.scan(body, state["h"],
+                             (ch(xf), ch(dt), ch(Bm), ch(Cm)))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di) + p["D"] * xf
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out, {"h": h_fin, "conv": new_conv}
+
+
+def apply_mamba_step(p, x_t, state, cfg: ModelConfig):
+    xf, z, dt, Bm, Cm, A, new_conv = _mamba_proj(p, x_t, cfg,
+                                                 conv_state=state["conv"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)                             # [B,di,N]
+    dBx = (dt[:, 0] * xf[:, 0])[..., None] * Bm[:, 0, None, :]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0]) + p["D"] * xf[:, 0]
+    out = (y[:, None, :].astype(x_t.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out, {"h": h, "conv": new_conv}

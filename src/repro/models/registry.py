@@ -1,0 +1,193 @@
+"""Uniform model interface over all families.
+
+``build_model(cfg)`` returns a :class:`Model` whose members are plain
+functions (easy to ``jax.jit`` / ``shard_map`` / pipeline-partition).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import blocks as B
+from repro.models import encdec, hymba, lm, vision_encoder, xlstm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]          # (params, batch) -> (loss, metrics)
+    init_state: Callable[..., Any]    # (batch, cache_len) -> decode state
+    prefill: Callable[..., Any]       # (params, batch, state) -> (logits, state)
+    decode_step: Callable[..., Any]   # (params, tokens, state, pos) -> (logits, state)
+
+
+def _ce_loss(logits, labels, aux):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -ll.mean()
+    return loss + aux, {"ce": loss, "aux": aux,
+                        "acc": (logits.argmax(-1) == labels).mean()}
+
+
+def _hidden_ce(params, x, labels, aux):
+    """Chunked CE from final hidden states (never builds [B,S,V] logits)."""
+    from repro.train.losses import chunked_ce, head_weight
+    loss, metrics = chunked_ce(x, head_weight(params), labels)
+    metrics = dict(metrics, aux=aux)
+    return loss + aux, metrics
+
+
+# --------------------------------------------------------- dense/moe/vlm ----
+def _build_lm(cfg: ModelConfig) -> Model:
+    is_vlm = cfg.family == "vlm"
+
+    def loss(params, batch, *, remat=True, window=None):
+        pfx = batch.get("patches") if is_vlm else None
+        x, _, aux = lm.forward(params, cfg, batch["tokens"],
+                               prefix_embeds=pfx, window=window,
+                               remat=remat, hidden_only=True)
+        return _hidden_ce(params, x, batch["labels"], aux)
+
+    def init_state(batch: int, cache_len: int):
+        return {"caches": lm.init_cache(cfg, batch, cache_len)}
+
+    def prefill(params, batch, state, *, window=None):
+        pfx = batch.get("patches") if is_vlm else None
+        logits, caches, _ = lm.forward(params, cfg, batch["tokens"],
+                                       caches=state["caches"],
+                                       prefix_embeds=pfx, window=window,
+                                       logits_slice=1)
+        return logits, {"caches": caches}
+
+    def decode_step(params, tokens, state, pos, *, window=None):
+        positions = jnp.full((1,), pos, jnp.int32)
+        logits, caches, _ = lm.forward(params, cfg, tokens,
+                                       positions=positions,
+                                       caches=state["caches"], window=window)
+        return logits, {"caches": caches}
+
+    return Model(cfg, lambda key: lm.init(key, cfg), loss, init_state,
+                 prefill, decode_step)
+
+
+# ------------------------------------------------------------------ ssm ----
+def _build_xlstm(cfg: ModelConfig) -> Model:
+    def loss(params, batch, *, remat=True, window=None):
+        x, _, aux = xlstm.forward(params, cfg, batch["tokens"],
+                                  hidden_only=True, remat=remat)
+        return _hidden_ce(params, x, batch["labels"], aux)
+
+    def init_state(batch: int, cache_len: int):
+        return xlstm.init_state(cfg, batch)
+
+    def prefill(params, batch, state):
+        logits, st, _ = xlstm.forward(params, cfg, batch["tokens"],
+                                      states=state, logits_slice=1)
+        return logits, st
+
+    def decode_step(params, tokens, state, pos, *, window=None):
+        logits, st, _ = xlstm.forward(params, cfg, tokens, states=state,
+                                      step=True)
+        return logits, st
+
+    return Model(cfg, lambda key: xlstm.init(key, cfg), loss, init_state,
+                 prefill, decode_step)
+
+
+# --------------------------------------------------------------- hybrid ----
+def _build_hymba(cfg: ModelConfig) -> Model:
+    def loss(params, batch, *, remat=True, window=None):
+        x, _, aux = hymba.forward(params, cfg, batch["tokens"],
+                                  window=window, hidden_only=True,
+                                  remat=remat)
+        return _hidden_ce(params, x, batch["labels"], aux)
+
+    def init_state(batch: int, cache_len: int):
+        return hymba.init_state(cfg, batch, cache_len)
+
+    def prefill(params, batch, state, *, window=None):
+        logits, st, _ = hymba.forward(params, cfg, batch["tokens"],
+                                      states=state, window=window,
+                                      logits_slice=1)
+        return logits, st
+
+    def decode_step(params, tokens, state, pos, *, window=None):
+        positions = jnp.full((1,), pos, jnp.int32)
+        logits, st, _ = hymba.forward(params, cfg, tokens,
+                                      positions=positions, states=state,
+                                      window=window, step=True)
+        return logits, st
+
+    return Model(cfg, lambda key: hymba.init(key, cfg), loss, init_state,
+                 prefill, decode_step)
+
+
+# --------------------------------------------------------------- encdec ----
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def loss(params, batch, *, remat=True, window=None):
+        memory = encdec.encode(params, cfg, batch["frames"], window=window,
+                               remat=remat)
+        cross = encdec.make_cross_kv(params, cfg, memory)
+        x, _ = encdec.decode(params, cfg, batch["tokens"], cross,
+                             window=window, hidden_only=True, remat=remat)
+        return _hidden_ce(params, x, batch["labels"],
+                          jnp.zeros((), jnp.float32))
+
+    def init_state(batch: int, cache_len: int):
+        # cross_kv is overwritten by prefill; zeros let a raw decode lower.
+        from repro.configs.common import ENC_MEMORY_DECODE
+        nkv, hd = cfg.num_kv_heads, cfg.hd
+        ck = jnp.zeros((cfg.dec_layers, batch, nkv, ENC_MEMORY_DECODE, hd),
+                       cfg.dtype)
+        return {"caches": encdec.init_cache(cfg, batch, cache_len),
+                "cross_kv": (ck, ck)}
+
+    def prefill(params, batch, state, *, window=None):
+        memory = encdec.encode(params, cfg, batch["frames"], window=window)
+        cross = encdec.make_cross_kv(params, cfg, memory)
+        logits, caches = encdec.decode(params, cfg, batch["tokens"], cross,
+                                       caches=state["caches"], window=window,
+                                       logits_slice=1)
+        return logits, {"caches": caches, "cross_kv": cross}
+
+    def decode_step(params, tokens, state, pos, *, window=None):
+        positions = jnp.full((1,), pos, jnp.int32)
+        logits, caches = encdec.decode(params, cfg, tokens, state["cross_kv"],
+                                       positions=positions,
+                                       caches=state["caches"], window=window)
+        return logits, {"caches": caches, "cross_kv": state["cross_kv"]}
+
+    return Model(cfg, lambda key: encdec.init(key, cfg), loss, init_state,
+                 prefill, decode_step)
+
+
+# --------------------------------------------------------------- vision ----
+def _build_vision(cfg: ModelConfig) -> Model:
+    def loss(params, batch, *, remat=True, window=None):
+        return vision_encoder.loss_fn(params, cfg, batch)
+
+    def unsupported(*a, **k):
+        raise NotImplementedError("vision encoder has no decode path")
+
+    return Model(cfg, lambda key: vision_encoder.init(key, cfg), loss,
+                 lambda b, c: {}, unsupported, unsupported)
+
+
+MODEL_BUILDERS = {
+    "dense": _build_lm,
+    "moe": _build_lm,
+    "vlm": _build_lm,
+    "ssm": _build_xlstm,
+    "hybrid": _build_hymba,
+    "encdec": _build_encdec,
+    "vision": _build_vision,
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return MODEL_BUILDERS[cfg.family](cfg)

@@ -1,0 +1,83 @@
+"""FLAD's own vision encoder (paper §4.1.3 "Complexity of Vision Encoder").
+
+DAG: RGB backbone + LiDAR backbone -> transformer encoder (multimodal token
+fusion) -> query-based decoder heads (waypoints, traffic light, BEV logits).
+The conv/PointPillar frontends are stubs per the carve-out: synthetic data
+supplies patch/pillar features; the model owns projectors and everything
+after. This is the model trained federatedly by FHDP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import blocks as B
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 9)
+    lkeys = jax.random.split(ks[0], cfg.num_layers)
+    from repro.models.encdec import init_enc_block
+    d = cfg.d_model
+    nq = cfg.num_waypoints + 1  # waypoint queries + 1 traffic-light query
+    return {
+        "rgb_proj": B.init_linear(ks[1], cfg.prefix_dim, d, cfg.dtype),
+        "lidar_proj": B.init_linear(ks[2], cfg.prefix_dim, d, cfg.dtype),
+        "modality_emb": (jax.random.normal(ks[3], (2, d)) * 0.02).astype(cfg.dtype),
+        "blocks": jax.vmap(lambda k: init_enc_block(k, cfg))(lkeys),
+        "ln_f": B.init_rmsnorm(d, cfg.dtype),
+        "queries": (jax.random.normal(ks[4], (nq, d)) * 0.02).astype(cfg.dtype),
+        "dec_attn": B.init_attention(ks[5], cfg, cross=True),
+        "dec_ln": B.init_rmsnorm(d, cfg.dtype),
+        "wp_head": B.init_linear(ks[6], d, 2, cfg.dtype, bias=True),
+        "light_head": B.init_linear(ks[7], d, cfg.num_light_classes, cfg.dtype,
+                                    bias=True),
+    }
+
+
+def forward(params, cfg: ModelConfig, batch, **_):
+    """batch: {'rgb': [B,Pr,F], 'lidar': [B,Pl,F]} ->
+    {'waypoints': [B,W,2], 'light_logits': [B,C], 'features': [B,P,d]}."""
+    rgb = B.linear(params["rgb_proj"], batch["rgb"].astype(cfg.dtype))
+    lid = B.linear(params["lidar_proj"], batch["lidar"].astype(cfg.dtype))
+    x = jnp.concatenate([rgb + params["modality_emb"][0],
+                         lid + params["modality_emb"][1]], axis=1)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(h, lp):
+        a, _ = B.attention(lp["attn"], B.rms_norm(lp["ln1"], h, cfg.norm_eps),
+                           cfg, positions=pos, causal=False)
+        h = h + a
+        h = h + B.mlp(lp["ffn"], B.rms_norm(lp["ln2"], h, cfg.norm_eps))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    feats = B.rms_norm(params["ln_f"], x, cfg.norm_eps)
+
+    b = feats.shape[0]
+    q = jnp.broadcast_to(params["queries"][None], (b,) + params["queries"].shape)
+    nkv, hd = cfg.num_kv_heads, cfg.hd
+    k = (feats @ params["dec_attn"]["wk"]).reshape(
+        b, -1, nkv, hd).transpose(0, 2, 1, 3)
+    v = (feats @ params["dec_attn"]["wv"]).reshape(
+        b, -1, nkv, hd).transpose(0, 2, 1, 3)
+    qpos = jnp.arange(q.shape[1], dtype=jnp.int32)
+    dec, _ = B.attention(params["dec_attn"], B.rms_norm(params["dec_ln"], q,
+                                                        cfg.norm_eps),
+                         cfg, positions=qpos, cross_kv=(k, v), cross_pos=pos,
+                         causal=False)
+    dec = dec + q
+    wp = B.linear(params["wp_head"], dec[:, :cfg.num_waypoints]).astype(jnp.float32)
+    light = B.linear(params["light_head"], dec[:, -1]).astype(jnp.float32)
+    return {"waypoints": wp, "light_logits": light, "features": feats}
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    out = forward(params, cfg, batch)
+    l1 = jnp.abs(out["waypoints"] - batch["waypoints"]).mean()
+    logp = jax.nn.log_softmax(out["light_logits"])
+    ce = -jnp.take_along_axis(logp, batch["light"][:, None], axis=-1).mean()
+    return l1 + ce, {"l1": l1, "ce": ce,
+                     "acc": (out["light_logits"].argmax(-1) == batch["light"])
+                     .mean()}

@@ -1,0 +1,103 @@
+"""xLSTM stack (sLSTM + mLSTM blocks), arXiv:2405.04517.
+
+Layout: ``slstm_every``-sized super-blocks, each = (slstm_every - 1) mLSTM
+blocks followed by one sLSTM block (the xLSTM[7:1] pattern for
+slstm_every=8). Parameters are stacked [n_super, k, ...] so a two-level scan
+keeps HLO size depth-independent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import blocks as B
+from repro.models import recurrent as R
+
+
+def _layout(cfg: ModelConfig):
+    k = cfg.ssm.slstm_every or cfg.num_layers
+    assert cfg.num_layers % k == 0, (cfg.num_layers, k)
+    return cfg.num_layers // k, k - 1  # (n_super, mlstm_per_super)
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    n_super, n_m = _layout(cfg)
+    ks = jax.random.split(key, 4)
+    mkeys = jax.random.split(ks[0], n_super * max(n_m, 1)).reshape(
+        n_super, max(n_m, 1), 2)
+    skeys = jax.random.split(ks[1], n_super)
+    params = {
+        "embed": B.init_embedding(ks[2], cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "mlstm": jax.vmap(jax.vmap(lambda k_: R.init_mlstm(k_, cfg)))(mkeys),
+        "slstm": jax.vmap(lambda k_: R.init_slstm(k_, cfg))(skeys),
+        "ln_f": B.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "head": B.init_linear(ks[3], cfg.d_model, cfg.vocab_size, cfg.dtype),
+    }
+    return params
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict:
+    n_super, n_m = _layout(cfg)
+
+    def stack(fn, outer, inner=None):
+        one = fn(cfg, batch)
+        reps = (outer,) if inner is None else (outer, inner)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, reps + x.shape).copy(), one)
+
+    return {"mlstm": stack(R.init_mlstm_state, n_super, max(n_m, 1)),
+            "slstm": stack(R.init_slstm_state, n_super)}
+
+
+def _super_block(params, x, cfg, states, step: bool):
+    mp, sp = params
+    ms, ss = states
+
+    def m_body(h, layer):
+        lp, lst = layer
+        if step:
+            y, nst = R.apply_mlstm_step(lp, h, lst, cfg)
+        else:
+            y, nst = R.apply_mlstm_seq(lp, h, cfg, state=lst)
+        return h + y, nst
+
+    if not step:
+        # per-layer remat: one mLSTM layer's chunk carries ([nc,B,NH,DH,DH]
+        # f32) at a time during backward, not all 7 at once
+        m_body = jax.checkpoint(
+            m_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_ms = jax.lax.scan(m_body, x, (mp, ms))
+    if step:
+        y, new_ss = R.apply_slstm_step(sp, x, ss, cfg)
+    else:
+        y, new_ss = R.apply_slstm_seq(sp, x, cfg, state=ss)
+    return x + y, (new_ms, new_ss)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, states=None, step=False,
+            logits_slice=None, hidden_only=False, remat=False, **_):
+    x = B.embed(params["embed"], tokens)
+    if states is None:
+        states = init_state(cfg, tokens.shape[0])
+
+    from repro.core.act_sharding import constrain
+
+    def body(h, layer):
+        (mp, sp), (ms, ss) = layer
+        h, (nms, nss) = _super_block((mp, sp), h, cfg, (ms, ss), step)
+        return constrain(h), (nms, nss)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (new_m, new_s) = jax.lax.scan(
+        body, x, ((params["mlstm"], params["slstm"]),
+                  (states["mlstm"], states["slstm"])))
+    x = B.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    if hidden_only:
+        return x, {"mlstm": new_m, "slstm": new_s}, jnp.zeros((), jnp.float32)
+    logits = B.linear(params["head"], x).astype(jnp.float32)
+    return logits, {"mlstm": new_m, "slstm": new_s}, jnp.zeros((), jnp.float32)

@@ -1,0 +1,59 @@
+"""Edge-aided backup (paper §4.2): the edge server (master) snapshots the
+merged model every ``interval`` epochs; recovery restores from the latest
+snapshot and redeploys under a (possibly different) stage template.
+
+Host-side (numpy) storage — the analogue of the edge server's disk; works
+with both the tensor strategy's flat params and FHDP stage containers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class Snapshot:
+    step: int
+    tree: Any
+    wall_time: float
+
+
+class EdgeBackup:
+    def __init__(self, interval: int = 5):
+        self.interval = interval
+        self._latest: Optional[Snapshot] = None
+        self.backups_taken = 0
+
+    def maybe_backup(self, step: int, params) -> bool:
+        if step % self.interval != 0:
+            return False
+        host = jax.tree.map(lambda x: np.asarray(x), params)
+        self._latest = Snapshot(step, host, time.time())
+        self.backups_taken += 1
+        return True
+
+    @property
+    def latest(self) -> Optional[Snapshot]:
+        return self._latest
+
+    def restore(self):
+        if self._latest is None:
+            raise RuntimeError("no backup available")
+        return jax.tree.map(lambda x: x, self._latest.tree), self._latest.step
+
+
+def restage(merged_params, cfg, new_templates, mesh):
+    """Re-deploy a merged (backup) model under a new stage template —
+    recovery's 'deploy pre-generated template' step for the FHDP runtime."""
+    from repro.core import pipeline as pl
+    from repro.core.fhdp import _named
+    import jax.numpy as jnp
+
+    pp = pl.stage_params_from(
+        jax.tree.map(jnp.asarray, merged_params), cfg, new_templates)
+    spec = pl.stage_specs(mesh, jax.eval_shape(lambda: pp))
+    return jax.device_put(pp, _named(mesh, spec))

@@ -1,0 +1,163 @@
+"""Analytic pipeline cost model (paper Eqs. 7–10), re-parameterized for TPU.
+
+The paper measures per-module computation ``M_cmp`` (FLOPs/sample), memory
+footprint ``M_cap`` (bytes, ~10x params for training state), and boundary
+activation volume ``M_com``. Timing:
+
+  t_cmp = M_cmp * N_batch * nu / (cmp_v * mu)          (Eq. 8)
+  t_com = 2 * M_com * N_batch * nu / com_v             (Eq. 9)
+  t_path(p, P) = sum t_cmp + sum t_com (non-final)     (Eq. 10)
+
+``mu`` (GPU utilization 0.3–0.7) and ``nu`` (memory-bandwidth overhead
+1.1–1.5) keep the paper's calibration; ``cmp_v``/``com_v`` default to the
+TPU v5e constants instead of Jetson numbers. Heterogeneous vehicle specs
+(Table 1) are retained for the testbed-replay benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.config import TPU_V5E, ModelConfig
+
+BYTES_PER_PARAM_TRAIN = 10  # activations+grads+optimizer (paper §4.1.1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Vehicle:
+    """A participant: compute (FLOP/s), memory (bytes), link (bytes/s),
+    stability score (Eq. 5) and predicted dwell time (s)."""
+    vid: int
+    cmp: float
+    mem: float
+    com: float
+    stb: float = 1.0
+    dwl: float = 1e9
+
+
+# The paper's Jetson testbed (Table 1), used by the replay benchmarks.
+JETSON_NX = dict(cmp=0.404e12, mem=8e9, com=0.125e9)
+JETSON_NANO = dict(cmp=0.472e12, mem=8e9, com=0.125e9)
+JETSON_AGX = dict(cmp=3.85e12, mem=32e9, com=0.25e9)
+
+TPU_CHIP = dict(cmp=TPU_V5E.peak_flops, mem=TPU_V5E.hbm_bytes,
+                com=TPU_V5E.ici_bw)
+
+
+def make_fleet(specs: Sequence[dict], *, stb: Optional[Sequence[float]] = None,
+               dwl: Optional[Sequence[float]] = None) -> List[Vehicle]:
+    out = []
+    for i, s in enumerate(specs):
+        out.append(Vehicle(i, s["cmp"], s["mem"], s["com"],
+                           stb[i] if stb is not None else 1.0,
+                           dwl[i] if dwl is not None else 1e9))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    """One partitionable model unit (paper: a DAG node after topo-sort;
+    here: a transformer block or frontend module)."""
+    name: str
+    cap: float        # training memory footprint (bytes)
+    cmp: float        # FLOPs per sample (fwd+bwd)
+    com: float        # boundary activation bytes per sample
+
+
+def model_units(cfg: ModelConfig, *, seq_len: int = 1024,
+                dtype_bytes: int = 2) -> List[Unit]:
+    """Units for an architecture: per-block FLOPs/bytes from the config.
+
+    fwd+bwd FLOPs ~= 6 * params_per_block * tokens (dense); the boundary
+    volume is the residual stream [seq, d_model].
+    """
+    d = cfg.d_model
+    nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+
+    def attn_params():
+        return d * nq * hd + 2 * d * nkv * hd + nq * hd * d + 2 * d
+
+    def ffn_params():
+        if cfg.moe.num_experts:
+            k = cfg.moe.top_k
+            return d * cfg.moe.num_experts \
+                + k * 3 * d * cfg.moe.d_expert  # active params per token
+        return 3 * d * cfg.d_ff
+
+    def ffn_store():
+        if cfg.moe.num_experts:
+            return d * cfg.moe.num_experts \
+                + cfg.moe.num_experts * 3 * d * cfg.moe.d_expert
+        return 3 * d * cfg.d_ff
+
+    blk_active = attn_params() + ffn_params()
+    blk_store = attn_params() + ffn_store()
+    units = []
+    for i in range(cfg.num_layers):
+        cmp_ = 6 * blk_active * seq_len + 4 * nq * hd * seq_len * seq_len
+        units.append(Unit(
+            f"block{i}",
+            cap=blk_store * dtype_bytes * BYTES_PER_PARAM_TRAIN / 2,
+            cmp=cmp_,
+            com=seq_len * d * dtype_bytes))
+    return units
+
+
+def vision_encoder_units(cfg: ModelConfig, *, tokens: int = 256,
+                         dtype_bytes: int = 4) -> List[Unit]:
+    """The paper's own vision encoder DAG (RGB, LiDAR, Enc, Dec modules).
+
+    §4.1.3: ``M_cmp = M_cmp^* N_batch`` per component; we expose the
+    topo-sorted unit list the scheduler partitions.
+    """
+    from repro.sched.graph import vision_encoder_graph
+    g = vision_encoder_graph(cfg, tokens=tokens, dtype_bytes=dtype_bytes)
+    return [Unit(n.name, n.cap, n.cmp, n.com) for n in g.topo_sorted()]
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    mu: float = 0.5      # compute utilization (paper: 0.3–0.7)
+    nu: float = 1.3      # memory-bandwidth overhead (paper: 1.1–1.5)
+    n_batch: int = 16    # samples per epoch step
+
+
+def t_cmp(units_cmp: float, v: Vehicle, cp: CostParams) -> float:
+    return units_cmp * cp.n_batch * cp.nu / (v.cmp * cp.mu)       # Eq. 8
+
+
+def t_com(boundary_bytes: float, v: Vehicle, cp: CostParams) -> float:
+    return 2.0 * boundary_bytes * cp.n_batch * cp.nu / v.com      # Eq. 9
+
+
+def path_time(path: Sequence[Vehicle], partition: Sequence[Sequence[Unit]],
+              cp: CostParams) -> float:
+    """Eq. 10: sum of stage compute plus inter-stage communication."""
+    total = 0.0
+    for i, (v, units) in enumerate(zip(path, partition)):
+        total += t_cmp(sum(u.cmp for u in units), v, cp)
+        if i < len(path) - 1 and units:
+            total += t_com(units[-1].com, v, cp)
+    return total
+
+
+def partition_feasible(path: Sequence[Vehicle],
+                       partition: Sequence[Sequence[Unit]]) -> bool:
+    """Eq. 11 c2: every stage fits its vehicle's memory."""
+    return all(sum(u.cap for u in units) <= v.mem
+               for v, units in zip(path, partition))
+
+
+def pipeline_throughput(path, partition, cp: CostParams,
+                        microbatches: int = 8) -> float:
+    """Samples/s under GPipe pipelining: bottleneck-stage-bound with the
+    (M + S - 1)/M bubble factor."""
+    stage_times = []
+    for i, (v, units) in enumerate(zip(path, partition)):
+        t = t_cmp(sum(u.cmp for u in units), v, cp) / cp.n_batch
+        if i < len(path) - 1 and units:
+            t += t_com(units[-1].com, v, cp) / cp.n_batch
+        stage_times.append(t)
+    bottleneck = max(stage_times) if stage_times else 1e9
+    bubble = (microbatches + len(path) - 1) / microbatches
+    return 1.0 / (bottleneck * bubble)

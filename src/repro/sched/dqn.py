@@ -1,0 +1,149 @@
+"""Double-DQN in pure JAX (paper §4.1.3 "DQN-based Pipeline Generation").
+
+Generic: an environment supplies (state, valid-action mask) vectors; the
+agent owns the online/target networks, replay buffer, and the double-DQN
+update (action selection by the online net, evaluation by the target —
+the paper names a "Double Q Network (DQN)-based scheduler").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import Adam
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    obs_dim: int
+    n_actions: int
+    hidden: int = 64
+    gamma: float = 0.98
+    lr: float = 1e-3
+    batch: int = 64
+    buffer: int = 20000
+    target_update: int = 200
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 3000
+
+
+def init_qnet(key, cfg: DQNConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    h = cfg.hidden
+    return {
+        "w1": jax.random.normal(ks[0], (cfg.obs_dim, h)) * cfg.obs_dim ** -0.5,
+        "b1": jnp.zeros((h,)),
+        "w2": jax.random.normal(ks[1], (h, h)) * h ** -0.5,
+        "b2": jnp.zeros((h,)),
+        "w3": jax.random.normal(ks[2], (h, cfg.n_actions)) * h ** -0.5,
+        "b3": jnp.zeros((cfg.n_actions,)),
+    }
+
+
+def q_values(p, obs):
+    x = jax.nn.relu(obs @ p["w1"] + p["b1"])
+    x = jax.nn.relu(x @ p["w2"] + p["b2"])
+    return x @ p["w3"] + p["b3"]
+
+
+class Replay:
+    def __init__(self, cfg: DQNConfig):
+        self.cfg = cfg
+        self.obs = np.zeros((cfg.buffer, cfg.obs_dim), np.float32)
+        self.act = np.zeros(cfg.buffer, np.int32)
+        self.rew = np.zeros(cfg.buffer, np.float32)
+        self.nxt = np.zeros((cfg.buffer, cfg.obs_dim), np.float32)
+        self.nxt_mask = np.zeros((cfg.buffer, cfg.n_actions), np.float32)
+        self.done = np.zeros(cfg.buffer, np.float32)
+        self.n = 0
+        self.i = 0
+
+    def add(self, obs, act, rew, nxt, nxt_mask, done):
+        i = self.i
+        self.obs[i], self.act[i], self.rew[i] = obs, act, rew
+        self.nxt[i], self.nxt_mask[i], self.done[i] = nxt, nxt_mask, done
+        self.i = (i + 1) % self.cfg.buffer
+        self.n = min(self.n + 1, self.cfg.buffer)
+
+    def sample(self, rng, batch):
+        idx = rng.integers(0, self.n, batch)
+        return (self.obs[idx], self.act[idx], self.rew[idx],
+                self.nxt[idx], self.nxt_mask[idx], self.done[idx])
+
+
+class DoubleDQN:
+    def __init__(self, cfg: DQNConfig, seed: int = 0):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(seed)
+        self.online = init_qnet(key, cfg)
+        self.target = jax.tree.map(jnp.copy, self.online)
+        self.opt = Adam(lr=cfg.lr, grad_clip=5.0)
+        self.opt_state = self.opt.init(self.online)
+        self.replay = Replay(cfg)
+        self.rng = np.random.default_rng(seed)
+        self.step_count = 0
+
+        @jax.jit
+        def _update(online, target, opt_state, batch):
+            obs, act, rew, nxt, nxt_mask, done = batch
+
+            def loss_fn(p):
+                q = q_values(p, obs)
+                q_sa = jnp.take_along_axis(q, act[:, None], axis=1)[:, 0]
+                # double-DQN target: online argmax, target value
+                q_next_online = q_values(p, nxt) + (nxt_mask - 1) * 1e9
+                a_star = jnp.argmax(q_next_online, axis=1)
+                q_next_t = q_values(target, nxt)
+                q_star = jnp.take_along_axis(q_next_t, a_star[:, None],
+                                             axis=1)[:, 0]
+                tgt = rew + self.cfg.gamma * (1 - done) * \
+                    jax.lax.stop_gradient(q_star)
+                return jnp.mean((q_sa - tgt) ** 2)
+
+            loss, grads = jax.value_and_grad(loss_fn)(online)
+            online, opt_state = self.opt.update(grads, opt_state, online)
+            return online, opt_state, loss
+
+        self._update = _update
+
+        @jax.jit
+        def _greedy(online, obs, mask):
+            q = q_values(online, obs) + (mask - 1) * 1e9
+            return jnp.argmax(q)
+
+        self._greedy = _greedy
+
+    def epsilon(self) -> float:
+        c = self.cfg
+        frac = min(self.step_count / c.eps_decay_steps, 1.0)
+        return c.eps_start + (c.eps_end - c.eps_start) * frac
+
+    def act(self, obs: np.ndarray, mask: np.ndarray,
+            explore: bool = True) -> int:
+        valid = np.flatnonzero(mask > 0)
+        if len(valid) == 0:
+            return 0
+        if explore and self.rng.random() < self.epsilon():
+            return int(self.rng.choice(valid))
+        return int(self._greedy(self.online, jnp.asarray(obs),
+                                jnp.asarray(mask)))
+
+    def record(self, *transition):
+        self.replay.add(*transition)
+
+    def learn(self) -> float:
+        self.step_count += 1
+        if self.replay.n < self.cfg.batch:
+            return 0.0
+        batch = self.replay.sample(self.rng, self.cfg.batch)
+        self.online, self.opt_state, loss = self._update(
+            self.online, self.target, self.opt_state,
+            tuple(map(jnp.asarray, batch)))
+        if self.step_count % self.cfg.target_update == 0:
+            self.target = jax.tree.map(jnp.copy, self.online)
+        return float(loss)

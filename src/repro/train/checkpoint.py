@@ -1,0 +1,52 @@
+"""Flat-file checkpointing (numpy .npz of path-flattened pytrees).
+
+Used by the training loop and by recovery's edge-aided backup when
+persistence across processes is wanted (EdgeBackup keeps snapshots in
+memory; this writes them to disk).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = _SEP.join(str(getattr(e, "key", getattr(e, "idx", e)))
+                        for e in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, __step__=np.asarray(step), **flat)
+
+
+def load(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as data:
+        step = int(data["__step__"])
+        flat = {k: data[k] for k in data.files if k != "__step__"}
+    paths = jax.tree_util.tree_leaves_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = _SEP.join(str(getattr(e, "key", getattr(e, "idx", e)))
+                        for e in p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: {arr.shape} != {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=getattr(leaf, "dtype",
+                                                           arr.dtype)))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

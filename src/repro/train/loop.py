@@ -1,0 +1,63 @@
+"""Host-side training loops.
+
+``train_loop`` drives any jitted (params, opt, batch) -> (params, opt,
+metrics) step with logging, periodic edge backup, and checkpointing.
+``fl_loop`` drives hierarchical FedAvg rounds over per-client datasets
+(paper Fig. 1 training procedure) using core/fedavg.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterator, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.recovery.backup import EdgeBackup
+
+
+def train_loop(step_fn: Callable, params, opt_state,
+               batch_iter: Iterator, *, steps: int,
+               log_every: int = 10,
+               backup: Optional[EdgeBackup] = None,
+               checkpoint_path: Optional[str] = None,
+               checkpoint_every: int = 0,
+               log_fn: Callable = print) -> Dict:
+    hist = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(batch_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if backup is not None:
+            backup.maybe_backup(i, params)
+        if checkpoint_path and checkpoint_every and \
+                (i + 1) % checkpoint_every == 0:
+            from repro.train.checkpoint import save
+            save(checkpoint_path, params, step=i + 1)
+        if (i + 1) % log_every == 0 or i == 0:
+            m = {k: float(v) for k, v in metrics.items()
+                 if np.ndim(v) == 0}
+            hist.append(dict(m, step=i + 1))
+            rate = (i + 1) / (time.time() - t0)
+            log_fn(f"[train] step {i+1:5d} "
+                   + " ".join(f"{k}={v:.4f}" for k, v in m.items())
+                   + f" ({rate:.2f} it/s)")
+    return {"params": params, "opt_state": opt_state, "history": hist}
+
+
+def fl_loop(fl_round: Callable, client_params, client_opt,
+            round_batches_fn: Callable, *, rounds: int,
+            log_every: int = 1, log_fn: Callable = print) -> Dict:
+    """round_batches_fn(round_idx) -> client-stacked batches [C, E, B, ...]."""
+    hist = []
+    for r in range(rounds):
+        batches = round_batches_fn(r)
+        client_params, client_opt, metrics = fl_round(client_params,
+                                                      client_opt, batches)
+        if (r + 1) % log_every == 0:
+            m = {k: float(np.mean(v)) for k, v in metrics.items()}
+            hist.append(dict(m, round=r + 1))
+            log_fn(f"[fl] round {r+1:4d} "
+                   + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
+    return {"client_params": client_params, "client_opt": client_opt,
+            "history": hist}

@@ -1,0 +1,72 @@
+"""Pure-pytree optimizers (no optax dependency): Adam/AdamW + schedules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         m=jax.tree.map(zeros, params),
+                         v=jax.tree.map(zeros, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mu, g: b1 * mu + (1 - b1) * g, state.m, grads)
+        v = jax.tree.map(lambda nu, g: b2 * nu + (1 - b2) * g * g, state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, mu, nu):
+            u = (mu / bc1) / (jnp.sqrt(nu / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamState(step=step, m=m, v=v)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

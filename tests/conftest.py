@@ -1,0 +1,34 @@
+"""Test fixtures.
+
+8 forced host devices for the mesh/pipeline/FL tests (NOT the 512-device
+production flag — that is reserved for launch/dryrun.py, which sets it
+itself). Model smoke tests are device-count agnostic.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8"
+                           ).strip()
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+@pytest.fixture(scope="session")
+def mesh24():
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(data=2, model=4)
+
+
+@pytest.fixture(scope="session")
+def mesh22():
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(data=2, model=2)
+
+
+@pytest.fixture(scope="session")
+def mesh222():
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(data=2, model=2, pod=2)

@@ -1,0 +1,125 @@
+"""Data generator non-IID properties + LoRA/distillation behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.partition import dirichlet_mixtures, fleet_datasets
+from repro.data.pipeline import Prefetcher, batches, client_round_batches
+from repro.data.synthetic import DrivingDataConfig, TownWorld
+from repro.distill.lora import (LoRAConfig, init_lora, lora_param_count,
+                                merge_lora)
+
+DCFG = DrivingDataConfig(feature_dim=32, patches=8, n_towns=3, seed=1)
+
+
+def test_dirichlet_mixtures_stochastic():
+    mix = dirichlet_mixtures(10, 4, beta=0.5, seed=0)
+    assert mix.shape == (10, 4)
+    assert np.allclose(mix.sum(-1), 1.0)
+
+
+def test_light_state_learnable_within_town():
+    """The traffic-light label is a linear readout of features — a ridge
+    classifier fit on town-0 data beats chance on town 0."""
+    world = TownWorld(DCFG)
+    rng = np.random.default_rng(0)
+    tr = world.sample(0, 512, rng)
+    te = world.sample(0, 256, rng)
+    X = tr["rgb"].mean(1)
+    Y = np.eye(DCFG.num_light_classes)[tr["light"]]
+    W = np.linalg.solve(X.T @ X + 1e-1 * np.eye(X.shape[1]), X.T @ Y)
+    acc = (te["rgb"].mean(1) @ W).argmax(1) == te["light"]
+    assert acc.mean() > 0.5
+
+
+def test_town_shift_hurts_transfer():
+    """The same classifier transfers worse to a rotated town (the non-IID
+    property FL exploits)."""
+    world = TownWorld(DCFG)
+    rng = np.random.default_rng(0)
+    tr = world.sample(0, 512, rng)
+    X = tr["rgb"].mean(1)
+    Y = np.eye(DCFG.num_light_classes)[tr["light"]]
+    W = np.linalg.solve(X.T @ X + 1e-1 * np.eye(X.shape[1]), X.T @ Y)
+    same = world.sample(0, 256, rng)
+    other = world.sample(2, 256, rng)
+    acc_same = ((same["rgb"].mean(1) @ W).argmax(1) == same["light"]).mean()
+    acc_other = ((other["rgb"].mean(1) @ W).argmax(1)
+                 == other["light"]).mean()
+    assert acc_same > acc_other
+
+
+def test_red_light_stops_waypoints():
+    world = TownWorld(DCFG)
+    rng = np.random.default_rng(0)
+    s = world.sample(1, 512, rng)
+    red = s["waypoints"][s["light"] == 0]
+    green = s["waypoints"][s["light"] != 0]
+    if len(red) and len(green):
+        assert np.linalg.norm(red[:, -1], axis=-1).mean() < \
+            np.linalg.norm(green[:, -1], axis=-1).mean()
+
+
+def test_batches_cover_epoch():
+    data = {"x": np.arange(10), "y": np.arange(10) * 2}
+    got = list(batches(data, 3, epochs=1))
+    assert len(got) == 3
+    seen = np.concatenate([b["x"] for b in got])
+    assert len(np.unique(seen)) == 9
+
+
+def test_round_batches_shape():
+    ds = fleet_datasets(DCFG, 3, 32, beta=0.4)
+    rb = client_round_batches(ds, local_steps=2, batch_size=4)
+    assert rb["rgb"].shape[:3] == (3, 2, 4)
+
+
+def test_prefetcher_order():
+    out = list(Prefetcher(iter(range(7))))
+    assert out == list(range(7))
+
+
+# ------------------------------------------------------------------ lora ---
+def test_lora_zero_init_is_identity():
+    params = {"attn": {"wq": jnp.ones((8, 8)), "scale": jnp.ones(8)}}
+    cfg = LoRAConfig(rank=2)
+    lora = init_lora(jax.random.PRNGKey(0), params, cfg)
+    merged = merge_lora(params, lora, cfg)
+    assert jnp.allclose(merged["attn"]["wq"], params["attn"]["wq"])
+    assert lora["attn"]["scale"] is None
+
+
+def test_lora_param_fraction_small():
+    from repro.configs import get_config
+    from repro.configs.common import reduced
+    from repro.models import build_model
+    cfg = reduced(get_config("flad_adllm"))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    lora = init_lora(jax.random.PRNGKey(1), params, LoRAConfig(rank=4))
+    frac = lora_param_count(lora) / sum(x.size
+                                        for x in jax.tree.leaves(params))
+    assert frac < 0.1       # paper §2.5: 0.1–1% at full scale
+
+
+def test_distill_reduces_gap():
+    from repro.configs import get_config
+    from repro.configs.common import reduced
+    from repro.distill.celladapt import (adllm_config, init_adllm,
+                                         make_distill_step)
+    base = reduced(get_config("flad_adllm"))
+    tcfg = adllm_config(base, feature_dim=16, feature_tokens=4,
+                        num_waypoints=4)
+    scfg = tcfg.replace(num_layers=1, d_ff=64)
+    key = jax.random.PRNGKey(0)
+    tp = init_adllm(key, tcfg)
+    sp = init_adllm(jax.random.PRNGKey(1), scfg)
+    step, opt = make_distill_step(tcfg, scfg, lr=2e-3)
+    ost = opt.init(sp)
+    batch = {"features": jax.random.normal(key, (4, 4, 16)),
+             "tokens": jax.random.randint(key, (4, 8), 0, 100)}
+    first = None
+    for _ in range(8):
+        sp, ost, loss = step(sp, ost, tp, batch)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first

@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode, shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, dtype, k):
+    x = jax.random.normal(k, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,d,causal,window",
+    [
+        (2, 4, 2, 128, 128, 64, True, None),      # GQA causal
+        (1, 8, 8, 128, 128, 32, True, 96),        # sliding window
+        (2, 2, 1, 64, 192, 64, False, None),      # cross-ish, MQA
+        (1, 4, 4, 256, 256, 128, True, None),     # MXU-aligned d
+    ])
+def test_flash_attention(dtype, b, hq, hkv, sq, skv, d, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = _rand((b, hq, sq, d), dtype, ks[0])
+    k = _rand((b, hkv, skv, d), dtype, ks[1])
+    v = _rand((b, hkv, skv, d), dtype, ks[2])
+    off = skv - sq
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              q_offset=off, block_q=64, block_k=64,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   q_offset=off)
+    tol = 5e-6 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,nh,s,dh,chunk", [
+    (2, 3, 128, 32, 32),
+    (1, 2, 64, 64, 16),
+    (1, 1, 96, 16, 96),   # single chunk
+])
+def test_mlstm_chunked(dtype, b, nh, s, dh, chunk):
+    ks = jax.random.split(KEY, 5)
+    q = _rand((b, nh, s, dh), dtype, ks[0])
+    k = (_rand((b, nh, s, dh), dtype, ks[1]).astype(jnp.float32)
+         * dh ** -0.5).astype(dtype)
+    v = _rand((b, nh, s, dh), dtype, ks[2])
+    ig = _rand((b, nh, s), jnp.float32, ks[3])
+    lf = -jax.nn.softplus(-_rand((b, nh, s), jnp.float32, ks[4]) - 2.0)
+    h_got, (C1, n1, m1) = ops.mlstm_chunked(q, k, v, ig, lf, chunk=chunk,
+                                            interpret=True)
+    h_ref, (C2, n2, m2) = ref.mlstm_chunked_ref(q, k, v, ig, lf)
+    tol = 5e-4 if dtype == jnp.float32 else 5e-2
+    assert float(jnp.max(jnp.abs(h_got.astype(jnp.float32)
+                                 - h_ref.astype(jnp.float32)))) < tol
+    assert float(jnp.max(jnp.abs(C1 - C2))) < tol
+    assert float(jnp.max(jnp.abs(m1 - m2))) < 1e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,r,scale", [
+    (128, 256, 192, 8, 0.5),
+    (64, 512, 64, 16, 2.0),
+    (256, 128, 128, 4, 1.0),
+])
+def test_lora_matmul(dtype, m, k, n, r, scale):
+    ks = jax.random.split(KEY, 4)
+    x = _rand((m, k), dtype, ks[0])
+    w = _rand((k, n), dtype, ks[1])
+    a = _rand((k, r), dtype, ks[2])
+    b = _rand((r, n), dtype, ks[3])
+    got = ops.lora_matmul(x, w, a, b, scale=scale, block_m=64, block_n=64,
+                          block_k=64, interpret=True)
+    want = ref.lora_matmul_ref(x, w, a, b, scale=scale)
+    tol = 1e-3 if dtype == jnp.float32 else 0.25
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32)))) < tol
+
+
+def test_flash_attention_matches_model_attention():
+    """The kernel agrees with the model's chunked XLA path."""
+    from repro.models import blocks as B
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 4, 128, 64))
+    k = jax.random.normal(ks[1], (2, 2, 128, 64))
+    v = jax.random.normal(ks[2], (2, 2, 128, 64))
+    pos = jnp.arange(128)
+    xla = B.chunked_mha(q, k, v, scale=64 ** -0.5, q_pos=pos, kv_pos=pos,
+                        causal=True, window=None, kv_chunk=64)
+    pall = ops.flash_attention(q, k, v, causal=True, block_q=64,
+                               block_k=64, interpret=True)
+    assert float(jnp.max(jnp.abs(xla - pall))) < 5e-5

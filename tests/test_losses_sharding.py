@@ -1,0 +1,94 @@
+"""chunked CE oracle equivalence + sharding-rule properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train.losses import chunked_ce, head_weight
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 4), s=st.sampled_from([8, 12, 32]),
+       d=st.sampled_from([16, 32]), v=st.sampled_from([50, 128]),
+       cs=st.sampled_from([4, 8, 1024]))
+def test_chunked_ce_matches_naive(b, s, d, v, cs):
+    key = jax.random.PRNGKey(b * 100 + s)
+    x = jax.random.normal(key, (b, s, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, v))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, v)
+    loss, metrics = chunked_ce(x, w, labels, seq_chunk=cs)
+    logits = x @ w
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    naive = -jnp.take_along_axis(logp, labels[..., None], -1).mean()
+    assert float(jnp.abs(loss - naive)) < 1e-4
+
+
+def test_chunked_ce_grads_match_naive():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 16, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 33))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, 33)
+
+    g1 = jax.grad(lambda w: chunked_ce(x, w, labels, seq_chunk=4)[0])(w)
+    g2 = jax.grad(lambda w: -jnp.take_along_axis(
+        jax.nn.log_softmax(x @ w, -1), labels[..., None], -1).mean())(w)
+    assert float(jnp.max(jnp.abs(g1 - g2))) < 1e-5
+
+
+def test_head_weight_tied_vs_untied():
+    p_untied = {"head": {"w": jnp.ones((4, 7))},
+                "embed": {"table": jnp.zeros((7, 4))}}
+    assert head_weight(p_untied).shape == (4, 7)
+    p_tied = {"embed": {"table": jnp.ones((7, 4))}}
+    assert head_weight(p_tied).shape == (4, 7)
+
+
+# ------------------------------------------------------------- sharding ----
+def test_param_specs_divisibility(mesh24):
+    """Every sharded dim divides its mesh axis (hypothesis-style sweep over
+    real model shapes)."""
+    from repro.configs import ARCH_IDS, get_config
+    from repro.core import sharding as shd
+    from repro.core.steps import abstract_params
+
+    for arch in ARCH_IDS[:6]:
+        cfg = get_config(arch)
+        shapes = abstract_params(cfg)
+        specs = shd.param_specs(mesh24, shapes)
+
+        def check(path, leaf, spec):
+            for dim, ax in zip(leaf.shape, spec):
+                if ax is None:
+                    continue
+                size = mesh24.shape[ax] if isinstance(ax, str) else \
+                    int(jnp.prod(jnp.asarray([mesh24.shape[a] for a in ax])))
+                assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+        jax.tree_util.tree_map_with_path(
+            lambda p, l, s: check(p, l, s), shapes, specs)
+
+
+def test_batch_specs_shard_leading(mesh24):
+    from repro.core import sharding as shd
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+             "odd": jax.ShapeDtypeStruct((3, 4), jnp.float32)}
+    specs = shd.batch_specs(mesh24, batch)
+    assert specs["tokens"][0] in ("data", ("data",))
+    assert len(specs["odd"]) == 0 or specs["odd"][0] is None
+
+
+def test_state_specs_kv(mesh24):
+    from repro.core import sharding as shd
+    st = {"caches": {"k": jax.ShapeDtypeStruct((4, 2, 8, 64, 16),
+                                               jnp.bfloat16),
+                     "pos": jax.ShapeDtypeStruct((64,), jnp.int32)}}
+    specs = shd.state_specs_sharding(mesh24, st)
+    k_spec = specs["caches"]["k"]
+    assert k_spec[1] in ("data", ("data",))  # batch dim (after stack dim)
+    assert k_spec[3] == "model"              # cache sequence dim
+
+
+def test_act_rules_constrain_noop_without_rules():
+    from repro.core.act_sharding import constrain
+    x = jnp.ones((4, 8, 2))
+    assert constrain(x) is x

@@ -1,0 +1,115 @@
+"""FHDP pipeline: equivalence with the single-device model, rotation,
+template mechanics, FedAvg round behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ShapeConfig
+from repro.configs import get_config
+from repro.configs.common import concrete_batch, reduced
+from repro.core import pipeline as pl
+from repro.core.fhdp import init_fhdp, make_fl_pipeline_round
+from repro.models import build_model
+
+SHAPE = ShapeConfig("t", 64, 8, "train")
+ARCHS = ["qwen3_14b", "qwen3_moe_30b_a3b", "xlstm_350m", "hymba_1_5b",
+         "seamless_m4t_large_v2", "internvl2_2b", "flad_vision"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_pipeline_matches_reference_loss(arch, mesh24):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = concrete_batch(cfg, SHAPE, key)
+    ref_loss, _ = model.loss(params, batch, remat=False)
+
+    step, h = pl.make_fhdp_train_step(cfg, SHAPE, mesh24)
+    pp = pl.stage_params_from(params, cfg, h["templates"])
+    opt = pl.zero2_init(pp, mesh24.shape["data"])
+    _, _, metrics = jax.jit(step)(pp, opt, batch)
+    rel = abs(float(metrics["loss"]) - float(ref_loss)) \
+        / max(abs(float(ref_loss)), 1e-6)
+    assert rel < 2e-2, (arch, float(metrics["loss"]), float(ref_loss))
+
+
+def test_training_descends(mesh24):
+    cfg = reduced(get_config("flad_vision"))
+    key = jax.random.PRNGKey(0)
+    step, h = pl.make_fhdp_train_step(cfg, SHAPE, mesh24,
+                                      learning_rate=2e-3)
+    pp, opt, _ = init_fhdp(cfg, mesh24, key)
+    jstep = jax.jit(step)
+    batch = concrete_batch(cfg, SHAPE, key)
+    first = None
+    for _ in range(8):
+        pp, opt, m = jstep(pp, opt, batch)
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < first
+
+
+def test_stage_merge_roundtrip():
+    cfg = reduced(get_config("qwen3_14b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tmpl = pl.make_templates(cfg, 4)
+    pp = pl.stage_params_from(params, cfg, tmpl)
+    merged = pl.merge_stage_params(pp, tmpl)
+    for (p1, l1), (p2, l2) in zip(
+            jax.tree_util.tree_leaves_with_path(params),
+            jax.tree_util.tree_leaves_with_path(merged)):
+        assert jnp.array_equal(l1, l2), p1
+
+
+def test_unequal_templates_match(mesh24):
+    """A SWIFT-style unequal split computes the same loss."""
+    cfg = reduced(get_config("qwen3_14b"))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = concrete_batch(cfg, SHAPE, key)
+    ref_loss, _ = model.loss(params, batch, remat=False)
+    tmpl = {"blocks": (2, 0, 0, 0)}     # all layers on stage 0
+    step, h = pl.make_fhdp_train_step(cfg, SHAPE, mesh24, templates=tmpl)
+    pp = pl.stage_params_from(params, cfg, tmpl)
+    opt = pl.zero2_init(pp, mesh24.shape["data"])
+    _, _, metrics = jax.jit(step)(pp, opt, batch)
+    assert abs(float(metrics["loss"]) - float(ref_loss)) < 1e-2
+
+
+def test_rotation_preserves_model():
+    """Rolling stages then unrolling yields identical parameters."""
+    cfg = reduced(get_config("qwen3_14b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tmpl = pl.make_templates(cfg, 4)
+    pp = pl.stage_params_from(params, cfg, tmpl)
+    rolled = dict(pp, stacks=pl.rotate_stages(pp["stacks"], 1),
+                  masks=pl.rotate_stages(pp["masks"], 1))
+    back = dict(rolled, stacks=pl.rotate_stages(rolled["stacks"], -1),
+                masks=pl.rotate_stages(rolled["masks"], -1))
+    for a, b in zip(jax.tree.leaves(pp), jax.tree.leaves(back)):
+        assert jnp.array_equal(a, b)
+
+
+def test_fl_pipeline_round_runs(mesh24):
+    cfg = reduced(get_config("flad_vision"))
+    key = jax.random.PRNGKey(0)
+    fl_round, h = make_fl_pipeline_round(cfg, SHAPE, mesh24, local_steps=2,
+                                         learning_rate=1e-3)
+    pp, opt, _ = init_fhdp(cfg, mesh24, key, fed_sgd=False)
+    b1 = concrete_batch(cfg, SHAPE, key)
+    b2 = concrete_batch(cfg, SHAPE, jax.random.PRNGKey(1))
+    batches = jax.tree.map(lambda x, y: jnp.stack([x, y]), b1, b2)
+    pp, opt, metrics = jax.jit(fl_round)(pp, opt, batches)
+    assert jnp.isfinite(metrics["loss"])
+
+
+def test_balanced_template_properties():
+    for L in (1, 3, 7, 24, 40, 64):
+        for S in (1, 2, 4, 16):
+            t = pl.balanced_template(L, S)
+            assert sum(t) == L and len(t) == S
+            assert max(t) - min(t) <= 1

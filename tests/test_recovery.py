@@ -1,0 +1,89 @@
+"""Recovery: template pregeneration, diff-based redistribution, backup."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.recovery.backup import EdgeBackup
+from repro.recovery.failures import sample_failures
+from repro.recovery.recover import recover, run_failure_sequence
+from repro.recovery.templates import (full_redistribution_bytes,
+                                      pregenerate, redistribution_bytes)
+from repro.sched.costmodel import (CostParams, JETSON_AGX, JETSON_NANO,
+                                   Unit, make_fleet)
+
+CP = CostParams()
+
+
+def _setup(n_units=12, cap=0.8e9):
+    rng = np.random.default_rng(0)
+    units = [Unit(f"u{i}", cap, 1e12, 1e6) for i in range(n_units)]
+    fleet = make_fleet([dict(JETSON_NANO)] * 4 + [dict(JETSON_AGX)] * 2,
+                       stb=rng.uniform(0, 1, 6),
+                       dwl=rng.uniform(600, 3600, 6))
+    return fleet, units
+
+
+def test_pregenerate_covers_all_departures():
+    fleet, units = _setup()
+    ts = pregenerate(fleet, units, CP)
+    assert set(ts.on_departure) == {v.vid for v in fleet}
+    for pipe in ts.on_departure.values():
+        assert pipe is not None
+
+
+def test_diff_moves_less_than_full():
+    fleet, units = _setup()
+    ts = pregenerate(fleet, units, CP)
+    for vid, pipe in ts.on_departure.items():
+        assert redistribution_bytes(ts.active, pipe) <= \
+            full_redistribution_bytes(pipe) + 1e-6
+
+
+def test_recovery_ordering():
+    """template < elastic < relaunch (paper Fig. 5b: 5s < 30s < 50s)."""
+    fleet, units = _setup()
+    ts = pregenerate(fleet, units, CP)
+    times = {s: recover(s, ts, fleet[0].vid, fleet, units, CP).seconds
+             for s in ("template", "elastic", "relaunch")}
+    assert times["template"] < times["elastic"] < times["relaunch"]
+    assert times["relaunch"] / times["template"] > 3
+
+
+def test_failure_sequence_template_fastest():
+    fleet, units = _setup()
+    fails = sample_failures(fleet, 7200, seed=3)
+    res = {s: run_failure_sequence(fleet, units, fails, s, CP)
+           for s in ("template", "relaunch")}
+    assert res["template"]["mean_recovery_s"] < \
+        res["relaunch"]["mean_recovery_s"]
+
+
+def test_edge_backup_roundtrip():
+    bk = EdgeBackup(interval=2)
+    tree = {"w": jnp.arange(6.0), "b": {"x": jnp.ones((2, 2))}}
+    assert bk.maybe_backup(0, tree)
+    assert not bk.maybe_backup(1, tree)
+    got, step = bk.restore()
+    assert step == 0
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restage_after_failure(mesh24):
+    from repro.configs import get_config
+    from repro.configs.common import reduced
+    from repro.core import pipeline as pl
+    from repro.models import build_model
+    from repro.recovery.backup import restage
+
+    cfg = reduced(get_config("flad_vision"))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    t_old = {"blocks": (1, 1, 0, 0)}
+    t_new = {"blocks": (2, 0, 0, 0)}
+    pp = pl.stage_params_from(params, cfg, t_old)
+    merged = pl.merge_stage_params(pp, t_old)
+    pp2 = restage(merged, cfg, t_new, mesh24)
+    merged2 = pl.merge_stage_params(pp2, t_new)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(merged2)):
+        assert jnp.array_equal(a, b)

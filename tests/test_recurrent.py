@@ -1,0 +1,87 @@
+"""Chunked recurrent cells vs step-by-step references (hypothesis sweeps)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.common import reduced
+from repro.models import recurrent as R
+
+
+@pytest.fixture(scope="module")
+def xcfg():
+    return reduced(get_config("xlstm_350m"))
+
+
+@pytest.fixture(scope="module")
+def hcfg():
+    return reduced(get_config("hymba_1_5b"))
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([16, 48, 96]), chunk=st.sampled_from([8, 16, 256]),
+       seed=st.integers(0, 5))
+def test_mlstm_chunked_matches_stepwise(s, chunk, seed):
+    cfg = reduced(get_config("xlstm_350m"))
+    key = jax.random.PRNGKey(seed)
+    p = R.init_mlstm(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 10),
+                          (2, s, cfg.d_model), jnp.float32)
+    st_ = R.init_mlstm_state(cfg, 2)
+    ys = []
+    ref_state = st_
+    for t in range(s):
+        y, ref_state = R.apply_mlstm_step(p, x[:, t:t + 1], ref_state, cfg)
+        ys.append(y)
+    ref = jnp.concatenate(ys, axis=1)
+    got, fin = R.apply_mlstm_seq(p, x, cfg, chunk=chunk)
+    assert float(jnp.max(jnp.abs(got - ref))) < 5e-5
+    assert float(jnp.max(jnp.abs(fin["C"] - ref_state["C"]))) < 5e-6
+
+
+@settings(max_examples=6, deadline=None)
+@given(s=st.sampled_from([16, 64]), chunk=st.sampled_from([8, 64]),
+       seed=st.integers(0, 3))
+def test_mamba_chunked_matches_stepwise(s, chunk, seed):
+    cfg = reduced(get_config("hymba_1_5b"))
+    key = jax.random.PRNGKey(seed)
+    p = R.init_mamba(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 20),
+                          (2, s, cfg.d_model), jnp.float32)
+    stt = R.init_mamba_state(cfg, 2)
+    ys = []
+    for t in range(s):
+        y, stt = R.apply_mamba_step(p, x[:, t:t + 1], stt, cfg)
+        ys.append(y)
+    ref = jnp.concatenate(ys, axis=1)
+    got, fin = R.apply_mamba_seq(p, x, cfg, chunk=chunk)
+    assert float(jnp.max(jnp.abs(got - ref))) < 5e-5
+    assert float(jnp.max(jnp.abs(fin["h"] - stt["h"]))) < 1e-6
+
+
+def test_slstm_seq_matches_stepwise(xcfg):
+    key = jax.random.PRNGKey(0)
+    p = R.init_slstm(key, xcfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, xcfg.d_model))
+    stt = R.init_slstm_state(xcfg, 2)
+    ys = []
+    for t in range(32):
+        y, stt = R.apply_slstm_step(p, x[:, t:t + 1], stt, xcfg)
+        ys.append(y)
+    ref = jnp.concatenate(ys, axis=1)
+    got, fin = R.apply_slstm_seq(p, x, xcfg, chunk=8)
+    assert float(jnp.max(jnp.abs(got - ref))) < 5e-5
+    assert float(jnp.max(jnp.abs(fin["c"] - stt["c"]))) < 1e-4
+
+
+def test_mlstm_state_carryover(xcfg):
+    """Processing [a; b] equals processing a then b with carried state."""
+    key = jax.random.PRNGKey(0)
+    p = R.init_mlstm(key, xcfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 64, xcfg.d_model))
+    full, _ = R.apply_mlstm_seq(p, x, xcfg, chunk=16)
+    h1, st1 = R.apply_mlstm_seq(p, x[:, :32], xcfg, chunk=16)
+    h2, _ = R.apply_mlstm_seq(p, x[:, 32:], xcfg, state=st1, chunk=16)
+    err = jnp.max(jnp.abs(jnp.concatenate([h1, h2], 1) - full))
+    assert float(err) < 5e-5

@@ -1,0 +1,170 @@
+"""SWIFT / cost model / clustering / mobility — incl. property-based
+invariants with hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.sched import swift as SW
+from repro.sched.clustering import (TrainingTask, availability_split,
+                                    cluster_fleet, form_cluster)
+from repro.sched.costmodel import (CostParams, JETSON_AGX, JETSON_NANO,
+                                   Unit, Vehicle, make_fleet, model_units,
+                                   partition_feasible, path_time,
+                                   vision_encoder_units)
+from repro.sched.graph import vision_encoder_graph
+from repro.sched.mobility import (future_distribution, make_patterns,
+                                  pattern_posterior, sample_trajectory,
+                                  stability_score)
+
+CP = CostParams()
+
+
+def _units(n, cap, cmp_=1e12, com=1e6):
+    return [Unit(f"u{i}", cap, cmp_, com) for i in range(n)]
+
+
+def _fleet(mems, stb=None):
+    return make_fleet([dict(cmp=1e12, mem=m, com=0.1e9) for m in mems],
+                      stb=stb or [1.0] * len(mems))
+
+
+# ------------------------------------------------------------- properties --
+@settings(max_examples=60, deadline=None)
+@given(
+    n_units=st.integers(1, 24),
+    cap=st.floats(0.1e9, 2e9),
+    mems=st.lists(st.floats(0.5e9, 16e9), min_size=2, max_size=8),
+)
+def test_greedy_pipeline_respects_memory(n_units, cap, mems):
+    units = _units(n_units, cap)
+    fleet = _fleet(mems)
+    pipe = SW.phase1_greedy(fleet, units, CP)
+    if pipe is None:     # infeasible is a legal outcome
+        assert sum(v.mem for v in fleet) < n_units * cap or \
+            max(v.mem for v in fleet) < cap or True
+        return
+    # c1: complete partition; c2: memory; c4: no repeated vehicles;
+    # c5: disjoint partitions (by construction of contiguous ranges)
+    assert sum(len(p) for p in pipe.partition) == n_units
+    assert partition_feasible(pipe.path, pipe.partition)
+    vids = [v.vid for v in pipe.path]
+    assert len(vids) == len(set(vids))
+    assert pipe.time == pytest.approx(
+        path_time(pipe.path, pipe.partition, CP))
+
+
+@settings(max_examples=40, deadline=None)
+@given(mems=st.lists(st.floats(1e9, 32e9), min_size=2, max_size=6),
+       stb=st.lists(st.floats(0, 1), min_size=6, max_size=6))
+def test_phase1_orders_by_stability(mems, stb):
+    stb = stb[:len(mems)]
+    fleet = _fleet(mems, stb=stb)
+    units = _units(8, 0.4e9)
+    pipe = SW.phase1_greedy(fleet, units, CP)
+    if pipe is None or len(pipe.path) < 2:
+        return
+    s = [v.stb for v in pipe.path]
+    assert all(a >= b for a, b in zip(s, s[1:]))
+
+
+def test_swift_beats_or_matches_greedy_when_feasible():
+    rng = np.random.default_rng(3)
+    units = _units(12, 0.9e9, cmp_=2e12, com=50e6)
+    fleet = make_fleet(
+        [dict(cmp=rng.uniform(0.3, 4) * 1e12, mem=rng.uniform(2, 9) * 1e9,
+              com=0.1e9) for _ in range(6)],
+        stb=rng.uniform(0, 1, 6))
+    res = SW.swift(fleet, units, cp=CP)
+    assert res.initial is not None
+    assert len(res.essential) >= len(fleet) - 1
+    for pipe in res.essential.values():
+        assert partition_feasible(pipe.path, pipe.partition)
+        assert sum(len(p) for p in pipe.partition) == len(units)
+    # phase 1 is fast (quick start property, Fig. 5a)
+    assert res.phase1_s < 0.5
+
+
+def test_greedy_fails_where_capacity_tight():
+    """Paper Fig. 6: the single-resource baseline goes infeasible when the
+    model outgrows the in-order prefix of vehicle memory."""
+    units = _units(10, 1.0e9)
+    # arrival order puts tiny vehicles first
+    fleet = _fleet([0.5e9, 0.5e9, 0.5e9])
+    assert SW.greedy_matching(fleet, units, CP) is None
+
+
+def test_vision_units_topo_order():
+    cfg = get_config("flad_vision")
+    g = vision_encoder_graph(cfg)
+    order = [n.name for n in g.topo_sorted()]
+    assert order.index("rgb_backbone") < order.index("enc0")
+    assert order.index(f"enc{cfg.num_layers-1}") < order.index("decoder")
+    units = vision_encoder_units(cfg)
+    assert len(units) == cfg.num_layers + 3
+
+
+def test_model_units_match_param_scale():
+    cfg = get_config("qwen3_14b")
+    units = model_units(cfg, seq_len=4096)
+    total_cap = sum(u.cap for u in units)
+    # ~10 bytes/param training state over the block params
+    assert total_cap == pytest.approx(
+        10 * (cfg.param_count() - 2 * cfg.vocab_size * cfg.d_model
+              - cfg.d_model), rel=0.15)
+
+
+# ------------------------------------------------------------- clustering --
+def test_availability_split_eq2():
+    task = TrainingTask(m_cap=10e9, m_cmp=1e15, e_req=1)
+    rich = Vehicle(0, cmp=1e15, mem=32e9, com=1e9, dwl=10.0)
+    poor = Vehicle(1, cmp=1e12, mem=4e9, com=1e9, dwl=200.0)
+    gone = Vehicle(2, cmp=1e12, mem=4e9, com=1e9, dwl=1.0)
+    rs, rl, out = availability_split([rich, poor, gone], task)
+    assert [v.vid for v in rs] == [0]
+    assert [v.vid for v in rl] == [1]
+    assert [v.vid for v in out] == [2]
+
+
+def test_form_cluster_meets_constraints():
+    task = TrainingTask(m_cap=10e9, m_cmp=1e13, e_req=1)
+    seed = Vehicle(0, 1e12, 4e9, 1e9, stb=0.9, dwl=600)
+    nbrs = [Vehicle(i, 1e12, 4e9, 1e9, stb=1 - 0.1 * i, dwl=600)
+            for i in range(1, 6)]
+    clu = form_cluster(seed, nbrs, task)
+    assert clu is not None
+    assert sum(v.mem for v in clu) > task.m_cap
+
+
+def test_cluster_fleet_covers():
+    task = TrainingTask(m_cap=10e9, m_cmp=1e13, e_req=1)
+    vehicles = [Vehicle(i, 1e12, 4e9, 1e9, stb=np.random.rand(), dwl=600)
+                for i in range(9)]
+    clusters, leftover = cluster_fleet(vehicles, task)
+    seen = [v.vid for c in clusters for v in c] + [v.vid for v in leftover]
+    assert sorted(seen) == list(range(9))
+
+
+# --------------------------------------------------------------- mobility --
+def test_dtmc_rows_stochastic():
+    world = make_patterns(6, 3, seed=0)
+    assert np.allclose(world.patterns.sum(-1), 1.0, atol=1e-9)
+
+
+def test_future_distribution_normalized():
+    world = make_patterns(5, 2, seed=1)
+    rng = np.random.default_rng(0)
+    hist = sample_trajectory(world, 0, 7, 4, rng).tolist()
+    fut = future_distribution(world, hist, horizon=5)
+    assert np.allclose(fut.sum(-1), 1.0, atol=1e-8)
+    post = pattern_posterior(world, hist)
+    assert post.sum() == pytest.approx(1.0)
+
+
+def test_stability_higher_for_co_moving():
+    world = make_patterns(8, 2, seed=2)
+    rng = np.random.default_rng(1)
+    a = sample_trajectory(world, 0, 9, 5, rng).tolist()
+    b = sample_trajectory(world, 0, 10, 5, rng).tolist()      # same pattern
+    c = sample_trajectory(world, 1, 54, 5, rng).tolist()      # far + diff
+    assert stability_score(world, a, b, 5) > stability_score(world, a, c, 5)
