@@ -1,10 +1,31 @@
-"""Shared benchmark utilities (timing, CSV emission)."""
+"""Shared benchmark utilities (timing, CSV emission, session setup).
+
+``bench_session`` is the single place benchmarks stand up FLAD work — a
+thin veneer over :class:`repro.api.Session` so individual benchmark
+modules carry no mesh/strategy wiring of their own.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable, Iterable
+from typing import Callable
 
 import jax
+
+
+def bench_session(arch: str = "flad-vision", *,
+                  mesh=(4, 2),
+                  shape=None,
+                  strategy: str = "tensor",
+                  learning_rate: float = 1e-3,
+                  **strategy_options):
+    """Thin veneer over :class:`repro.api.Session` so benchmark modules
+    carry no wiring of their own. Bench defaults differ from Session's:
+    mesh (4, 2) = 4 FL clients x 2 pipeline ranks (the paper's testbed
+    scale) and strategy ``tensor`` (the no-communication baseline most
+    benchmarks compare against)."""
+    from repro.api import Session
+    return Session(arch, shape=shape, mesh=mesh, strategy=strategy,
+                   learning_rate=learning_rate, **strategy_options)
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

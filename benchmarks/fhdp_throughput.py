@@ -7,23 +7,18 @@ per-device stage memory footprint, and per-boundary activation volume
 (Table 2's communication characteristics).
 
 Claims reproduced: FHDP >= ~70% of standalone throughput (paper: 75%) and
-beats the random split on both memory and throughput."""
+beats the random split on both memory and throughput.
+
+All model/mesh/strategy wiring goes through ``common.bench_session``."""
 from __future__ import annotations
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import bench_session, emit, time_fn
 from repro.config import ShapeConfig
-from repro.configs import get_config
-from repro.configs.common import concrete_batch, reduced
-from repro.core import pipeline as pl
-from repro.core.steps import make_train_step
-from repro.launch.mesh import make_test_mesh
-from repro.models import build_model
-from repro.train.optimizer import Adam
+from repro.configs.common import concrete_batch
 
 
 def _stage_bytes(pp):
@@ -43,28 +38,26 @@ def run(quick: bool = False):
     # 2-stage pipelines x 4 FL clients — matches the paper's testbed scale
     # (Fig. 7 uses 2-3 Jetson pipelines); a stage count beyond the layer
     # count would only measure SPMD padding waste.
-    mesh = make_test_mesh(data=4, model=2)
-    cfg = reduced(get_config("flad_vision"))
     shape = ShapeConfig("bench", 32, 16, "train")
-    key = jax.random.PRNGKey(0)
-    model = build_model(cfg)
-    params = model.init(key)
-    batch = concrete_batch(cfg, shape, key)
+    alone = bench_session("flad-vision", mesh=(4, 2), shape=shape,
+                          strategy="tensor", remat=False)
+    cfg, mesh = alone.cfg, alone.mesh
+    batch = concrete_batch(cfg, shape, alone.prng())
 
     # ---- standalone (single device, no communication) ----
-    opt = Adam(lr=1e-3)
-    sstep = jax.jit(make_train_step(cfg, shape, opt, remat=False))
-    t_alone = time_fn(lambda: sstep(params, opt.init(params), batch),
+    sstep, (params, opt0) = alone.build()
+    t_alone = time_fn(lambda: sstep(params, opt0, batch),
                       iters=3 if quick else 5)
     emit("fhdp/standalone_samples_per_s",
          f"{shape.global_batch / t_alone:.2f}")
 
     def run_template(tag, tmpl):
-        step, h = pl.make_fhdp_train_step(cfg, shape, mesh, templates=tmpl)
-        pp = pl.stage_params_from(params, cfg, tmpl)
-        opt_ = pl.zero2_init(pp, mesh.shape["data"])
-        jstep = jax.jit(step)
-        t = time_fn(lambda: jstep(pp, opt_, batch),
+        # same init key as the standalone session -> identical params
+        ses = bench_session("flad-vision", mesh=mesh, shape=shape,
+                            strategy="pipeline", templates=dict(tmpl))
+        step, (pp, opt_) = ses.build()
+        h = ses.strategy.helpers
+        t = time_fn(lambda: step(pp, opt_, batch),
                     iters=3 if quick else 5)
         mem = _stage_bytes(pp)
         emit(f"fhdp/{tag}_samples_per_s", f"{shape.global_batch / t:.2f}",

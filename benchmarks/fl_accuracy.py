@@ -1,24 +1,23 @@
 """Paper Fig. 8(a): traffic-light accuracy — FL-trained vision encoder vs
 a single-client (centrally pre-trained) baseline, on held-out data from
 every town. Claim reproduced: FL across non-IID towns improves held-out
-accuracy (paper: 79.9% -> 92.66%)."""
+accuracy (paper: 79.9% -> 92.66%).
+
+Both models train through ``common.bench_session`` (tensor baseline,
+``fedavg`` FL rounds)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import bench_session, emit
+from repro.api import LoopHooks, load_config
 from repro.config import ShapeConfig
-from repro.configs import get_config
-from repro.configs.common import reduced
-from repro.core.fedavg import fedavg, make_fl_round, stack_clients
-from repro.core.steps import make_train_step
 from repro.data.partition import fleet_datasets
 from repro.data.pipeline import batches, client_round_batches
 from repro.data.synthetic import DrivingDataConfig, TownWorld
-from repro.models import build_model
-from repro.train.optimizer import Adam
+
+QUIET = LoopHooks(log_every=10 ** 9, log_fn=lambda *a, **k: None)
 
 
 def _acc(model, params, data, bs=64):
@@ -32,40 +31,41 @@ def _acc(model, params, data, bs=64):
 
 
 def run(quick: bool = False):
-    cfg = reduced(get_config("flad_vision"))
+    clients, rounds, locsteps, bs = (4, 6, 2, 16) if quick \
+        else (8, 15, 2, 16)
+    cfg = load_config("flad-vision")
     dcfg = DrivingDataConfig(feature_dim=cfg.prefix_dim,
                              patches=cfg.prefix_tokens or 8,
                              num_waypoints=cfg.num_waypoints,
                              num_light_classes=cfg.num_light_classes,
                              n_towns=4)
-    clients, rounds, locsteps, bs = (4, 6, 2, 16) if quick \
-        else (8, 15, 2, 16)
+    shape = ShapeConfig("fl", dcfg.patches, bs, "train")
+    base_ses = bench_session("flad-vision", mesh=(1,), shape=shape,
+                             strategy="tensor", learning_rate=2e-3,
+                             remat=False)
     datasets = fleet_datasets(dcfg, clients, 384, beta=0.3)
     world = TownWorld(dcfg)
     rng = np.random.default_rng(99)
     heldout = [world.sample(t, 192, rng) for t in range(dcfg.n_towns)]
 
-    model = build_model(cfg)
-    params0 = model.init(jax.random.PRNGKey(0))
-    opt = Adam(lr=2e-3)
-    shape = ShapeConfig("fl", dcfg.patches, bs, "train")
-
-    step = jax.jit(make_train_step(cfg, shape, opt, remat=False))
-    p, o = params0, opt.init(params0)
+    model = base_ses.model
     it = batches(datasets[0], bs, epochs=rounds * locsteps + 1)
-    for _ in range(rounds * locsteps):
-        p, o, _ = step(p, o, next(it))
-    base = np.mean([_acc(model, p, d) for d in heldout])
+    base_ses.run(rounds * locsteps, batches=it, hooks=QUIET)
+    base = np.mean([_acc(model, base_ses.merged_params(), d)
+                    for d in heldout])
     emit("fl_accuracy/single_client", f"{base:.4f}")
 
-    fl_round = jax.jit(make_fl_round(cfg, shape, opt, local_steps=locsteps,
-                                     remat=False))
-    cp = stack_clients(params0, clients)
-    co = jax.vmap(opt.init)(cp)
-    for r in range(rounds):
+    fl_ses = bench_session("flad-vision", mesh=(1,), shape=shape,
+                           strategy="fedavg", learning_rate=2e-3,
+                           local_steps=locsteps, clients=clients,
+                           remat=False)
+
+    def round_batches(r):
         rb = client_round_batches(datasets, locsteps, bs, round_idx=r)
-        cp, co, _ = fl_round(cp, co,
-                             {k: jnp.asarray(v) for k, v in rb.items()})
-    fl_acc = np.mean([_acc(model, fedavg(cp), d) for d in heldout])
+        return {k: jnp.asarray(v) for k, v in rb.items()}
+
+    fl_ses.run(rounds, batches=round_batches, hooks=QUIET)
+    fl_acc = np.mean([_acc(model, fl_ses.merged_params(), d)
+                      for d in heldout])
     emit("fl_accuracy/flad_fl", f"{fl_acc:.4f}",
          f"delta=+{fl_acc-base:.4f} (paper: 0.799->0.927)")

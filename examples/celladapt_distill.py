@@ -1,13 +1,14 @@
 """CELLAdapt demo (paper §5.2 / Fig. 10): distill the edge AD-LLM teacher
 into a compact ADM student on waypoint outputs, then LoRA-personalize the
-teacher to one region's data.
+teacher to one region's data. Device setup goes through repro.api.
 
     PYTHONPATH=src python examples/celladapt_distill.py
 """
 import argparse
-import os
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+from repro.api import ensure_host_devices
+
+ensure_host_devices(1)
 
 import jax
 import jax.numpy as jnp

@@ -1,75 +1,73 @@
-"""FHDP fault tolerance end to end (paper §4.2 / Fig. 5b).
+"""FHDP fault tolerance end to end (paper §4.2 / Fig. 5b), on the API.
 
-Train the vision encoder through the FHDP pipeline, inject a stage
-failure mid-training, recover via a pre-generated template (re-staging
-the backup under a new layer split), and keep training — loss continues
-to descend. Also prints the analytic recovery-time comparison.
+Train the vision encoder through an FHDP :class:`repro.api.Session`,
+inject a stage failure mid-training, recover via a pre-generated template
+(re-staging the edge backup under a new layer split), and keep training —
+loss continues to descend. Also prints the analytic recovery-time
+comparison.
 
     PYTHONPATH=src python examples/fhdp_recovery.py
 """
-import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import LoopHooks, MeshSpec, Session
 from repro.config import ShapeConfig
-from repro.configs import get_config
-from repro.configs.common import concrete_batch, reduced
+from repro.configs.common import concrete_batch
 from repro.core import pipeline as pl
-from repro.core.fhdp import init_fhdp
-from repro.launch.mesh import make_test_mesh
 from repro.recovery.backup import EdgeBackup, restage
 
 
 def main():
-    mesh = make_test_mesh(data=2, model=4)
-    cfg = reduced(get_config("flad-vision"))
     shape = ShapeConfig("rec", 16, 16, "train")
-    key = jax.random.PRNGKey(0)
+    mesh_spec = MeshSpec((2, 4))
 
     # active template: 4 stages; preventive template: stage 2's layers
     # re-homed when its host fails (paper: template pre-generation)
     active = {"blocks": (1, 1, 0, 0)}
     after_failure = {"blocks": (2, 0, 0, 0)}
 
-    step, h = pl.make_fhdp_train_step(cfg, shape, mesh, templates=active,
-                                      learning_rate=2e-3)
-    pp, opt, _ = init_fhdp(cfg, mesh, key, templates=active)
-    jstep = jax.jit(step)
     backup = EdgeBackup(interval=5)
+    session = Session("flad-vision", strategy="pipeline", shape=shape,
+                      mesh=mesh_spec, learning_rate=2e-3,
+                      templates=dict(active))
+    # one batch stream continues across failure + recovery (build the
+    # session first: MeshSpec must force devices before other jax use)
+    session.build()
+    import jax
+    rngs = iter(jax.random.split(jax.random.PRNGKey(0), 100))
 
-    rngs = iter(jax.random.split(key, 100))
-    losses = []
-    for i in range(10):
-        batch = concrete_batch(cfg, shape, next(rngs))
-        pp, opt, m = jstep(pp, opt, batch)
-        backup.maybe_backup(i, pl.merge_stage_params(pp, active))
-        losses.append(float(m["loss"]))
+    def batch_stream():
+        while True:
+            yield concrete_batch(session.cfg, shape, next(rngs))
+
+    # the edge snapshots the MERGED model so any template can redeploy it
+    hooks = LoopHooks(backup=backup, log_every=5,
+                      backup_view=lambda pp: pl.merge_stage_params(
+                          pp, active))
+    out = session.run(10, batches=batch_stream(), hooks=hooks)
+    losses = [h["loss"] for h in out["history"]]
     print(f"pre-failure loss: {losses[0]:.4f} -> {losses[-1]:.4f}")
 
     # ---- stage-1 host departs: restore backup under the new template ----
     print("injecting failure of stage-1 host; deploying template",
           after_failure)
     merged, at_step = backup.restore()
-    pp2 = restage(merged, cfg, after_failure, mesh)
-    step2, _ = pl.make_fhdp_train_step(cfg, shape, mesh,
-                                       templates=after_failure,
-                                       learning_rate=2e-3)
+    mesh = session.mesh
+    pp2 = restage(merged, session.cfg, after_failure, mesh)
+    session2 = Session(cfg=session.cfg, strategy="pipeline", shape=shape,
+                      mesh=mesh, learning_rate=2e-3,
+                      templates=dict(after_failure))
     opt2 = pl.zero2_init(pp2, mesh.shape["data"])
-    jstep2 = jax.jit(step2)
-    post = []
-    for i in range(10):
-        batch = concrete_batch(cfg, shape, next(rngs))
-        pp2, opt2, m = jstep2(pp2, opt2, batch)
-        post.append(float(m["loss"]))
+    # passing state skips session2's own init entirely
+    out2 = session2.run(10, state=(pp2, opt2), batches=batch_stream(),
+                        hooks=LoopHooks(log_every=5))
+    post = [h["loss"] for h in out2["history"]]
     print(f"post-recovery loss (from backup at step {at_step}): "
           f"{post[0]:.4f} -> {post[-1]:.4f}")
     assert post[-1] < losses[0], "training did not continue descending"
 
     # ---- analytic recovery-time comparison (paper Fig. 5b) ----
+    from repro.configs import get_config
     from repro.recovery.recover import recover
     from repro.recovery.templates import pregenerate
     from repro.sched.costmodel import (CostParams, JETSON_AGX, JETSON_NANO,
@@ -82,9 +80,9 @@ def main():
                        dwl=rng.uniform(600, 3600, 5))
     ts = pregenerate(fleet, units, cp)
     for strat in ("template", "elastic", "relaunch"):
-        out = recover(strat, ts, fleet[1].vid, fleet, units, cp)
-        print(f"  {strat:9s}: {out.seconds:6.2f}s "
-              f"(moved {out.moved_bytes/1e6:.1f} MB)")
+        res = recover(strat, ts, fleet[1].vid, fleet, units, cp)
+        print(f"  {strat:9s}: {res.seconds:6.2f}s "
+              f"(moved {res.moved_bytes/1e6:.1f} MB)")
 
 
 if __name__ == "__main__":

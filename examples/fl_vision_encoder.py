@@ -1,33 +1,26 @@
 """End-to-end driver: federated training of the FLAD vision encoder
-(paper Fig. 1 training procedure / Fig. 8a evaluation).
+(paper Fig. 1 training procedure / Fig. 8a evaluation), on the API.
 
 8 FL clients with town-non-IID driving data train the vision encoder via
-hierarchical FedAvg (client -> edge -> cloud = mean over the data/pod
-axes). We report held-out traffic-light accuracy of (a) a model trained
-on ONE town's data only (the "centralized-on-local-data" baseline the
-paper improves over) and (b) the FL global model — reproducing the
-direction of Fig. 8a (79.9% -> 92.66% there).
+a ``fedavg`` :class:`repro.api.Session` (client -> edge -> cloud = mean
+over the data/pod axes). We report held-out traffic-light accuracy of
+(a) a model trained on ONE town's data only (the
+"centralized-on-local-data" baseline the paper improves over) and (b)
+the FL global model — reproducing the direction of Fig. 8a
+(79.9% -> 92.66% there).
 
     PYTHONPATH=src python examples/fl_vision_encoder.py --rounds 20
 """
 import argparse
-import os
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import LoopHooks, MeshSpec, Session, load_config
 from repro.config import ShapeConfig
-from repro.configs import get_config
-from repro.configs.common import reduced
-from repro.core.fedavg import client_specs, fedavg, make_fl_round, stack_clients
 from repro.data.partition import fleet_datasets
 from repro.data.synthetic import DrivingDataConfig, TownWorld
-from repro.data.pipeline import client_round_batches
-from repro.models import build_model
-from repro.train.optimizer import Adam
+from repro.data.pipeline import batches, client_round_batches
 
 
 def light_accuracy(model, params, data, batch=64):
@@ -51,9 +44,7 @@ def main():
                     help="full ~100M config (TPU scale; CPU: hours)")
     args = ap.parse_args()
 
-    cfg = get_config("flad-vision")
-    if not args.full:
-        cfg = reduced(cfg)
+    cfg = load_config("flad-vision", full=args.full)
     dcfg = DrivingDataConfig(feature_dim=cfg.prefix_dim,
                              patches=cfg.prefix_tokens or 8,
                              num_waypoints=cfg.num_waypoints,
@@ -63,41 +54,35 @@ def main():
     world = TownWorld(dcfg)
     rng = np.random.default_rng(99)
     heldout = {t: world.sample(t, 256, rng) for t in range(dcfg.n_towns)}
-
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params0 = model.init(key)
-    opt = Adam(lr=2e-3)
     shape = ShapeConfig("fl", dcfg.patches, args.batch, "train")
+    mesh = MeshSpec((8,), axes=("data",))
 
     # -- baseline: train on client 0's (single-town-skewed) data only
-    from repro.core.steps import make_train_step
-    step = jax.jit(make_train_step(cfg, shape, opt, remat=False))
-    p, o = params0, opt.init(params0)
-    from repro.data.pipeline import batches
+    base = Session(cfg=cfg, strategy="tensor", shape=shape, mesh=mesh,
+                   learning_rate=2e-3, remat=False)
     it = batches(datasets[0], args.batch,
                  epochs=args.rounds * args.local_steps + 1)
-    for _ in range(args.rounds * args.local_steps):
-        p, o, m = step(p, o, next(it))
-    base_acc = np.mean([light_accuracy(model, p, d)
+    base.run(args.rounds * args.local_steps, batches=it,
+             hooks=LoopHooks(log_every=10 ** 9, log_fn=lambda *a: None))
+    model = base.model
+    base_acc = np.mean([light_accuracy(model, base.merged_params(), d)
                         for d in heldout.values()])
     print(f"single-client model: held-out light acc = {base_acc:.3f}")
 
     # -- FLAD: hierarchical FedAvg over all clients
-    fl_round = jax.jit(make_fl_round(cfg, shape, opt,
-                                     local_steps=args.local_steps,
-                                     remat=False))
-    cp = stack_clients(params0, args.clients)
-    co = jax.vmap(opt.init)(cp)
-    for r in range(args.rounds):
+    fl = Session(cfg=cfg, strategy="fedavg", shape=shape, mesh=mesh,
+                 learning_rate=2e-3, seed=0,
+                 local_steps=args.local_steps, clients=args.clients,
+                 remat=False)
+
+    def round_batches(r):
         rb = client_round_batches(datasets, args.local_steps, args.batch,
                                   round_idx=r)
-        rb = {k: jnp.asarray(v) for k, v in rb.items()}
-        cp, co, metrics = fl_round(cp, co, rb)
-        if (r + 1) % 5 == 0:
-            print(f"round {r+1:3d} loss={float(np.mean(metrics['loss'])):.4f}")
-    global_params = fedavg(cp)
-    fl_acc = np.mean([light_accuracy(model, global_params, d)
+        return {k: jnp.asarray(v) for k, v in rb.items()}
+
+    fl.run(args.rounds, batches=round_batches,
+           hooks=LoopHooks(log_every=5))
+    fl_acc = np.mean([light_accuracy(model, fl.merged_params(), d)
                       for d in heldout.values()])
     print(f"FLAD FL model:       held-out light acc = {fl_acc:.3f}")
     print(f"improvement: {base_acc:.3f} -> {fl_acc:.3f} "

@@ -1,61 +1,52 @@
 """Quickstart: FHDP-train the FLAD vision encoder on synthetic driving
 data over a (data=2, model=4) mesh — FL clients x pipeline stages — then
-decode waypoints with the edge AD-LLM.
+rotate pipeline roles, all through :class:`repro.api.Session`.
 
 Runs on CPU in ~2 minutes:
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py
 """
-import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import MeshSpec, Session, load_config
 from repro.config import ShapeConfig
-from repro.configs import get_config
-from repro.configs.common import reduced
 from repro.core import pipeline as pl
-from repro.core.fhdp import init_fhdp
 from repro.data.partition import fleet_datasets
 from repro.data.synthetic import DrivingDataConfig
-from repro.launch.mesh import make_test_mesh
 
 
 def main():
-    mesh = make_test_mesh(data=2, model=4)
-    cfg = reduced(get_config("flad-vision"))
+    cfg = load_config("flad-vision")
     dcfg = DrivingDataConfig(feature_dim=cfg.prefix_dim,
                              patches=cfg.prefix_tokens or 8,
                              num_waypoints=cfg.num_waypoints,
                              num_light_classes=cfg.num_light_classes)
     # 2 FL clients (the mesh's data axis), town-non-IID
     datasets = fleet_datasets(dcfg, 2, 256, beta=0.3)
-    shape = ShapeConfig("quickstart", dcfg.patches, 16, "train")
 
-    step, helpers = pl.make_fhdp_train_step(cfg, shape, mesh,
-                                            learning_rate=2e-3)
-    print("stage templates:", helpers["templates"])
-    pp, opt, _ = init_fhdp(cfg, mesh, jax.random.PRNGKey(0))
-    jstep = jax.jit(step)
-
+    session = Session(cfg=cfg, strategy="pipeline", learning_rate=2e-3,
+                      mesh=MeshSpec((2, 4)),
+                      shape=ShapeConfig("quickstart", dcfg.patches, 16,
+                                        "train"))
     rng = np.random.default_rng(0)
-    for i in range(30):
-        idx = rng.integers(0, 256, 16)
-        batch = {k: jnp.asarray(np.concatenate(
-            [d[k][idx[:8]] for d in datasets], axis=0))
-            for k in datasets[0]}
-        pp, opt, metrics = jstep(pp, opt, batch)
-        if i % 5 == 0:
-            print(f"step {i:3d} loss={float(metrics['loss']):.4f}")
-    print("final loss:", float(metrics["loss"]))
+
+    def batches():
+        while True:
+            idx = rng.integers(0, 256, 16)
+            yield {k: jnp.asarray(np.concatenate(
+                [d[k][idx[:8]] for d in datasets], axis=0))
+                for k in datasets[0]}
+
+    step, _ = session.build()
+    print("stage templates:", session.strategy.templates)
+    out = session.run(30, batches=batches())
+    print("final loss:", out["history"][-1]["loss"])
 
     # stage rotation (paper §4: vehicles rotate through pipeline roles)
+    pp, opt = session.state
     pp["stacks"] = pl.rotate_stages(pp["stacks"], 1)
     pp["masks"] = pl.rotate_stages(pp["masks"], 1)
-    pp, opt, metrics = jstep(pp, opt, batch)
+    pp, opt, metrics = step(pp, opt, next(batches()))
     print("after stage rotation, loss:", float(metrics["loss"]))
 
 

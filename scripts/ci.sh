@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 CI: test suite + API smoke drivers.
+# Usage: scripts/ci.sh [--fast]   (--fast skips the smoke drivers)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1 pytest ==="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "=== smoke: models (repro.api.load_config) ==="
+  python scripts/smoke_models.py
+
+  echo "=== smoke: FHDP pipeline (repro.api.Session) ==="
+  python scripts/smoke_pipeline.py
+
+  echo "=== smoke: train launcher (Session CLI) ==="
+  python -m repro.launch.train --strategy pipeline --devices 8 --steps 2
+
+  echo "=== smoke: serve launcher (Session.serve) ==="
+  python -m repro.launch.serve --devices 2 --batch 2 --context 16 \
+      --decode-steps 4 --requests 1
+fi
+
+echo "CI OK"

@@ -1,12 +1,17 @@
-"""Quick manual smoke: every reduced arch runs loss + grad + decode."""
+"""Quick manual smoke: every reduced arch runs loss + grad + decode.
+
+Configs resolve through :func:`repro.api.load_config`; no per-script
+mesh/XLA wiring.
+"""
 import sys
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import INPUT_SHAPES, ShapeConfig
-from repro.configs import ARCH_IDS, get_config, input_specs, reduced, state_specs
-from repro.configs.common import concrete_batch, cache_len, effective_window
+from repro.api import load_config
+from repro.config import ShapeConfig
+from repro.configs import ARCH_IDS
+from repro.configs.common import concrete_batch
 from repro.models import build_model
 
 SMOKE_SHAPE = ShapeConfig("smoke", 32, 2, "train")
@@ -17,7 +22,7 @@ def main():
     key = jax.random.PRNGKey(0)
     failures = []
     for arch in ARCH_IDS:
-        cfg = reduced(get_config(arch))
+        cfg = load_config(arch)
         model = build_model(cfg)
         try:
             params = model.init(key)

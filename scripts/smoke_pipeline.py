@@ -1,18 +1,17 @@
-"""Smoke: FHDP pipeline loss == single-device loss at step 0, per family."""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+"""Smoke: FHDP pipeline loss == single-device loss at step 0, per family.
 
+Each arch stands up a pipeline :class:`repro.api.Session` on a
+(data=2, model=4) mesh; the reference loss comes from the same params on
+the flat model.
+"""
 import sys
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import MeshSpec, Session, load_config
 from repro.config import ShapeConfig
-from repro.configs import ARCH_IDS, get_config
-from repro.configs.common import concrete_batch, reduced
-from repro.core import pipeline as pl
-from repro.core.fhdp import init_fhdp
-from repro.launch.mesh import make_test_mesh
+from repro.configs.common import concrete_batch
 from repro.models import build_model
 
 ARCHS = ["qwen3_14b", "qwen3_moe_30b_a3b", "xlstm_350m", "hymba_1_5b",
@@ -20,35 +19,34 @@ ARCHS = ["qwen3_14b", "qwen3_moe_30b_a3b", "xlstm_350m", "hymba_1_5b",
 
 
 def main():
-    mesh = make_test_mesh(data=2, model=4)
+    # build the mesh before any other jax device use: MeshSpec forces the
+    # 8 host devices only if it runs before the first backend init
+    mesh = MeshSpec((2, 4)).build()
     fails = []
     for arch in ARCHS:
-        cfg = reduced(get_config(arch))
+        cfg = load_config(arch)
         shape = ShapeConfig("smoke", 64, 8, "train")
-        model = build_model(cfg)
         key = jax.random.PRNGKey(0)
-        params = model.init(key)
         batch = concrete_batch(cfg, shape, key)
 
-        ref_loss, _ = model.loss(params, batch, remat=False)
+        # init_fhdp and build_model share the init key -> identical params
+        model = build_model(cfg)
+        ref = float(model.loss(model.init(key), batch, remat=False)[0])
 
-        step, h = pl.make_fhdp_train_step(cfg, shape, mesh, remat=True,
-                                          learning_rate=1e-3)
-        templates = h["templates"]
-        pp = pl.stage_params_from(params, cfg, templates)
-        opt = pl.zero2_init(pp, mesh.shape["data"])
-        jstep = jax.jit(step)
-        pp2, opt2, metrics = jstep(pp, opt, batch)
+        session = Session(cfg=cfg, strategy="pipeline", shape=shape,
+                          mesh=mesh, learning_rate=1e-3)
+        step, (pp, opt) = session.build(key)
+        h = session.strategy.helpers
+        pp2, opt2, metrics = step(pp, opt, batch)
         got = float(metrics["loss"])
-        ref = float(ref_loss)
         # second step: loss should change (params updated) and stay finite
-        _, _, m2 = jstep(pp2, opt2, batch)
+        _, _, m2 = step(pp2, opt2, batch)
         ok = abs(got - ref) / max(abs(ref), 1e-6) < 2e-2 and \
             jnp.isfinite(jnp.asarray(m2["loss"]))
         print(("OK  " if ok else "BAD ")
               + f"{arch:24s} pipeline={got:.5f} ref={ref:.5f} "
                 f"step2={float(m2['loss']):.5f} M={h['microbatches']} "
-                f"mb={h['mb']} tmpl={templates}")
+                f"mb={h['mb']} tmpl={session.strategy.templates}")
         if not ok:
             fails.append(arch)
     if fails:

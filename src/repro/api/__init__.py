@@ -1,0 +1,35 @@
+"""repro.api — the one front door to FLAD's training/serving system.
+
+Quickstart::
+
+    from repro.api import MeshSpec, Session
+
+    # FHDP-train the vision encoder on a 2x4 (clients x stages) mesh
+    out = Session("flad-vision", strategy="pipeline",
+                  mesh=MeshSpec((2, 4))).run(steps=50)
+
+    # one hierarchical-FedAvg round per `run` step
+    Session("flad-vision", strategy="fedavg", local_steps=2).run(steps=10)
+
+    # edge AD-LLM serving (prefill + decode, paper Fig. 2)
+    Session("flad-adllm", strategy="tensor").serve(requests=3)
+
+    # compile-only dry-run on the 256-chip production mesh
+    Session("qwen3-14b", shape="train_4k", full=True,
+            mesh=MeshSpec(production=True)).lower().compile()
+
+See :mod:`repro.api.session` for the Session surface,
+:mod:`repro.api.strategies` for the strategy registry, and the top-level
+README for the full tour.
+"""
+from repro.api.mesh import AXES, MeshSpec, ensure_host_devices
+from repro.api.session import Session, load_config, resolve_shape
+from repro.api.strategies import (Strategy, available_strategies,
+                                  get_strategy, register_strategy)
+from repro.train.loop import LoopHooks
+
+__all__ = [
+    "AXES", "LoopHooks", "MeshSpec", "Session", "Strategy",
+    "available_strategies", "ensure_host_devices", "get_strategy",
+    "load_config", "register_strategy", "resolve_shape",
+]

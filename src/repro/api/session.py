@@ -1,0 +1,244 @@
+"""``Session`` — the single way to stand up FLAD work.
+
+A Session composes:
+
+  * a model config (``arch`` name; the CPU-smoke REDUCED variant unless
+    ``full=True`` selects the published scale),
+  * a :class:`repro.api.MeshSpec` (declarative mesh + device forcing),
+  * a registered :class:`repro.api.Strategy` (``tensor``, ``pipeline``,
+    ``fedavg``, ``fl_pipeline``),
+  * :class:`repro.train.loop.LoopHooks` (log / edge backup / checkpoint),
+
+and exposes the four FLAD entrypoints behind one object::
+
+    from repro.api import Session
+
+    out = Session("flad-vision", strategy="pipeline").run(steps=50)
+    Session("flad-adllm").serve(requests=3)
+    Session("qwen3-14b", shape="train_4k",
+            mesh=MeshSpec(production=True)).lower().compile()
+
+Every launcher, example, benchmark, and smoke script routes through here;
+new backends / strategies / schedulers plug into the registry instead of
+growing another bespoke launcher.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple, Union
+
+from repro.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.api.mesh import MeshSpec
+from repro.api.strategies import Strategy, get_strategy
+
+
+def load_config(arch: str, *, full: bool = False) -> ModelConfig:
+    """Resolve an arch name to its ModelConfig — the CPU-smoke REDUCED
+    variant by default; ``full=True`` gives the published scale."""
+    from repro.configs import get_config
+    from repro.configs.common import reduced
+    cfg = get_config(arch)
+    return cfg if full else reduced(cfg)
+
+
+def resolve_shape(shape: Union[ShapeConfig, str, None], *,
+                  default_batch: int = 8,
+                  kind: str = "train") -> Optional[ShapeConfig]:
+    """Accept a ShapeConfig, a named shape, 'SEQxBATCH', or None."""
+    if shape is None or isinstance(shape, ShapeConfig):
+        return shape
+    if shape in INPUT_SHAPES:
+        return INPUT_SHAPES[shape]
+    s, b = (int(x) for x in shape.lower().split("x"))
+    return ShapeConfig("cli", s, b, kind)
+
+
+class Session:
+    """One FLAD workload: config x shape x mesh x strategy x hooks."""
+
+    def __init__(self, arch: Optional[str] = None, *,
+                 cfg: Optional[ModelConfig] = None,
+                 full: bool = False,
+                 shape: Union[ShapeConfig, str, None] = None,
+                 mesh=None,
+                 strategy: Union[str, Strategy] = "pipeline",
+                 learning_rate: float = 1e-3,
+                 seed: int = 0,
+                 hooks=None,
+                 **strategy_options):
+        if cfg is None:
+            cfg = load_config(arch or "flad-vision", full=full)
+        self.cfg = cfg
+        if isinstance(mesh, MeshSpec):
+            self._mesh = None
+            self.mesh_spec = mesh
+        elif _is_mesh(mesh):
+            self._mesh = mesh
+            self.mesh_spec = MeshSpec(dims=tuple(mesh.devices.shape),
+                                      axes=tuple(mesh.axis_names),
+                                      devices=0)
+        else:
+            self._mesh = None
+            self.mesh_spec = MeshSpec.parse(mesh)
+        self.seed = seed
+        self.hooks = hooks
+        if isinstance(strategy, Strategy):
+            if strategy_options:
+                raise ValueError(
+                    f"strategy options {sorted(strategy_options)} are "
+                    f"ignored when passing a Strategy instance; set them "
+                    f"on the instance or pass the strategy by name")
+            self.strategy = strategy
+        else:
+            self.strategy = get_strategy(strategy,
+                                         learning_rate=learning_rate,
+                                         **strategy_options)
+        self._shape_arg = shape
+        self._built: Optional[Tuple[Callable, Any]] = None
+        self.state: Optional[Tuple[Any, Any]] = None
+        self.history: list = []
+
+    # ---- lazy device-touching pieces ----------------------------------
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            self._mesh = self.mesh_spec.build()
+        return self._mesh
+
+    @property
+    def shape(self) -> ShapeConfig:
+        resolved = resolve_shape(self._shape_arg)
+        if resolved is None:
+            resolved = ShapeConfig("session", 128,
+                                   2 * self.mesh_spec.size, "train")
+        self._shape_arg = resolved
+        return resolved
+
+    @property
+    def model(self):
+        """The flat (un-pipelined) model — for eval / serving views."""
+        from repro.models import build_model
+        return build_model(self.cfg)
+
+    def prng(self, salt: int = 0):
+        import jax
+        return jax.random.PRNGKey(self.seed + salt)
+
+    # ---- strategy plumbing --------------------------------------------
+    def build(self, key=None, *, init: bool = True
+              ) -> Tuple[Callable, Optional[Tuple[Any, Any]]]:
+        """(step_fn, state): the strategy's jitted step + materialized
+        state on this session's mesh. Cached; ``init`` only runs once.
+        ``init=False`` skips state materialization (state is None) — used
+        when the caller supplies its own state, e.g. after recovery."""
+        if key is not None and self._built is not None \
+                and self._built[1] is not None:
+            raise ValueError(
+                "state is already materialized; the key passed to build() "
+                "would be silently ignored (build with the key first, or "
+                "pass state=... to run())")
+        if self._built is None:
+            mesh = self.mesh
+            step = self.strategy.make_step(self.cfg, self.shape, mesh)
+            self._built = (step, None)
+        if init and self._built[1] is None:
+            state = self.strategy.init(self.cfg, self.shape, self.mesh,
+                                       self.prng() if key is None else key)
+            self._built = (self._built[0], state)
+            self.state = state
+        return self._built
+
+    @property
+    def step_fn(self) -> Callable:
+        return self.build()[0]
+
+    def param_specs(self):
+        return self.strategy.param_specs(self.cfg, self.mesh)
+
+    def merged_params(self, state=None):
+        """Flat model params view of the current (or given) state."""
+        state = state if state is not None else self.state
+        if state is None:
+            raise RuntimeError("no state yet; call build()/run() first")
+        return self.strategy.merge_params(state, self.cfg)
+
+    def default_batches(self, salt: int = 1) -> Iterator:
+        """Endless synthetic batches matching the strategy's step input."""
+        import jax
+        key = self.prng(salt)
+        while True:
+            key, sub = jax.random.split(key)
+            yield self.strategy.default_batch(self.cfg, self.shape,
+                                              self.mesh, sub)
+
+    # ---- drivers ------------------------------------------------------
+    def run(self, steps: int, *, state=None, batches=None,
+            hooks=None) -> Dict:
+        """Train for ``steps`` steps (or FL rounds, for ``round``-loop
+        strategies) and return the loop output (+ final ``state``).
+
+        ``batches``: an iterator of step batches, or for round strategies a
+        ``fn(round_idx) -> round_batch``; defaults to synthetic data.
+        """
+        import dataclasses
+
+        from repro.train.loop import LoopHooks, fl_loop, train_loop
+
+        step, init_state = self.build(init=state is None)
+        if state is not None:
+            init_state = state
+        hooks = hooks or self.hooks or (
+            LoopHooks(log_every=1) if self.strategy.loop == "round"
+            else LoopHooks())
+        if hooks.backup is not None and hooks.backup_view is None:
+            # default the edge snapshot to the merged flat model, the form
+            # recovery's restage() redeploys under a new template
+            hooks = dataclasses.replace(
+                hooks, backup_view=lambda p: self.strategy.merge_params(
+                    (p, None), self.cfg))
+        params, opt = init_state
+        if self.strategy.loop == "round":
+            if batches is None:
+                it = self.default_batches()
+                round_fn = lambda r: next(it)          # noqa: E731
+            elif callable(batches):
+                round_fn = batches
+            else:
+                round_fn = lambda r, _it=iter(batches): next(_it)  # noqa: E731
+            out = fl_loop(step, params, opt, round_fn, rounds=steps,
+                          hooks=hooks)
+            self.state = (out["client_params"], out["client_opt"])
+        else:
+            it = iter(batches) if batches is not None \
+                else self.default_batches()
+            out = train_loop(step, params, opt, it, steps=steps,
+                             hooks=hooks)
+            self.state = (out["params"], out["opt_state"])
+        self._built = (step, self.state)
+        self.history.extend(out["history"])
+        return out
+
+    def serve(self, *, requests: int = 3, batch: int = 8, context: int = 64,
+              decode_steps: int = 16, params=None, log_fn=print) -> Dict:
+        """Batched prefill+decode serving (paper Fig. 2); uses the trained
+        session params when available, else a fresh init."""
+        from repro.api.serving import serve_requests
+
+        self.mesh  # force device setup once, like every other entrypoint
+        if params is None and self.state is not None:
+            params = self.merged_params()
+        return serve_requests(self.cfg, batch=batch, context=context,
+                              decode_steps=decode_steps, requests=requests,
+                              params=params, key=self.prng(2),
+                              log_fn=log_fn)
+
+    def lower(self, **kw):
+        """Compile-only dry-run lowering of this session's step (no
+        allocation); see :func:`repro.api.lowering.build_lowered`."""
+        from repro.api.lowering import build_lowered
+        return build_lowered(self.cfg, self.shape, self.mesh,
+                             strategy=self.strategy.name, **kw)
+
+
+def _is_mesh(obj) -> bool:
+    return obj is not None and hasattr(obj, "axis_names") \
+        and hasattr(getattr(obj, "devices", None), "shape")

@@ -1,0 +1,290 @@
+"""Strategy protocol + registry — the pluggable heart of :mod:`repro.api`.
+
+A :class:`Strategy` owns the three things every FLAD execution mode needs:
+
+  * ``init(cfg, shape, mesh, key) -> (params_like, opt_like)`` — materialize
+    trainable state on the mesh in the strategy's layout;
+  * ``make_step(cfg, shape, mesh) -> step`` — the jitted
+    ``(params, opt, batch) -> (params, opt, metrics)`` update (a whole
+    FedAvg round for the ``round``-loop strategies);
+  * its sharding specs (:meth:`Strategy.param_specs`) and a
+    :meth:`Strategy.merge_params` view collapsing the layout back to flat
+    model params (for backup / eval / serving).
+
+Registered strategies:
+
+  ``tensor``       datacenter-style SPMD baseline (FedSGD gradient mean)
+  ``pipeline``     FHDP — FL data columns x pipeline stages (paper §4)
+  ``fedavg``       hierarchical FedAvg over client-stacked flat params
+  ``fl_pipeline``  FedAvg rounds of FHDP-pipelined local steps (paper Fig. 1)
+
+New execution modes (async rounds, new backends, SWIFT-driven
+repartitioning) plug in via :func:`register_strategy` instead of another
+bespoke launcher.
+"""
+from __future__ import annotations
+
+import abc
+import math
+from typing import Any, Callable, Dict, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.configs.common import concrete_batch
+
+_REGISTRY: Dict[str, Type["Strategy"]] = {}
+
+
+def register_strategy(name: str) -> Callable[[type], type]:
+    """Class decorator adding a Strategy to the registry under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_strategy(name: str, **options) -> "Strategy":
+    """Instantiate a registered strategy; unknown names list valid ones."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; available: "
+            f"{', '.join(available_strategies())}") from None
+    return cls(**options)
+
+
+def _fl_client_count(mesh) -> int:
+    """Clients = product of the FL axes present on the mesh (pod x data)."""
+    return math.prod(mesh.shape[a] for a in ("pod", "data")
+                     if a in mesh.shape)
+
+
+def _stacked_batch(cfg, shape, key, lead: Tuple[int, ...]):
+    """Synthetic batch with extra leading axes (clients/local-steps)."""
+    n = math.prod(lead)
+    keys = jax.random.split(key, n)
+    parts = [concrete_batch(cfg, shape, k) for k in keys]
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs).reshape(lead + xs[0].shape), *parts)
+
+
+class Strategy(abc.ABC):
+    """One way to realize FLAD training on a mesh (see module docstring)."""
+
+    name: str = ""
+    #: which driver Session.run uses: "step" -> train_loop, "round" -> fl_loop
+    loop: str = "step"
+
+    def __init__(self, *, learning_rate: float = 1e-3):
+        self.learning_rate = learning_rate
+
+    @abc.abstractmethod
+    def init(self, cfg: ModelConfig, shape: ShapeConfig, mesh, key
+             ) -> Tuple[Any, Any]:
+        """Materialize (params_like, opt_like) in this strategy's layout."""
+
+    @abc.abstractmethod
+    def make_step(self, cfg: ModelConfig, shape: ShapeConfig, mesh
+                  ) -> Callable:
+        """Jitted (params, opt, batch) -> (params, opt, metrics)."""
+
+    def param_specs(self, cfg: ModelConfig, mesh):
+        """PartitionSpec tree for this strategy's parameter layout."""
+        raise NotImplementedError(f"{self.name} has no sharding specs")
+
+    def merge_params(self, state, cfg: Optional[ModelConfig] = None):
+        """Collapse strategy state to flat model params (backup/eval view)."""
+        return state[0]
+
+    def default_batch(self, cfg: ModelConfig, shape: ShapeConfig, mesh, key):
+        """One synthetic batch/round-batch matching ``make_step``'s input."""
+        return concrete_batch(cfg, shape, key)
+
+
+@register_strategy("tensor")
+class TensorStrategy(Strategy):
+    """SPMD data/tensor-parallel baseline; FedSGD via implicit grad mean."""
+
+    loop = "step"
+
+    def __init__(self, *, learning_rate: float = 1e-3, remat: bool = True,
+                 grad_accum: int = 1, fsdp: bool = True):
+        super().__init__(learning_rate=learning_rate)
+        self.remat = remat
+        self.grad_accum = grad_accum
+        self.fsdp = fsdp
+
+    def _optimizer(self):
+        from repro.train.optimizer import Adam
+        return Adam(lr=self.learning_rate)
+
+    def init(self, cfg, shape, mesh, key):
+        from repro.models import build_model
+        model = build_model(cfg)
+        params = model.init(key)
+        return params, self._optimizer().init(params)
+
+    def make_step(self, cfg, shape, mesh):
+        from repro.core.steps import make_train_step
+        return jax.jit(make_train_step(cfg, shape, self._optimizer(),
+                                       remat=self.remat,
+                                       grad_accum=self.grad_accum))
+
+    def param_specs(self, cfg, mesh):
+        from repro.core import sharding as shd
+        from repro.core.steps import abstract_params
+        return shd.param_specs(mesh, abstract_params(cfg), fsdp=self.fsdp)
+
+
+@register_strategy("pipeline")
+class PipelineStrategy(Strategy):
+    """FHDP: FL columns (data axis) x pipeline stages (model axis)."""
+
+    loop = "step"
+
+    def __init__(self, *, learning_rate: float = 1e-3, remat: bool = True,
+                 templates: Optional[Dict] = None,
+                 microbatches: Optional[int] = None):
+        super().__init__(learning_rate=learning_rate)
+        self.remat = remat
+        self.templates = templates
+        self.microbatches = microbatches
+        self.helpers: Optional[Dict] = None
+
+    def resolve_templates(self, cfg, mesh) -> Dict:
+        """Stage templates are shared by init and make_step — pin them."""
+        if self.templates is None:
+            from repro.core import pipeline as pl
+            self.templates = pl.make_templates(cfg, mesh.shape["model"])
+        return self.templates
+
+    def init(self, cfg, shape, mesh, key):
+        from repro.core.fhdp import init_fhdp
+        pp, opt, templates = init_fhdp(
+            cfg, mesh, key, templates=self.resolve_templates(cfg, mesh))
+        self.templates = templates
+        return pp, opt
+
+    def make_step(self, cfg, shape, mesh):
+        from repro.core import pipeline as pl
+        step, h = pl.make_fhdp_train_step(
+            cfg, shape, mesh, learning_rate=self.learning_rate,
+            remat=self.remat, templates=self.resolve_templates(cfg, mesh),
+            microbatches=self.microbatches)
+        self.helpers = h
+        return jax.jit(step)
+
+    def param_specs(self, cfg, mesh):
+        if self.helpers is None:
+            raise RuntimeError(
+                "pipeline sharding specs come from the step builder; call "
+                "make_step (or Session.build) first")
+        return self.helpers["pspec"]
+
+    def merge_params(self, state, cfg=None):
+        from repro.core import pipeline as pl
+        return pl.merge_stage_params(state[0], self.templates)
+
+
+def _abstract_init(cfg):
+    from repro.core.steps import abstract_params
+    return abstract_params(cfg)
+
+
+@register_strategy("fedavg")
+class FedAvgStrategy(Strategy):
+    """Hierarchical FedAvg over client-stacked flat params (paper §3.1)."""
+
+    loop = "round"
+
+    def __init__(self, *, learning_rate: float = 1e-3, local_steps: int = 1,
+                 clients: int = 0, remat: bool = False):
+        super().__init__(learning_rate=learning_rate)
+        self.local_steps = local_steps
+        self.clients = clients
+        self.remat = remat
+
+    def _optimizer(self):
+        from repro.train.optimizer import Adam
+        return Adam(lr=self.learning_rate)
+
+    def n_clients(self, mesh) -> int:
+        if self.clients:
+            return self.clients
+        if not any(a in mesh.shape for a in ("pod", "data")):
+            raise ValueError(
+                f"fedavg derives the client count from the mesh's FL axes "
+                f"(pod/data) but this mesh only has {tuple(mesh.shape)}; "
+                f"pass clients=N or use a mesh with a 'data' axis")
+        return _fl_client_count(mesh)
+
+    def init(self, cfg, shape, mesh, key):
+        from repro.core.fedavg import stack_clients
+        from repro.models import build_model
+        opt = self._optimizer()
+        params0 = build_model(cfg).init(key)
+        cp = stack_clients(params0, self.n_clients(mesh))
+        return cp, jax.vmap(opt.init)(cp)
+
+    def make_step(self, cfg, shape, mesh):
+        from repro.core.fedavg import make_fl_round
+        return jax.jit(make_fl_round(cfg, shape, self._optimizer(),
+                                     local_steps=self.local_steps,
+                                     remat=self.remat))
+
+    def param_specs(self, cfg, mesh):
+        from repro.core.fedavg import client_specs
+        return client_specs(mesh, _abstract_init(cfg))
+
+    def merge_params(self, state, cfg=None):
+        from repro.core.fedavg import fedavg
+        return fedavg(state[0])
+
+    def default_batch(self, cfg, shape, mesh, key):
+        return _stacked_batch(cfg, shape, key,
+                              (self.n_clients(mesh), self.local_steps))
+
+
+@register_strategy("fl_pipeline")
+class FLPipelineStrategy(PipelineStrategy):
+    """FedAvg rounds of FHDP-pipelined local steps (paper Fig. 1)."""
+
+    loop = "round"
+
+    def __init__(self, *, learning_rate: float = 1e-3, local_steps: int = 1,
+                 remat: bool = True, templates: Optional[Dict] = None,
+                 microbatches: Optional[int] = None):
+        super().__init__(learning_rate=learning_rate, remat=remat,
+                         templates=templates, microbatches=microbatches)
+        self.local_steps = local_steps
+
+    def init(self, cfg, shape, mesh, key):
+        from repro.core.fhdp import init_fhdp
+        pp, opt, templates = init_fhdp(
+            cfg, mesh, key, templates=self.resolve_templates(cfg, mesh),
+            fed_sgd=False)
+        self.templates = templates
+        return pp, opt
+
+    def make_step(self, cfg, shape, mesh):
+        from repro.core.fhdp import make_fl_pipeline_round
+        fl_round, h = make_fl_pipeline_round(
+            cfg, shape, mesh, local_steps=self.local_steps,
+            learning_rate=self.learning_rate, remat=self.remat,
+            templates=self.resolve_templates(cfg, mesh),
+            microbatches=self.microbatches)
+        self.helpers = h
+        return jax.jit(fl_round)
+
+    def default_batch(self, cfg, shape, mesh, key):
+        return _stacked_batch(cfg, shape, key, (self.local_steps,))

@@ -1,0 +1,32 @@
+"""jax version compatibility shims.
+
+The codebase targets the modern ``jax.shard_map`` / ``check_vma`` API;
+older jax (< 0.5) only ships ``jax.experimental.shard_map`` with the
+``check_rep`` spelling. Route every call through :func:`shard_map` so the
+whole stack (pipeline, MoE EP, mesh factories) runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def pallas_tpu_compiler_params():
+    """The pallas TPU CompilerParams class (jax < 0.5 spells it
+    TPUCompilerParams)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        raise RuntimeError(
+            "jax.experimental.pallas.tpu has neither CompilerParams nor "
+            "TPUCompilerParams; unsupported jax version")
+    return cls

@@ -13,6 +13,9 @@ Per pair this records: compile success, ``memory_analysis`` (fits/overflow),
 ``cost_analysis`` FLOPs/bytes (per-device, post-SPMD), the collective
 schedule parsed from compiled HLO, and the three roofline terms.
 
+The lowering itself lives in :mod:`repro.api.lowering` (also reachable as
+``Session.lower()``); this launcher adds the sweep + HLO analysis.
+
 Usage:
   python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
   python -m repro.launch.dryrun --all --multi-pod --out results/dryrun.json
@@ -23,112 +26,13 @@ import time
 import traceback
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.config import INPUT_SHAPES, TPU_V5E, ModelConfig, ShapeConfig
+from repro.api.lowering import build_lowered, default_grad_accum  # noqa: F401
+from repro.api.mesh import MeshSpec
+from repro.config import INPUT_SHAPES, TPU_V5E
 from repro.configs import ARCH_IDS, get_config
-from repro.configs.common import cache_len, input_specs, state_specs
-from repro.core import act_sharding, sharding as shd
-from repro.core.steps import (abstract_opt_state, abstract_params,
-                              make_prefill_step, make_serve_step,
-                              make_train_step)
 from repro.launch import hlo_parse, hlo_stats
-from repro.launch.mesh import make_production_mesh
-from repro.train.optimizer import Adam
 
 ASSIGNED = [a for a in ARCH_IDS if not a.startswith("flad_")]
-
-
-def _named(mesh, tree):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
-                        is_leaf=lambda x: isinstance(x, P))
-
-
-# per-arch overrides found by the §Perf hillclimb (EXPERIMENTS.md):
-# qwen2.5-32b fits at accum=1 (13.8 GiB), halving FSDP re-gathers
-# (collective term 24.7s -> 14.3s); yi-34b / qwen3-32b do not (16.1-18.6).
-HILLCLIMBED_ACCUM = {"qwen2.5-32b": 1}
-
-
-def default_grad_accum(cfg: ModelConfig, shape: ShapeConfig) -> int:
-    """Smallest microbatching for which train activations fit 16 GiB HBM
-    (each accumulation step re-gathers FSDP weights, so less is more)."""
-    if shape.kind != "train":
-        return 1
-    if cfg.name in HILLCLIMBED_ACCUM:
-        return HILLCLIMBED_ACCUM[cfg.name]
-    if cfg.moe.num_experts and cfg.d_model >= 6144:
-        return 4                       # dbrx-class
-    if cfg.param_count() > 20e9 or cfg.prefix_tokens \
-            or cfg.family == "encdec" or cfg.moe.num_experts:
-        return 2
-    return 1
-
-
-def build_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
-                  strategy: str = "tensor", seq_shard: bool = True,
-                  fsdp: bool = True, remat: bool = True,
-                  grad_accum: Optional[int] = None):
-    """Lower the (train|prefill|serve) step for this shape on this mesh."""
-    if strategy == "pipeline":
-        from repro.core.fhdp import build_pipeline_lowered
-        return build_pipeline_lowered(cfg, shape, mesh, remat=remat)
-
-    params_abs = abstract_params(cfg)
-    pspecs = shd.param_specs(mesh, params_abs, fsdp=fsdp)
-    psh = _named(mesh, pspecs)
-    batch_abs = input_specs(cfg, shape)
-    bsh = _named(mesh, shd.batch_specs(mesh, batch_abs))
-
-    rules = act_sharding.rules_for(mesh, shape.kind) if seq_shard else {}
-    ctx = act_sharding.act_rules(**rules) if rules else _null_ctx()
-
-    if shape.kind == "train":
-        opt = Adam()
-        opt_abs = abstract_opt_state(params_abs, opt)
-        osh = _named(mesh, shd.param_specs(mesh, opt_abs, fsdp=fsdp))
-        if grad_accum is None:
-            grad_accum = default_grad_accum(cfg, shape)
-        step = make_train_step(cfg, shape, opt, remat=remat,
-                               grad_accum=grad_accum)
-        with ctx:
-            return jax.jit(step, in_shardings=(psh, osh, bsh),
-                           out_shardings=(psh, osh, None),
-                           donate_argnums=(0, 1)) \
-                .lower(params_abs, opt_abs, batch_abs)
-
-    st_abs = state_specs(cfg, shape)
-    ssh = _named(mesh, shd.state_specs_sharding(mesh, st_abs))
-    if shape.kind == "prefill":
-        step = make_prefill_step(cfg, shape)
-        with ctx:
-            return jax.jit(step, in_shardings=(psh, bsh, ssh),
-                           out_shardings=(None, ssh),
-                           donate_argnums=(2,)) \
-                .lower(params_abs, batch_abs, st_abs)
-
-    # decode: one new token against the cache/state
-    step = make_serve_step(cfg, shape)
-    tok_abs = input_specs(cfg, shape)["tokens"]
-    tsh = _named(mesh, shd.batch_specs(mesh, {"t": tok_abs})["t"])
-    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
-    with ctx:
-        return jax.jit(step,
-                       in_shardings=(psh, tsh, ssh,
-                                     NamedSharding(mesh, P())),
-                       out_shardings=(None, ssh),
-                       donate_argnums=(2,)) \
-            .lower(params_abs, tok_abs, st_abs, pos_abs)
-
-
-class _null_ctx:
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *a):
-        return False
 
 
 def analyze(compiled, mesh, hw=TPU_V5E) -> dict:
@@ -190,12 +94,9 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     dbg = os.environ.get("DRYRUN_MESH")  # e.g. "4,4" or "2,2,4" for debugging
-    if dbg:
-        from repro.launch.mesh import _mk
-        dims = tuple(int(x) for x in dbg.split(","))
-        mesh = _mk(dims, ("pod", "data", "model")[-len(dims):])
-    else:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = MeshSpec.parse(dbg, devices=0) if dbg \
+        else MeshSpec(production=True, multi_pod=multi_pod, devices=0)
+    mesh = spec.build()
     rec = {"arch": arch, "shape": shape_name, "strategy": strategy,
            "mesh": "x".join(map(str, mesh.devices.shape)),
            "multi_pod": multi_pod, "seq_shard": seq_shard, "fsdp": fsdp}

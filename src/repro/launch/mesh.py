@@ -9,6 +9,8 @@ FLAD mapping: ``pod`` = cloud regions, ``data`` = vehicles/edge clients,
 
 Functions (never module-level constants) so importing this module does not
 touch jax device state — the dry-run must set XLA_FLAGS before first init.
+Prefer the declarative :class:`repro.api.MeshSpec` front end, which also
+handles host-device forcing.
 """
 from __future__ import annotations
 
@@ -16,13 +18,25 @@ import jax
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    # axis_types only exists on newer jax; older versions default to Auto
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+#: public alias used by repro.api.MeshSpec
+make_mesh = _mk
+
+
+#: deployment shapes, keyed by multi_pod (shared with repro.api.MeshSpec)
+PRODUCTION_SHAPES = {False: (16, 16), True: (2, 16, 16)}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    shape = PRODUCTION_SHAPES[multi_pod]
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return _mk(shape, axes)
 

@@ -1,17 +1,15 @@
-"""Serving launcher (paper Fig. 2 inference procedure).
+"""Serving launcher (paper Fig. 2 inference procedure) — a thin CLI over
+:meth:`repro.api.Session.serve`.
 
 Vehicles send vision-encoder features to the edge; the edge AD-LLM
 prefills the feature+instruction context and decodes waypoint tokens /
-regresses waypoints, returned to the vehicle's PID controller. This
-driver batches requests, runs prefill once and decode steps against the
-KV cache.
+regresses waypoints, returned to the vehicle's PID controller. The
+batched prefill/decode driver lives in :mod:`repro.api.serving`.
 
   PYTHONPATH=src python -m repro.launch.serve --arch flad-adllm \
       --batch 8 --decode-steps 16
 """
 import argparse
-import os
-import time
 
 
 def main():
@@ -27,56 +25,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    if args.devices:
-        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                                   + f" --xla_force_host_platform_device_count={args.devices}").strip()
+    from repro.api import MeshSpec, Session
 
-    import jax
-    import jax.numpy as jnp
-
-    from repro.config import ShapeConfig
-    from repro.configs import get_config
-    from repro.configs.common import reduced
-    from repro.core.steps import make_prefill_step, make_serve_step
-    from repro.models import build_model
-
-    cfg = get_config(args.arch)
-    if not args.full:
-        cfg = reduced(cfg)
-    shape = ShapeConfig("serve", args.context + args.decode_steps,
-                        args.batch, "decode")
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
-    prefill = jax.jit(make_prefill_step(cfg, shape))
-    serve = jax.jit(make_serve_step(cfg, shape))
-
-    total_toks = 0
-    t0 = time.time()
-    for r in range(args.requests):
-        key, k1 = jax.random.split(key)
-        ctx = jax.random.randint(k1, (args.batch, args.context), 0,
-                                 cfg.vocab_size, jnp.int32)
-        state = model.init_state(args.batch, shape.seq_len)
-        batch = {"tokens": ctx}
-        if cfg.family == "encdec":
-            batch = {"frames": jax.random.normal(
-                k1, (args.batch, args.context, cfg.prefix_dim)),
-                "tokens": ctx}
-        logits, state = prefill(params, batch, state)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out = [tok]
-        for i in range(args.decode_steps):
-            logits, state = serve(params, tok, state, args.context + i)
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            out.append(tok)
-        seqs = jnp.concatenate(out, axis=1)
-        total_toks += int(seqs.size)
-        print(f"[serve] request batch {r}: generated {seqs.shape} "
-              f"first row: {seqs[0, :8].tolist()}")
-    dt = time.time() - t0
-    print(f"[serve] {total_toks} tokens in {dt:.2f}s "
-          f"({total_toks / dt:.1f} tok/s incl. compile)")
+    session = Session(args.arch, full=args.full, strategy="tensor",
+                      seed=args.seed,
+                      mesh=MeshSpec((1,), axes=("data",),
+                                    devices=args.devices or 0))
+    session.serve(requests=args.requests, batch=args.batch,
+                  context=args.context, decode_steps=args.decode_steps)
 
 
 if __name__ == "__main__":

@@ -1,15 +1,16 @@
-"""Training launcher.
+"""Training launcher — a thin CLI over :class:`repro.api.Session`.
 
 On the container (CPU) this runs REDUCED variants on a small forced-host
 mesh; on a real TPU slice the same flags drive the full configs on the
 production mesh. The FHDP strategy is the paper's system; ``tensor`` is
-the datacenter-style baseline.
+the datacenter-style baseline; ``fedavg``/``fl_pipeline`` run FedAvg
+rounds instead of steps. All wiring (mesh, devices, strategy, hooks)
+lives in :mod:`repro.api` — this file only parses flags.
 
   PYTHONPATH=src python -m repro.launch.train --arch flad-vision \
       --strategy pipeline --steps 50 --devices 8 --mesh 2,4
 """
 import argparse
-import os
 
 
 def main():
@@ -17,9 +18,12 @@ def main():
     ap.add_argument("--arch", default="flad-vision")
     ap.add_argument("--shape", default=None, help="named shape or 'SEQxBATCH'")
     ap.add_argument("--strategy", default="pipeline",
-                    choices=["tensor", "pipeline"])
-    ap.add_argument("--steps", type=int, default=50)
+                    choices=["tensor", "pipeline", "fedavg", "fl_pipeline"])
+    ap.add_argument("--steps", type=int, default=50,
+                    help="train steps (FL strategies: rounds)")
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="local steps per FL round (fedavg/fl_pipeline)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (CPU testing)")
     ap.add_argument("--mesh", default="2,4", help="data,model (or pod,data,model)")
@@ -29,66 +33,23 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    if args.devices:
-        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                                   + f" --xla_force_host_platform_device_count={args.devices}").strip()
-
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-
-    from repro.config import INPUT_SHAPES, ShapeConfig
-    from repro.configs import get_config
-    from repro.configs.common import concrete_batch, reduced
-    from repro.core import pipeline as pl
-    from repro.core import sharding as shd
-    from repro.core.steps import make_train_step
-    from repro.launch.mesh import _mk
-    from repro.models import build_model
+    from repro.api import LoopHooks, MeshSpec, Session
     from repro.recovery.backup import EdgeBackup
-    from repro.train.loop import train_loop
-    from repro.train.optimizer import Adam
 
-    dims = tuple(int(x) for x in args.mesh.split(","))
-    mesh = _mk(dims, ("pod", "data", "model")[-len(dims):])
-    cfg = get_config(args.arch)
-    if not args.full:
-        cfg = reduced(cfg)
-    if args.shape and args.shape in INPUT_SHAPES:
-        shape = INPUT_SHAPES[args.shape]
-    elif args.shape:
-        s, b = (int(x) for x in args.shape.split("x"))
-        shape = ShapeConfig("cli", s, b, "train")
-    else:
-        shape = ShapeConfig("cli", 128, int(np.prod(dims)) * 2, "train")
-
-    key = jax.random.PRNGKey(args.seed)
-    rngs = iter(jax.random.split(key, args.steps + 10))
-
-    def batch_iter():
-        while True:
-            yield concrete_batch(cfg, shape, next(rngs))
-
-    backup = EdgeBackup(interval=10)
-    if args.strategy == "pipeline":
-        from repro.core.fhdp import init_fhdp
-        step, h = pl.make_fhdp_train_step(cfg, shape, mesh,
-                                          learning_rate=args.lr)
-        pp, opt, _ = init_fhdp(cfg, mesh, key)
-        out = train_loop(jax.jit(step), pp, opt, batch_iter(),
-                         steps=args.steps, backup=backup,
-                         checkpoint_path=args.checkpoint,
-                         checkpoint_every=50 if args.checkpoint else 0)
-    else:
-        model = build_model(cfg)
-        opt = Adam(lr=args.lr)
-        params = model.init(key)
-        opt_state = opt.init(params)
-        step = jax.jit(make_train_step(cfg, shape, opt))
-        out = train_loop(step, params, opt_state, batch_iter(),
-                         steps=args.steps, backup=backup,
-                         checkpoint_path=args.checkpoint,
-                         checkpoint_every=50 if args.checkpoint else 0)
+    options = {}
+    fl = args.strategy in ("fedavg", "fl_pipeline")
+    if fl:
+        options["local_steps"] = args.local_steps
+    session = Session(
+        args.arch, full=args.full, shape=args.shape,
+        mesh=MeshSpec.parse(args.mesh, devices=args.devices or None),
+        strategy=args.strategy, learning_rate=args.lr, seed=args.seed,
+        hooks=LoopHooks(log_every=1 if fl else 10,
+                        backup=EdgeBackup(interval=10),
+                        checkpoint_path=args.checkpoint,
+                        checkpoint_every=50 if args.checkpoint else 0),
+        **options)
+    out = session.run(args.steps)
     last = out["history"][-1]
     print(f"[train] done: {last}")
 

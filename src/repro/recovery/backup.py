@@ -29,8 +29,13 @@ class EdgeBackup:
         self.backups_taken = 0
 
     def maybe_backup(self, step: int, params) -> bool:
+        """``params`` may be a pytree or a zero-arg thunk returning one —
+        the thunk form defers (possibly expensive) snapshot-view work to
+        the steps that actually back up."""
         if step % self.interval != 0:
             return False
+        if callable(params):
+            params = params()
         host = jax.tree.map(lambda x: np.asarray(x), params)
         self._latest = Snapshot(step, host, time.time())
         self.backups_taken += 1

@@ -1,63 +1,102 @@
 """Host-side training loops.
 
 ``train_loop`` drives any jitted (params, opt, batch) -> (params, opt,
-metrics) step with logging, periodic edge backup, and checkpointing.
-``fl_loop`` drives hierarchical FedAvg rounds over per-client datasets
-(paper Fig. 1 training procedure) using core/fedavg.
+metrics) step; ``fl_loop`` drives hierarchical FedAvg rounds over
+per-client datasets (paper Fig. 1 training procedure) using core/fedavg.
+
+Both share a :class:`LoopHooks` struct for logging, periodic edge backup,
+and checkpointing — the single place ``repro.api.Session`` (and any other
+driver) plugs side effects into the hot loop.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Callable, Dict, Iterator, Optional, Sequence
+from typing import Callable, Dict, Iterator, Optional
 
-import jax
 import numpy as np
 
 from repro.recovery.backup import EdgeBackup
+from repro.train.checkpoint import save as _save_checkpoint
+
+
+def _identity(tree):
+    return tree
+
+
+@dataclasses.dataclass
+class LoopHooks:
+    """Side effects of one training/FL loop, in one place.
+
+    ``backup_view`` maps the loop's raw params (which may be a stage
+    container or client-stacked tree) to what EdgeBackup should snapshot.
+    None means raw params — except under ``Session.run``, which defaults
+    it to ``strategy.merge_params`` so snapshots are redeployable by
+    recovery's ``restage`` under any template.
+    """
+
+    log_every: int = 10
+    log_fn: Callable = print
+    backup: Optional[EdgeBackup] = None
+    backup_view: Optional[Callable] = None
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: int = 0
+    #: optional user callback (step_or_round_idx, params, metrics) -> None
+    on_step: Optional[Callable] = None
+
+    def after_step(self, i: int, params, metrics=None) -> None:
+        if self.backup is not None:
+            view = self.backup_view or _identity
+            self.backup.maybe_backup(i, lambda: view(params))
+        if self.checkpoint_path and self.checkpoint_every and \
+                (i + 1) % self.checkpoint_every == 0:
+            _save_checkpoint(self.checkpoint_path, params, step=i + 1)
+        if self.on_step is not None:
+            self.on_step(i, params, metrics)
+
+    def should_log(self, i: int) -> bool:
+        return (i + 1) % self.log_every == 0 or i == 0
 
 
 def train_loop(step_fn: Callable, params, opt_state,
                batch_iter: Iterator, *, steps: int,
-               log_every: int = 10,
-               backup: Optional[EdgeBackup] = None,
-               checkpoint_path: Optional[str] = None,
-               checkpoint_every: int = 0,
-               log_fn: Callable = print) -> Dict:
+               hooks: Optional[LoopHooks] = None) -> Dict:
+    hooks = hooks or LoopHooks()
     hist = []
     t0 = time.time()
     for i in range(steps):
         batch = next(batch_iter)
         params, opt_state, metrics = step_fn(params, opt_state, batch)
-        if backup is not None:
-            backup.maybe_backup(i, params)
-        if checkpoint_path and checkpoint_every and \
-                (i + 1) % checkpoint_every == 0:
-            from repro.train.checkpoint import save
-            save(checkpoint_path, params, step=i + 1)
-        if (i + 1) % log_every == 0 or i == 0:
+        hooks.after_step(i, params, metrics)
+        if hooks.should_log(i):
             m = {k: float(v) for k, v in metrics.items()
                  if np.ndim(v) == 0}
             hist.append(dict(m, step=i + 1))
             rate = (i + 1) / (time.time() - t0)
-            log_fn(f"[train] step {i+1:5d} "
-                   + " ".join(f"{k}={v:.4f}" for k, v in m.items())
-                   + f" ({rate:.2f} it/s)")
+            hooks.log_fn(f"[train] step {i+1:5d} "
+                         + " ".join(f"{k}={v:.4f}" for k, v in m.items())
+                         + f" ({rate:.2f} it/s)")
     return {"params": params, "opt_state": opt_state, "history": hist}
 
 
 def fl_loop(fl_round: Callable, client_params, client_opt,
             round_batches_fn: Callable, *, rounds: int,
-            log_every: int = 1, log_fn: Callable = print) -> Dict:
-    """round_batches_fn(round_idx) -> client-stacked batches [C, E, B, ...]."""
+            hooks: Optional[LoopHooks] = None) -> Dict:
+    """round_batches_fn(round_idx) -> client-stacked batches [C, E, B, ...].
+
+    Rounds are few and each is expensive, so the default cadence logs
+    every round."""
+    hooks = hooks or LoopHooks(log_every=1)
     hist = []
     for r in range(rounds):
         batches = round_batches_fn(r)
         client_params, client_opt, metrics = fl_round(client_params,
                                                       client_opt, batches)
-        if (r + 1) % log_every == 0:
+        hooks.after_step(r, client_params, metrics)
+        if hooks.should_log(r):
             m = {k: float(np.mean(v)) for k, v in metrics.items()}
             hist.append(dict(m, round=r + 1))
-            log_fn(f"[fl] round {r+1:4d} "
-                   + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
+            hooks.log_fn(f"[fl] round {r+1:4d} "
+                         + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
     return {"client_params": client_params, "client_opt": client_opt,
             "history": hist}

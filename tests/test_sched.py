@@ -2,7 +2,7 @@
 invariants with hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import get_config
 from repro.sched import swift as SW
