@@ -1,0 +1,110 @@
+"""Live repartition latency — the executed counterpart of Fig. 5(b).
+
+Measures the real scheduler->runtime template switch on a running FHDP
+session (pre-generated template lookup, live param merge + restage, jitted
+step rebuild, recompile) and writes ``BENCH_repartition.json`` — the first
+entry of the repo's performance trajectory. ``scripts/validate_bench.py``
+gates the schema in CI.
+
+    PYTHONPATH=src python benchmarks/repartition_latency.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+DEFAULT_OUT = "BENCH_repartition.json"
+MESH = (2, 4)
+DEPART_VID = 1
+
+
+def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
+    import jax
+
+    from repro.api import LoopHooks, MeshSpec, Session
+    from repro.api.session import load_config
+    from repro.config import ShapeConfig
+    from repro.recovery.recover import Repartitioner, recover
+    from repro.sched.costmodel import demo_fleet, model_units
+
+    pre = 2 if quick else 5
+    post = 2 if quick else 5
+    cfg = load_config("flad-vision").replace(num_layers=4)
+    unit_cap = model_units(cfg, seq_len=64, num_units=4)[0].cap
+    session = Session(cfg=cfg, strategy="swift_pipeline",
+                      mesh=MeshSpec(MESH), learning_rate=2e-3,
+                      shape=ShapeConfig("bench", 16, 8, "train"),
+                      fleet=demo_fleet(unit_cap), seq_len=64)
+    session.build()
+    strat = session.strategy
+
+    hooks = LoopHooks(log_every=max(pre, 1))
+    out_pre = session.run(pre, hooks=hooks)
+    pre_loss = out_pre["history"][-1]["loss"]
+
+    # analytic recovery comparison on the same fleet/templates (Fig. 5b)
+    vehicles = list(strat.vehicles)
+    analytic = {
+        s: recover(s, strat.template_set, DEPART_VID, vehicles,
+                   strat.units, strat.cost).seconds
+        for s in ("template", "elastic", "relaunch")}
+
+    # the measured departure: lookup -> restage -> rebuild, then recompile
+    rep = Repartitioner(session, {})
+    params, opt = session.state
+    step2, pp2, opt2 = rep.depart(pre, DEPART_VID, params, opt)
+    ev = rep.events[0]
+
+    batch = next(session.default_batches())
+    t0 = time.perf_counter()
+    jax.block_until_ready(step2(pp2, opt2, batch))
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(step2(pp2, opt2, batch))
+    post_step_s = time.perf_counter() - t0
+
+    out_post = session.run(post, hooks=hooks)
+    post_loss = out_post["history"][-1]["loss"]
+
+    res = strat.swift_result
+    payload = {
+        "bench": "repartition_latency",
+        "schema_version": 1,
+        "arch": cfg.name,
+        "mesh": list(MESH),
+        "quick": bool(quick),
+        "fleet": [dataclasses.asdict(v) for v in vehicles],
+        "swift": {"phase1_s": res.phase1_s, "phase2_s": res.phase2_s,
+                  "essential_pipelines": len(res.essential)},
+        "event": ev.as_dict(),
+        "compile_s": compile_s,
+        "post_step_s": post_step_s,
+        "pre_loss": float(pre_loss),
+        "post_loss": float(post_loss),
+        "analytic": {f"{k}_s": v for k, v in analytic.items()},
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"repartition: {ev.total_s * 1e3:.1f} ms live switch "
+          f"(+{compile_s:.2f} s recompile), analytic template "
+          f"{analytic['template']:.2f} s vs relaunch "
+          f"{analytic['relaunch']:.2f} s -> {out}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,8 @@
 
   Fig. 5(a) SWIFT optimization time     -> swift_opt
   Fig. 5(b) recovery time               -> recovery_bench
+  §4.2 executed (live repartition)      -> repartition_latency
+                                           (writes BENCH_repartition.json)
   Fig. 6(a,b) pipeline execution time   -> pipeline_exec
   Fig. 7(a,b) + Table 2 FHDP            -> fhdp_throughput
   Fig. 8(a) FL accuracy                 -> fl_accuracy
@@ -27,8 +29,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (distill_quality, fhdp_throughput, fl_accuracy,
-                            pipeline_exec, recovery_bench, roofline,
-                            swift_opt)
+                            pipeline_exec, recovery_bench,
+                            repartition_latency, roofline, swift_opt)
 
     agent_holder = {}
 
@@ -43,6 +45,7 @@ def main() -> None:
         ("swift_opt", run_swift),
         ("pipeline_exec", run_pipeline_exec),
         ("recovery", lambda: recovery_bench.run(quick=args.quick)),
+        ("repartition", lambda: repartition_latency.run(quick=args.quick)),
         ("fhdp_throughput", lambda: fhdp_throughput.run(quick=args.quick)),
         ("fl_accuracy", lambda: fl_accuracy.run(quick=args.quick)),
         ("distill_quality", lambda: distill_quality.run(quick=args.quick)),

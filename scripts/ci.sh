@@ -22,6 +22,18 @@ if [[ "${1:-}" != "--fast" ]]; then
   echo "=== smoke: serve launcher (Session.serve) ==="
   python -m repro.launch.serve --devices 2 --batch 2 --context 16 \
       --decode-steps 4 --requests 1
+
+  echo "=== smoke: SWIFT live repartition example (dry run) ==="
+  python examples/swift_repartition.py --dry-run
+
+  echo "=== bench: repartition latency (quick, scratch output) ==="
+  # scratch path: never clobber the committed full-run perf artifact
+  python benchmarks/repartition_latency.py --quick \
+      --out /tmp/BENCH_repartition.quick.json
+  python scripts/validate_bench.py /tmp/BENCH_repartition.quick.json
+
+  echo "=== validate committed perf-trajectory artifact ==="
+  python scripts/validate_bench.py BENCH_repartition.json
 fi
 
 echo "CI OK"

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Validate BENCH_repartition.json against the perf-trajectory schema.
+
+CI gate for the scheduler->runtime repartition path: beyond key/type
+checks it enforces the two invariants the runtime depends on — merged
+params bit-identical across the restage boundary, and no model units
+dropped by the template bridge (old and new templates cover the same
+layer count).
+
+    python scripts/validate_bench.py BENCH_repartition.json
+"""
+import json
+import math
+import sys
+
+TOP = {
+    "bench": str, "schema_version": int, "arch": str, "mesh": list,
+    "quick": bool, "fleet": list, "swift": dict, "event": dict,
+    "compile_s": (int, float), "post_step_s": (int, float),
+    "pre_loss": (int, float), "post_loss": (int, float), "analytic": dict,
+}
+EVENT = {
+    "step": int, "vid": int, "old_template": dict, "new_template": dict,
+    "lookup_s": (int, float), "restage_s": (int, float),
+    "rebuild_s": (int, float), "total_s": (int, float),
+    "refresh_s": (int, float), "moved_bytes": (int, float),
+    "params_identical": bool,
+}
+
+
+def fail(msg: str) -> None:
+    raise SystemExit(f"validate_bench: FAIL — {msg}")
+
+
+def check_keys(obj: dict, spec: dict, where: str) -> None:
+    for key, typ in spec.items():
+        if key not in obj:
+            fail(f"{where} missing key {key!r}")
+        if not isinstance(obj[key], typ):
+            fail(f"{where}[{key!r}] is {type(obj[key]).__name__}, "
+                 f"expected {typ}")
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_repartition.json"
+    with open(path) as f:
+        data = json.load(f)
+
+    check_keys(data, TOP, "payload")
+    if data["bench"] != "repartition_latency":
+        fail(f"unexpected bench name {data['bench']!r}")
+    ev = data["event"]
+    check_keys(ev, EVENT, "event")
+
+    for key in ("lookup_s", "restage_s", "rebuild_s", "total_s",
+                "refresh_s"):
+        if ev[key] < 0:
+            fail(f"event[{key!r}] negative")
+    if not ev["params_identical"]:
+        fail("merged params were NOT bit-identical across the restage")
+    old = sum(sum(v) for v in ev["old_template"].values())
+    new = sum(sum(v) for v in ev["new_template"].values())
+    if old != new or new <= 0:
+        fail(f"template bridge dropped units: {old} layers -> {new}")
+    for key in ("pre_loss", "post_loss"):
+        if not math.isfinite(data[key]):
+            fail(f"{key} is not finite")
+    for key in ("template_s", "elastic_s", "relaunch_s"):
+        if key not in data["analytic"]:
+            fail(f"analytic missing {key!r}")
+
+    print(f"validate_bench: OK — {path} "
+          f"(live switch {ev['total_s'] * 1e3:.1f} ms, "
+          f"{new} layers re-staged, params identical)")
+
+
+if __name__ == "__main__":
+    main()

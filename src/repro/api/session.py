@@ -6,7 +6,7 @@ A Session composes:
     ``full=True`` selects the published scale),
   * a :class:`repro.api.MeshSpec` (declarative mesh + device forcing),
   * a registered :class:`repro.api.Strategy` (``tensor``, ``pipeline``,
-    ``fedavg``, ``fl_pipeline``),
+    ``fedavg``, ``fl_pipeline``, ``swift_pipeline``),
   * :class:`repro.train.loop.LoopHooks` (log / edge backup / checkpoint),
 
 and exposes the four FLAD entrypoints behind one object::
@@ -151,6 +151,34 @@ class Session:
     def step_fn(self) -> Callable:
         return self.build()[0]
 
+    def rebuild(self, *, templates=None, state=None) -> Callable:
+        """Drop the cached jitted step and rebuild it — the runtime half of
+        live dynamic repartitioning. ``templates`` replaces a
+        template-bearing strategy's stage templates first; ``state``
+        becomes the session state (default: keep the current state — the
+        session is never silently re-initialized)."""
+        if templates is not None:
+            if not hasattr(self.strategy, "templates"):
+                raise ValueError(
+                    f"strategy {self.strategy.name!r} has no stage "
+                    f"templates to replace")
+            self.strategy.templates = {k: tuple(v)
+                                       for k, v in templates.items()}
+        step = self.strategy.make_step(self.cfg, self.shape, self.mesh)
+        if state is not None:
+            self.state = state
+        self._built = (step, self.state)
+        return step
+
+    def _checkpoint_meta(self) -> dict:
+        """Sidecar metadata for checkpoints: enough to restage the raw
+        (stage/client-stacked) container later."""
+        meta = {"strategy": self.strategy.name, "arch": self.cfg.name}
+        templates = getattr(self.strategy, "templates", None)
+        if templates:
+            meta["templates"] = {k: list(v) for k, v in templates.items()}
+        return meta
+
     def param_specs(self):
         return self.strategy.param_specs(self.cfg, self.mesh)
 
@@ -195,6 +223,11 @@ class Session:
             hooks = dataclasses.replace(
                 hooks, backup_view=lambda p: self.strategy.merge_params(
                     (p, None), self.cfg))
+        if hooks.checkpoint_path and hooks.checkpoint_meta is None:
+            # record the live layout next to structured checkpoints (bound
+            # method, so a mid-run repartition is reflected at save time)
+            hooks = dataclasses.replace(
+                hooks, checkpoint_meta=self._checkpoint_meta)
         params, opt = init_state
         if self.strategy.loop == "round":
             if batches is None:
@@ -213,7 +246,8 @@ class Session:
             out = train_loop(step, params, opt, it, steps=steps,
                              hooks=hooks)
             self.state = (out["params"], out["opt_state"])
-        self._built = (step, self.state)
+        # a live repartition may have swapped the jitted step mid-loop
+        self._built = (out.get("step_fn", step), self.state)
         self.history.extend(out["history"])
         return out
 

@@ -13,14 +13,17 @@ A :class:`Strategy` owns the three things every FLAD execution mode needs:
 
 Registered strategies:
 
-  ``tensor``       datacenter-style SPMD baseline (FedSGD gradient mean)
-  ``pipeline``     FHDP — FL data columns x pipeline stages (paper §4)
-  ``fedavg``       hierarchical FedAvg over client-stacked flat params
-  ``fl_pipeline``  FedAvg rounds of FHDP-pipelined local steps (paper Fig. 1)
+  ``tensor``          datacenter-style SPMD baseline (FedSGD gradient mean)
+  ``pipeline``        FHDP — FL data columns x pipeline stages (paper §4)
+  ``fedavg``          hierarchical FedAvg over client-stacked flat params
+  ``fl_pipeline``     FedAvg rounds of FHDP-pipelined local steps (Fig. 1)
+  ``swift_pipeline``  FHDP whose stage templates come from the SWIFT
+                      scheduler over a declared heterogeneous fleet, with
+                      pre-generated departure templates for live dynamic
+                      repartitioning (paper §4.1.3 + §4.2)
 
-New execution modes (async rounds, new backends, SWIFT-driven
-repartitioning) plug in via :func:`register_strategy` instead of another
-bespoke launcher.
+New execution modes (async rounds, new backends) plug in via
+:func:`register_strategy` instead of another bespoke launcher.
 """
 from __future__ import annotations
 
@@ -196,6 +199,145 @@ class PipelineStrategy(Strategy):
         return pl.merge_stage_params(state[0], self.templates)
 
 
+@register_strategy("swift_pipeline")
+class SwiftPipelineStrategy(PipelineStrategy):
+    """FHDP with SWIFT-scheduled stage templates + live repartitioning.
+
+    Closes the scheduler -> runtime loop: model units come from the cost
+    model (:func:`repro.sched.costmodel.model_units`), SWIFT schedules the
+    declared heterogeneous ``fleet`` over them, the winning pipeline is
+    bridged to a per-stack stage template for the FHDP step, and departure
+    templates are pre-generated (paper §4.2) so a mid-run vehicle
+    departure swaps templates via :class:`repro.recovery.recover
+    .Repartitioner` instead of replanning.
+
+    ``fleet``: "nano*4,agx*2"-style preset string, spec dicts, or
+    :class:`~repro.sched.costmodel.Vehicle` list (see ``parse_fleet``).
+    """
+
+    loop = "step"
+
+    def __init__(self, *, learning_rate: float = 1e-3, remat: bool = True,
+                 microbatches: Optional[int] = None,
+                 fleet="nano*4,agx*2", seq_len: int = 512,
+                 cost=None, agent=None):
+        super().__init__(learning_rate=learning_rate, remat=remat,
+                         templates=None, microbatches=microbatches)
+        from repro.sched.costmodel import CostParams, parse_fleet
+        self.vehicles = parse_fleet(fleet)
+        self.seq_len = seq_len
+        self.cost = cost or CostParams()
+        self.agent = agent
+        self.units = None
+        self.swift_result = None
+        self.active_pipeline = None
+        self.template_set = None
+        self._cfg = None
+        self._stages: Optional[int] = None
+
+    # ---- scheduling -------------------------------------------------------
+    def schedule(self, cfg: ModelConfig, stages: int):
+        """Run SWIFT once over (fleet x model units) and pre-generate the
+        departure templates; cached for the strategy's lifetime."""
+        if self.swift_result is not None:
+            return self.swift_result
+        from repro.core.pipeline import get_adapter
+        from repro.recovery.templates import TemplateSet, pregenerate
+        from repro.sched.costmodel import model_units
+        from repro.sched.swift import swift, units_to_layer_template
+        self._cfg, self._stages = cfg, stages
+        n_units = sum(get_adapter(cfg).counts(cfg).values())
+        self.units = model_units(cfg, seq_len=self.seq_len,
+                                 num_units=n_units)
+        self.swift_result = swift(self.vehicles, self.units,
+                                  agent=self.agent, cp=self.cost)
+        candidates = [self.swift_result.initial] \
+            + list(self.swift_result.essential.values())
+        feasible = []
+        for pipe in candidates:
+            if pipe is None:
+                continue
+            try:
+                units_to_layer_template(pipe, stages)
+            except ValueError:
+                continue        # cannot fold onto this SPMD width
+            feasible.append(pipe)
+        if not feasible:
+            raise ValueError(
+                f"SWIFT found no pipeline for {len(self.vehicles)} vehicles "
+                f"x {len(self.units)} units that maps onto {stages} SPMD "
+                f"stages; grow the fleet's memory or the mesh's model axis")
+        self.active_pipeline = min(feasible, key=lambda p: p.time)
+        try:
+            ts = pregenerate(
+                self.vehicles, self.units, self.cost, agent=self.agent,
+                active=self.active_pipeline)
+            on_dep = self._foldable_only(ts.on_departure)
+        except ValueError:
+            on_dep = {}
+        self.template_set = TemplateSet(self.active_pipeline, on_dep)
+        return self.swift_result
+
+    def _foldable_only(self, on_departure):
+        """Drop (-> None) departure pipelines that cannot fold onto the
+        SPMD width NOW, so an unrecoverable departure is reported as 'no
+        feasible template' up front instead of crashing mid-training."""
+        from repro.sched.swift import units_to_layer_template
+        out = {}
+        for vid, pipe in on_departure.items():
+            if pipe is not None:
+                try:
+                    units_to_layer_template(pipe, self._stages)
+                except ValueError:
+                    pipe = None
+            out[vid] = pipe
+        return out
+
+    def resolve_templates(self, cfg, mesh) -> Dict:
+        if self.templates is None:
+            from repro.core.pipeline import template_from_sequence
+            from repro.sched.swift import units_to_layer_template
+            stages = mesh.shape["model"]
+            self.schedule(cfg, stages)
+            seq = units_to_layer_template(self.active_pipeline, stages)
+            self.templates = template_from_sequence(cfg, seq)
+        return self.templates
+
+    # ---- live-repartition protocol (recovery.recover.Repartitioner) -------
+    def departure_template(self, vid: int):
+        """(per-stack templates, pipeline) pre-generated for ``vid``'s
+        departure — the paper's template lookup, no replanning."""
+        if self.template_set is None:
+            raise RuntimeError("schedule() has not run; build the session "
+                               "(resolve_templates) first")
+        pipe = self.template_set.on_departure.get(vid)
+        if pipe is None:
+            raise ValueError(
+                f"no feasible pre-generated template for the departure of "
+                f"vehicle {vid} (remaining fleet cannot host the model)")
+        from repro.core.pipeline import template_from_sequence
+        from repro.sched.swift import units_to_layer_template
+        seq = units_to_layer_template(pipe, self._stages)
+        return template_from_sequence(self._cfg, seq), pipe
+
+    def adopt_departure(self, vid: int, pipe) -> None:
+        """Commit a departure: shrink the fleet, promote ``pipe`` to
+        active, and refresh the preventive templates for the remaining
+        fleet (the paper's concurrent template regeneration)."""
+        from repro.recovery.templates import TemplateSet, pregenerate
+        self.vehicles = [v for v in self.vehicles if v.vid != vid]
+        self.active_pipeline = pipe
+        on_dep = {}
+        if len(self.vehicles) >= 2:
+            try:
+                on_dep = self._foldable_only(
+                    pregenerate(self.vehicles, self.units, self.cost,
+                                agent=self.agent, active=pipe).on_departure)
+            except ValueError:
+                on_dep = {}
+        self.template_set = TemplateSet(pipe, on_dep)
+
+
 def _abstract_init(cfg):
     from repro.core.steps import abstract_params
     return abstract_params(cfg)
@@ -208,11 +350,14 @@ class FedAvgStrategy(Strategy):
     loop = "round"
 
     def __init__(self, *, learning_rate: float = 1e-3, local_steps: int = 1,
-                 clients: int = 0, remat: bool = False):
+                 clients: int = 0, remat: bool = False,
+                 client_weights: Optional[Any] = None):
         super().__init__(learning_rate=learning_rate)
         self.local_steps = local_steps
         self.clients = clients
         self.remat = remat
+        #: [C] aggregation weights (paper: data-volume weighted); None=mean
+        self.client_weights = client_weights
 
     def _optimizer(self):
         from repro.train.optimizer import Adam
@@ -240,7 +385,8 @@ class FedAvgStrategy(Strategy):
         from repro.core.fedavg import make_fl_round
         return jax.jit(make_fl_round(cfg, shape, self._optimizer(),
                                      local_steps=self.local_steps,
-                                     remat=self.remat))
+                                     remat=self.remat,
+                                     client_weights=self.client_weights))
 
     def param_specs(self, cfg, mesh):
         from repro.core.fedavg import client_specs
@@ -248,7 +394,9 @@ class FedAvgStrategy(Strategy):
 
     def merge_params(self, state, cfg=None):
         from repro.core.fedavg import fedavg
-        return fedavg(state[0])
+        w = None if self.client_weights is None else \
+            jnp.asarray(self.client_weights, jnp.float32)
+        return fedavg(state[0], weights=w)
 
     def default_batch(self, cfg, shape, mesh, key):
         return _stacked_batch(cfg, shape, key,

@@ -73,12 +73,16 @@ def broadcast_round(global_params, n_clients: int):
 
 
 def make_fl_round(cfg, shape, optimizer, *, local_steps: int = 1,
-                  remat: bool = True):
+                  remat: bool = True, client_weights=None):
     """One FL round over client-stacked params.
 
     fl_round(client_params, client_opt, batches) -> (client_params',
     client_opt', metrics) where ``batches`` carry a leading client axis and a
     second local-step axis: pytree leaves [C, E, B_local, ...].
+
+    ``client_weights``: optional [C] weights for the aggregation — the
+    paper's data-volume-weighted averaging (w_i ∝ local sample count);
+    None keeps the uniform mean.
 
     Local steps run under ``jax.vmap`` over the client axis — with the client
     axis sharded over ``data`` this is embarrassingly parallel (no
@@ -86,6 +90,8 @@ def make_fl_round(cfg, shape, optimizer, *, local_steps: int = 1,
     """
     from repro.core.steps import make_train_step
     step = make_train_step(cfg, shape, optimizer, remat=remat)
+    w = None if client_weights is None else \
+        jnp.asarray(client_weights, jnp.float32)
 
     def local_train(params, opt_state, steps_batches):
         def body(carry, batch):
@@ -98,11 +104,15 @@ def make_fl_round(cfg, shape, optimizer, *, local_steps: int = 1,
         return params, opt_state, jax.tree.map(lambda x: x[-1], ms)
 
     def fl_round(client_params, client_opt, batches):
+        C = jax.tree.leaves(client_params)[0].shape[0]
+        if w is not None and w.shape != (C,):
+            raise ValueError(
+                f"client_weights has shape {w.shape}, expected ({C},) to "
+                f"match the client axis")
         params, opts, metrics = jax.vmap(local_train)(client_params,
                                                       client_opt, batches)
-        avg = fedavg(params)
-        new_clients = broadcast_round(
-            avg, jax.tree.leaves(client_params)[0].shape[0])
+        avg = fedavg(params, weights=w)
+        new_clients = broadcast_round(avg, C)
         return new_clients, opts, metrics
 
     return fl_round

@@ -309,6 +309,35 @@ def get_adapter(cfg: ModelConfig) -> FamilyAdapter:
 # --------------------------------------------------------------------------
 # Stage-stacked parameter container
 # --------------------------------------------------------------------------
+def template_from_sequence(cfg: ModelConfig, seq: Sequence[int]
+                           ) -> Dict[str, Tuple[int, ...]]:
+    """Split a flat per-stage layer-count template over the model's stacks.
+
+    ``seq[s]`` counts layers of the concatenated stack sequence (the
+    adapter's ``stack_order`` concatenation) assigned to stage ``s`` — the
+    form SWIFT's :func:`repro.sched.swift.units_to_layer_template` emits.
+    Raises if the sequence does not cover the model exactly (a template
+    that drops or invents layers must never reach the runtime).
+    """
+    adapter = get_adapter(cfg)
+    counts = adapter.counts(cfg)
+    total = sum(counts.values())
+    seq = tuple(int(c) for c in seq)
+    if sum(seq) != total:
+        raise ValueError(
+            f"stage template {seq} covers {sum(seq)} layers but the model "
+            f"has {total} ({counts}); refusing to drop/invent layers")
+    offs = template_offsets(seq)
+    out, start = {}, 0
+    for name in adapter.stack_order:
+        L = counts[name]
+        out[name] = tuple(
+            max(0, min(offs[s] + seq[s], start + L) - max(offs[s], start))
+            for s in range(len(seq)))
+        start += L
+    return out
+
+
 def make_templates(cfg: ModelConfig, stages: int,
                    template: Optional[Dict[str, Sequence[int]]] = None
                    ) -> Dict[str, Tuple[int, ...]]:
@@ -318,18 +347,8 @@ def make_templates(cfg: ModelConfig, stages: int,
     if template is not None:
         return {k: tuple(v) for k, v in template.items()}
     adapter = get_adapter(cfg)
-    counts = adapter.counts(cfg)
-    total = sum(counts.values())
-    seq = balanced_template(total, stages)
-    offs = template_offsets(seq)
-    out, start = {}, 0
-    for name in adapter.stack_order:
-        L = counts[name]
-        out[name] = tuple(
-            max(0, min(offs[s] + seq[s], start + L) - max(offs[s], start))
-            for s in range(stages))
-        start += L
-    return out
+    total = sum(adapter.counts(cfg).values())
+    return template_from_sequence(cfg, balanced_template(total, stages))
 
 
 def _abstract_params_thunk(cfg: ModelConfig):

@@ -18,12 +18,19 @@ def main():
     ap.add_argument("--arch", default="flad-vision")
     ap.add_argument("--shape", default=None, help="named shape or 'SEQxBATCH'")
     ap.add_argument("--strategy", default="pipeline",
-                    choices=["tensor", "pipeline", "fedavg", "fl_pipeline"])
+                    choices=["tensor", "pipeline", "fedavg", "fl_pipeline",
+                             "swift_pipeline"])
     ap.add_argument("--steps", type=int, default=50,
                     help="train steps (FL strategies: rounds)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--local-steps", type=int, default=1,
                     help="local steps per FL round (fedavg/fl_pipeline)")
+    ap.add_argument("--fleet", default="nano*4,agx*2",
+                    help="heterogeneous fleet spec for swift_pipeline, "
+                         "e.g. 'nano*4,nx*2,agx'")
+    ap.add_argument("--depart", default=None, metavar="STEP:VID",
+                    help="swift_pipeline: simulate vehicle VID departing "
+                         "after step STEP (live template repartition)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (CPU testing)")
     ap.add_argument("--mesh", default="2,4", help="data,model (or pod,data,model)")
@@ -40,6 +47,8 @@ def main():
     fl = args.strategy in ("fedavg", "fl_pipeline")
     if fl:
         options["local_steps"] = args.local_steps
+    if args.strategy == "swift_pipeline":
+        options["fleet"] = args.fleet
     session = Session(
         args.arch, full=args.full, shape=args.shape,
         mesh=MeshSpec.parse(args.mesh, devices=args.devices or None),
@@ -49,6 +58,16 @@ def main():
                         checkpoint_path=args.checkpoint,
                         checkpoint_every=50 if args.checkpoint else 0),
         **options)
+    if args.depart:
+        if args.strategy != "swift_pipeline":
+            raise SystemExit("--depart requires --strategy swift_pipeline")
+        import dataclasses
+
+        from repro.recovery.recover import Repartitioner
+        step_s, vid_s = args.depart.split(":")
+        session.hooks = dataclasses.replace(
+            session.hooks,
+            repartition=Repartitioner(session, {int(step_s): int(vid_s)}))
     out = session.run(args.steps)
     last = out["history"][-1]
     print(f"[train] done: {last}")

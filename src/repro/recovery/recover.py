@@ -10,12 +10,19 @@ times are comparable (the paper's 5 s vs 30 s vs 50 s):
     scratch, redistribute every partition.
   * ``relaunch``  — tear down, re-init the stack, re-plan, redistribute
     everything, reload from backup.
+
+:class:`Repartitioner` executes the ``template`` strategy FOR REAL on a
+running :class:`repro.api.Session`: on a scheduled vehicle departure it
+looks up the pre-generated template, merges the live stage params,
+restages them under the new template, rebuilds the jitted FHDP step, and
+hands the loop the swapped (step, params, opt) — the paper's 5-second
+recovery executed instead of modeled.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.recovery.templates import (TemplateSet, full_redistribution_bytes,
                                       pregenerate, redistribution_bytes)
@@ -60,6 +67,131 @@ def recover(strategy: str, templates: TemplateSet, failed_vid: int,
         moved = full_redistribution_bytes(new)
     seconds = REINIT_S[strategy] + replan + moved / link_bw
     return RecoveryOutcome(strategy, True, seconds, moved, replan, new)
+
+
+# --------------------------------------------------------------------------
+# Live dynamic repartitioning (scheduler -> runtime, executed not modeled)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class RepartitionEvent:
+    """One executed template switch on the live runtime."""
+    step: int
+    vid: int
+    old_template: Dict[str, tuple]
+    new_template: Dict[str, tuple]
+    lookup_s: float         # pre-generated template lookup (the paper's win)
+    restage_s: float        # merge live stage params + restage under new
+    rebuild_s: float        # rebuild the jitted FHDP step
+    total_s: float          # lookup + restage + rebuild (the switch itself)
+    refresh_s: float        # re-pregenerate preventive templates for the
+    #                         shrunken fleet; synchronous here (the paper
+    #                         overlaps it with training), so it also stalls
+    #                         the loop but is NOT part of the switch time
+    moved_bytes: float      # analytic diff the edge would redistribute
+    params_identical: bool  # merged params bit-identical across the restage
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["old_template"] = {k: list(v) for k, v in self.old_template.items()}
+        d["new_template"] = {k: list(v) for k, v in self.new_template.items()}
+        return d
+
+
+def fresh_zero2_opt(pp, mesh, *, fed_sgd: bool = True, step=None):
+    """ZeRO-2 optimizer state for a freshly restaged param container,
+    placed on the mesh. Adam moments cannot survive a template change
+    (their flat shards are laid out per-stage), so they restart; the step
+    counter is carried over to keep the bias-correction schedule."""
+    import jax
+
+    from repro.core import pipeline as pl
+    from repro.core.fhdp import _named
+
+    D = mesh.shape["data"]
+    opt = pl.zero2_init(pp, D, sharded=fed_sgd and D > 1)
+    opt = jax.device_put(
+        opt, _named(mesh, pl.zero2_specs(jax.eval_shape(lambda: opt))))
+    if step is not None:
+        opt = dict(opt, step=jax.numpy.asarray(step))
+    return opt
+
+
+class Repartitioner:
+    """LoopHooks.repartition hook: simulated departures -> live restages.
+
+    ``schedule`` maps step index -> departing vehicle id. The session's
+    strategy must speak the SWIFT protocol (``swift_pipeline``): expose
+    ``templates``, ``active_pipeline``, ``departure_template(vid)`` and
+    ``adopt_departure(vid, pipe)``.
+    """
+
+    def __init__(self, session, schedule: Dict[int, int], *,
+                 log_fn: Optional[Callable] = print):
+        self.session = session
+        self.schedule = {int(k): int(v) for k, v in schedule.items()}
+        self.events: List[RepartitionEvent] = []
+        self.log_fn = log_fn
+
+    def __call__(self, step_idx: int, step_fn, params, opt_state
+                 ) -> Optional[Tuple[Callable, Any, Any]]:
+        vid = self.schedule.pop(step_idx, None)
+        if vid is None:
+            return None
+        return self.depart(step_idx, vid, params, opt_state)
+
+    def depart(self, step_idx: int, vid: int, params, opt_state
+               ) -> Tuple[Callable, Any, Any]:
+        """Execute the departure of ``vid`` against the live state."""
+        import jax
+        import numpy as np
+
+        from repro.core import pipeline as pl
+        from repro.recovery.backup import restage
+
+        ses = self.session
+        strat = ses.strategy
+        old_templates = {k: tuple(v) for k, v in strat.templates.items()}
+        t0 = time.perf_counter()
+        new_templates, pipe = strat.departure_template(vid)
+        lookup_s = time.perf_counter() - t0
+        moved = redistribution_bytes(strat.active_pipeline, pipe)
+
+        t1 = time.perf_counter()
+        merged = pl.merge_stage_params(params, old_templates)
+        pp2 = restage(merged, ses.cfg, new_templates, ses.mesh)
+        jax.block_until_ready(pp2)
+        opt2 = fresh_zero2_opt(pp2, ses.mesh, step=opt_state["step"]
+                               if isinstance(opt_state, dict)
+                               and "step" in opt_state else None)
+        restage_s = time.perf_counter() - t1
+
+        t2 = time.perf_counter()
+        step2 = ses.rebuild(templates=new_templates, state=(pp2, opt2))
+        rebuild_s = time.perf_counter() - t2
+        t3 = time.perf_counter()
+        strat.adopt_departure(vid, pipe)
+        refresh_s = time.perf_counter() - t3
+
+        merged2 = pl.merge_stage_params(pp2, new_templates)
+        identical = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(merged2)))
+        ev = RepartitionEvent(
+            step=step_idx, vid=vid, old_template=old_templates,
+            new_template={k: tuple(v) for k, v in new_templates.items()},
+            lookup_s=lookup_s, restage_s=restage_s, rebuild_s=rebuild_s,
+            total_s=lookup_s + restage_s + rebuild_s, refresh_s=refresh_s,
+            moved_bytes=moved, params_identical=identical)
+        self.events.append(ev)
+        if self.log_fn is not None:
+            self.log_fn(
+                f"[repartition] step {step_idx}: vehicle {vid} departed — "
+                f"template {ev.old_template} -> {ev.new_template} in "
+                f"{ev.total_s * 1e3:.1f} ms (lookup {lookup_s * 1e3:.2f} ms, "
+                f"restage {restage_s * 1e3:.1f} ms, rebuild "
+                f"{rebuild_s * 1e3:.1f} ms; +{refresh_s * 1e3:.1f} ms "
+                f"template refresh); params identical: {identical}")
+        return step2, pp2, opt2
 
 
 def run_failure_sequence(vehicles: Sequence[Vehicle], units: Sequence[Unit],

@@ -23,12 +23,15 @@ class TemplateSet:
 
 def pregenerate(vehicles: Sequence[Vehicle], units: Sequence[Unit],
                 cp: Optional[CostParams] = None,
-                agent: Optional[DoubleDQN] = None) -> TemplateSet:
+                agent: Optional[DoubleDQN] = None,
+                active: Optional[Pipeline] = None) -> TemplateSet:
     """Build the active pipeline plus one preventive template per potential
     departure (paper: 'pre-generates pipeline configurations for potential
-    stage disconnections')."""
+    stage disconnections'). ``active`` overrides the phase-1 choice — used
+    when the caller already ran full SWIFT and deployed its winner."""
     cp = cp or CostParams()
-    active = phase1_greedy(vehicles, units, cp)
+    if active is None:
+        active = phase1_greedy(vehicles, units, cp)
     if active is None:
         raise ValueError("cluster cannot host the model at all")
     on_dep: Dict[int, Optional[Pipeline]] = {}

@@ -43,15 +43,58 @@ JETSON_AGX = dict(cmp=3.85e12, mem=32e9, com=0.25e9)
 TPU_CHIP = dict(cmp=TPU_V5E.peak_flops, mem=TPU_V5E.hbm_bytes,
                 com=TPU_V5E.ici_bw)
 
+#: named vehicle classes for the declarative fleet spec ("nano*4,agx*2")
+FLEET_PRESETS = {"nano": JETSON_NANO, "nx": JETSON_NX, "agx": JETSON_AGX,
+                 "tpu": TPU_CHIP}
+
 
 def make_fleet(specs: Sequence[dict], *, stb: Optional[Sequence[float]] = None,
                dwl: Optional[Sequence[float]] = None) -> List[Vehicle]:
     out = []
     for i, s in enumerate(specs):
         out.append(Vehicle(i, s["cmp"], s["mem"], s["com"],
-                           stb[i] if stb is not None else 1.0,
-                           dwl[i] if dwl is not None else 1e9))
+                           stb[i] if stb is not None else s.get("stb", 1.0),
+                           dwl[i] if dwl is not None else s.get("dwl", 1e9)))
     return out
+
+
+def demo_fleet(unit_cap: float) -> List[dict]:
+    """The heterogeneous 5-vehicle fixture the repartition example and
+    benchmark share: vehicle memories/compute sized (in units of one model
+    unit's training footprint ``unit_cap``) so SWIFT must span multiple
+    vehicles — two fast 2-unit hosts, a small 1-unit host, and two
+    roomy-but-slow stragglers a single-vehicle pipeline would bottleneck
+    on."""
+    return [
+        dict(cmp=1.0e12, mem=2.2 * unit_cap, com=0.10e9, stb=0.95),
+        dict(cmp=0.8e12, mem=2.2 * unit_cap, com=0.10e9, stb=0.85),
+        dict(cmp=0.5e12, mem=1.2 * unit_cap, com=0.05e9, stb=0.70),
+        dict(cmp=0.3e12, mem=4.5 * unit_cap, com=0.25e9, stb=0.60),
+        dict(cmp=0.3e12, mem=4.5 * unit_cap, com=0.25e9, stb=0.50),
+    ]
+
+
+def parse_fleet(spec) -> List[Vehicle]:
+    """Coerce a fleet declaration into vehicles.
+
+    Accepts "nano*4,agx*2"-style preset strings (see :data:`FLEET_PRESETS`),
+    a sequence of spec dicts (``cmp``/``mem``/``com`` required, ``stb``/
+    ``dwl`` optional), or a sequence of :class:`Vehicle` (passed through).
+    """
+    if isinstance(spec, str):
+        dicts = []
+        for part in spec.split(","):
+            name, _, mult = part.strip().partition("*")
+            if name not in FLEET_PRESETS:
+                raise ValueError(
+                    f"unknown vehicle class {name!r}; presets: "
+                    f"{', '.join(sorted(FLEET_PRESETS))}")
+            dicts += [dict(FLEET_PRESETS[name])] * (int(mult) if mult else 1)
+        return make_fleet(dicts)
+    spec = list(spec)
+    if all(isinstance(v, Vehicle) for v in spec):
+        return spec
+    return make_fleet([dict(s) for s in spec])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,11 +108,15 @@ class Unit:
 
 
 def model_units(cfg: ModelConfig, *, seq_len: int = 1024,
-                dtype_bytes: int = 2) -> List[Unit]:
+                dtype_bytes: int = 2,
+                num_units: Optional[int] = None) -> List[Unit]:
     """Units for an architecture: per-block FLOPs/bytes from the config.
 
     fwd+bwd FLOPs ~= 6 * params_per_block * tokens (dense); the boundary
-    volume is the residual stream [seq, d_model].
+    volume is the residual stream [seq, d_model]. ``num_units`` overrides
+    the unit count (default: one per layer) while preserving the model's
+    total cost — used when the runtime's partitionable unit (e.g. an xLSTM
+    super-block) differs from ``cfg.num_layers``.
     """
     d = cfg.d_model
     nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
@@ -92,12 +139,15 @@ def model_units(cfg: ModelConfig, *, seq_len: int = 1024,
 
     blk_active = attn_params() + ffn_params()
     blk_store = attn_params() + ffn_store()
+    n = num_units or cfg.num_layers
+    scale = cfg.num_layers / n
     units = []
-    for i in range(cfg.num_layers):
-        cmp_ = 6 * blk_active * seq_len + 4 * nq * hd * seq_len * seq_len
+    for i in range(n):
+        cmp_ = (6 * blk_active * seq_len
+                + 4 * nq * hd * seq_len * seq_len) * scale
         units.append(Unit(
             f"block{i}",
-            cap=blk_store * dtype_bytes * BYTES_PER_PARAM_TRAIN / 2,
+            cap=blk_store * dtype_bytes * BYTES_PER_PARAM_TRAIN / 2 * scale,
             cmp=cmp_,
             com=seq_len * d * dtype_bytes))
     return units

@@ -107,6 +107,11 @@ class PipelineEnv:
                  cp: CostParams, head: Optional[int] = None,
                  w=(1.0, 0.5, 0.25, 0.25)):
         self.vehicles = list(vehicles)[:N_MAX]
+        if head is not None and not 0 <= head < len(self.vehicles):
+            raise ValueError(
+                f"head index {head} outside the fleet window of "
+                f"{len(self.vehicles)} vehicles (fleets larger than "
+                f"N_MAX={N_MAX} must be windowed first; see window_fleet)")
         self.units = list(units)
         self.cp = cp
         self.head = head
@@ -183,6 +188,11 @@ class PipelineEnv:
 
     def step(self, action: int):
         vi, ci = divmod(action, len(CHUNK_OPTIONS))
+        if vi >= len(self.vehicles):
+            # slot beyond the (possibly truncated) fleet: invalid action,
+            # penalized like any other instead of indexing out of range
+            self.done = True
+            return self.obs(), self.mask(), -5.0, True
         count = CHUNK_OPTIONS[ci]
         v = self.vehicles[vi]
         count = min(count, len(self.units) - self.next_unit)
@@ -235,6 +245,23 @@ def train_policy(cluster_sampler, *, episodes: int = 800, seed: int = 0,
     return agent
 
 
+def window_fleet(vehicles: Sequence[Vehicle], head_idx: int,
+                 n_max: int = N_MAX) -> Tuple[List[Vehicle], int]:
+    """Contiguous window of at most ``n_max`` vehicles containing
+    ``head_idx``. Returns ``(window, head_in_window)`` with
+    ``window[head_in_window] is vehicles[head_idx]`` — the policy sees a
+    fleet it supports while the intended head vehicle stays the head
+    (clamping the index instead would pin the WRONG vehicle as head)."""
+    vehicles = list(vehicles)
+    if not 0 <= head_idx < len(vehicles):
+        raise ValueError(f"head_idx {head_idx} out of range "
+                         f"for fleet of {len(vehicles)}")
+    if len(vehicles) <= n_max:
+        return vehicles, head_idx
+    start = min(max(0, head_idx - n_max // 2), len(vehicles) - n_max)
+    return vehicles[start:start + n_max], head_idx - start
+
+
 def dqn_pipeline(agent: DoubleDQN, vehicles: Sequence[Vehicle],
                  units: Sequence[Unit], cp: CostParams,
                  head: Optional[int] = None) -> Optional[Pipeline]:
@@ -280,8 +307,8 @@ def swift(vehicles: Sequence[Vehicle], units: Sequence[Unit], *,
         pipe = None
         if agent is not None:
             idx = next(i for i, w in enumerate(vehicles) if w.vid == v.vid)
-            pipe = dqn_pipeline(agent, vehicles, units, cp,
-                                head=min(idx, N_MAX - 1))
+            win, head = window_fleet(vehicles, idx)
+            pipe = dqn_pipeline(agent, win, units, cp, head=head)
         if pipe is None:
             reordered = [v] + [w for w in sorted(vehicles,
                                                  key=lambda x: -x.stb)
@@ -314,7 +341,24 @@ def phase1_greedy_ordered(order: Sequence[Vehicle], units: Sequence[Unit],
 
 def units_to_layer_template(pipe: Pipeline, stages: int) -> Tuple[int, ...]:
     """Map a SWIFT pipeline (unit counts per stage) onto a fixed-width SPMD
-    stage template for core/pipeline.py (pad with zero-layer stages)."""
+    stage template for core/pipeline.py.
+
+    Pipelines shorter than ``stages`` pad with zero-layer stages. Pipelines
+    LONGER than the SPMD width fold the overflow stages' units into the
+    last SPMD stage — checked against that stage's vehicle memory — so no
+    model unit is ever silently dropped (``sum(template) == len(units)``
+    always holds).
+    """
     counts = list(pipe.template())
-    counts = counts[:stages] + [0] * max(0, stages - len(counts))
+    if len(counts) > stages:
+        tail = [u for part in pipe.partition[stages - 1:] for u in part]
+        host = pipe.path[stages - 1]
+        need = sum(u.cap for u in tail)
+        if need > host.mem:
+            raise ValueError(
+                f"cannot fold a {len(counts)}-stage pipeline into {stages} "
+                f"SPMD stages: the folded tail needs {need:.3e} B but the "
+                f"stage-{stages - 1} vehicle {host.vid} has {host.mem:.3e} B")
+        counts = counts[:stages - 1] + [len(tail)]
+    counts = counts + [0] * (stages - len(counts))
     return tuple(counts)

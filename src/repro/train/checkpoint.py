@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
@@ -25,10 +25,34 @@ def _flatten(tree) -> dict:
     return out
 
 
-def save(path: str, tree, step: int = 0) -> None:
+def _npz_path(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _meta_path(path: str) -> str:
+    return _npz_path(path)[:-len(".npz")] + ".meta.json"
+
+
+def save(path: str, tree, step: int = 0, meta: Optional[dict] = None) -> None:
+    """Save a pytree; ``meta`` (JSON-serializable) is written as a sidecar
+    next to the .npz — structured strategies record their stage templates
+    there so a checkpoint can be merged/restaged without out-of-band
+    knowledge of the layout it was taken under."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     np.savez(path, __step__=np.asarray(step), **flat)
+    if meta is not None:
+        with open(_meta_path(path), "w") as f:
+            json.dump(meta, f, indent=1, sort_keys=True)
+
+
+def load_meta(path: str) -> Optional[dict]:
+    """The checkpoint's sidecar metadata, or None if it was saved bare."""
+    mp = _meta_path(path)
+    if not os.path.exists(mp):
+        return None
+    with open(mp) as f:
+        return json.load(f)
 
 
 def load(path: str, like) -> Tuple[Any, int]:

@@ -41,8 +41,17 @@ class LoopHooks:
     backup_view: Optional[Callable] = None
     checkpoint_path: Optional[str] = None
     checkpoint_every: int = 0
+    #: JSON-serializable dict (or zero-arg callable returning one) saved as
+    #: a sidecar next to each checkpoint — Session.run defaults it to the
+    #: strategy name + live stage templates so structured checkpoints can
+    #: be restaged without out-of-band knowledge
+    checkpoint_meta: Optional[object] = None
     #: optional user callback (step_or_round_idx, params, metrics) -> None
     on_step: Optional[Callable] = None
+    #: live dynamic repartitioning hook (paper §4.2 executed in-loop):
+    #: (idx, step_fn, params, opt) -> None to keep going, or a replacement
+    #: (step_fn, params, opt) after a template switch
+    repartition: Optional[Callable] = None
 
     def after_step(self, i: int, params, metrics=None) -> None:
         if self.backup is not None:
@@ -50,9 +59,21 @@ class LoopHooks:
             self.backup.maybe_backup(i, lambda: view(params))
         if self.checkpoint_path and self.checkpoint_every and \
                 (i + 1) % self.checkpoint_every == 0:
-            _save_checkpoint(self.checkpoint_path, params, step=i + 1)
+            meta = self.checkpoint_meta() if callable(self.checkpoint_meta) \
+                else self.checkpoint_meta
+            _save_checkpoint(self.checkpoint_path, params, step=i + 1,
+                             meta=meta)
         if self.on_step is not None:
             self.on_step(i, params, metrics)
+
+    def maybe_repartition(self, i: int, step_fn, params, opt_state):
+        """Apply the repartition hook; returns the (possibly swapped)
+        loop state."""
+        if self.repartition is not None:
+            swapped = self.repartition(i, step_fn, params, opt_state)
+            if swapped is not None:
+                return swapped
+        return step_fn, params, opt_state
 
     def should_log(self, i: int) -> bool:
         return (i + 1) % self.log_every == 0 or i == 0
@@ -76,7 +97,10 @@ def train_loop(step_fn: Callable, params, opt_state,
             hooks.log_fn(f"[train] step {i+1:5d} "
                          + " ".join(f"{k}={v:.4f}" for k, v in m.items())
                          + f" ({rate:.2f} it/s)")
-    return {"params": params, "opt_state": opt_state, "history": hist}
+        step_fn, params, opt_state = hooks.maybe_repartition(
+            i, step_fn, params, opt_state)
+    return {"params": params, "opt_state": opt_state, "history": hist,
+            "step_fn": step_fn}
 
 
 def fl_loop(fl_round: Callable, client_params, client_opt,
@@ -98,5 +122,7 @@ def fl_loop(fl_round: Callable, client_params, client_opt,
             hist.append(dict(m, round=r + 1))
             hooks.log_fn(f"[fl] round {r+1:4d} "
                          + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
+        fl_round, client_params, client_opt = hooks.maybe_repartition(
+            r, fl_round, client_params, client_opt)
     return {"client_params": client_params, "client_opt": client_opt,
-            "history": hist}
+            "history": hist, "step_fn": fl_round}

@@ -59,6 +59,48 @@ def test_fl_round_single_client_matches_sgd():
         assert jnp.allclose(a, b[0], atol=1e-4)
 
 
+def test_fl_round_weighted_matches_manual():
+    """Data-volume-weighted aggregation (paper §3.1): the plumbed
+    client_weights produce the manual weighted mean of the locally trained
+    clients, and uniform weights reduce to the plain mean."""
+    cfg = reduced(get_config("flad_vision"))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    opt = Adam(lr=1e-3)
+    b0 = concrete_batch(cfg, SHAPE, jax.random.PRNGKey(1))
+    b1 = concrete_batch(cfg, SHAPE, jax.random.PRNGKey(2))
+
+    step = jax.jit(make_train_step(cfg, SHAPE, opt, remat=False))
+    p0, _, _ = step(params, opt.init(params), b0)
+    p1, _, _ = step(params, opt.init(params), b1)
+    w = jnp.asarray([1.0, 3.0])
+    manual = jax.tree.map(lambda a, b: (1.0 * a + 3.0 * b) / 4.0, p0, p1)
+
+    cp = stack_clients(params, 2)
+    co = jax.vmap(opt.init)(cp)
+    rb = jax.tree.map(lambda a, b: jnp.stack([a, b])[:, None], b0, b1)
+    fl_w = jax.jit(make_fl_round(cfg, SHAPE, opt, local_steps=1,
+                                 remat=False, client_weights=w))
+    cw, _, _ = fl_w(cp, co, rb)
+    for m, c in zip(jax.tree.leaves(manual), jax.tree.leaves(cw)):
+        assert jnp.allclose(m, c[0], atol=1e-4)
+
+    fl_u = jax.jit(make_fl_round(cfg, SHAPE, opt, local_steps=1,
+                                 remat=False, client_weights=jnp.ones(2)))
+    fl_n = jax.jit(make_fl_round(cfg, SHAPE, opt, local_steps=1,
+                                 remat=False))
+    au, _, _ = fl_u(cp, co, rb)
+    an, _, _ = fl_n(cp, co, rb)
+    for x, y in zip(jax.tree.leaves(au), jax.tree.leaves(an)):
+        assert jnp.allclose(x, y, atol=1e-5)
+
+    bad = make_fl_round(cfg, SHAPE, opt, local_steps=1, remat=False,
+                        client_weights=jnp.ones(3))
+    with pytest.raises(ValueError):
+        bad(cp, co, rb)
+
+
 def test_fl_round_clients_average():
     """After a round all clients hold identical (averaged) params."""
     cfg = reduced(get_config("flad_vision"))

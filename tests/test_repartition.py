@@ -1,0 +1,127 @@
+"""Scheduler -> runtime loop: swift_pipeline strategy, live dynamic
+repartitioning (Repartitioner), checkpoint template sidecars."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import LoopHooks, Session
+from repro.api.session import load_config
+from repro.config import ShapeConfig
+from repro.recovery.recover import Repartitioner
+from repro.sched.costmodel import model_units
+
+SHAPE = ShapeConfig("rep", 16, 8, "train")
+
+
+def _fleet_for(cfg):
+    """Memories sized so the stable vehicle hosts the whole (2-layer
+    reduced) model and its departure forces a genuinely different
+    template on the survivors."""
+    u = model_units(cfg, seq_len=64, num_units=cfg.num_layers)[0].cap
+    return [dict(cmp=1e12, mem=2.5 * u, com=0.1e9, stb=0.9),
+            dict(cmp=1e12, mem=1.2 * u, com=0.1e9, stb=0.7),
+            dict(cmp=1e12, mem=1.2 * u, com=0.1e9, stb=0.6)]
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_swift_pipeline_live_repartition(mesh22, tmp_path):
+    from repro.train import checkpoint as ckpt
+
+    cfg = load_config("flad-vision")
+    ses = Session(cfg=cfg, strategy="swift_pipeline", mesh=mesh22,
+                  shape=SHAPE, learning_rate=2e-3, fleet=_fleet_for(cfg),
+                  seq_len=64)
+    ses.build()
+    strat = ses.strategy
+    # acceptance: every template SWIFT hands the runtime covers every unit
+    assert sum(sum(t) for t in strat.templates.values()) == len(strat.units)
+    assert strat.template_set is not None
+
+    ck = str(tmp_path / "swift_ckpt")
+    rep = Repartitioner(ses, {0: strat.active_pipeline.path[0].vid},
+                        log_fn=None)
+    out = ses.run(2, hooks=LoopHooks(log_fn=lambda *a: None,
+                                     repartition=rep,
+                                     checkpoint_path=ck,
+                                     checkpoint_every=1))
+    assert len(rep.events) == 1
+    ev = rep.events[0]
+    # the live restage kept the merged model bit-identical and complete
+    assert ev.params_identical
+    assert ev.new_template != ev.old_template
+    assert sum(sum(t) for t in ev.new_template.values()) == len(strat.units)
+    # the strategy committed the departure: fleet shrank, template adopted
+    assert {k: tuple(v) for k, v in strat.templates.items()} \
+        == ev.new_template
+    assert ev.vid not in {v.vid for v in strat.vehicles}
+    # training continued under the rebuilt step
+    assert np.isfinite(out["history"][-1]["loss"])
+    merged = ses.merged_params()
+    assert all(np.all(np.isfinite(np.asarray(x)))
+               for x in jax.tree.leaves(merged)
+               if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact))
+    # the checkpoint sidecar tracked the template switch (saved at step 2)
+    meta = ckpt.load_meta(ck)
+    assert meta["strategy"] == "swift_pipeline"
+    assert {k: tuple(v) for k, v in meta["templates"].items()} \
+        == ev.new_template
+
+
+def test_swift_pipeline_infeasible_fleet_raises(mesh22):
+    cfg = load_config("flad-vision")
+    u = model_units(cfg, seq_len=64, num_units=cfg.num_layers)[0].cap
+    tiny = [dict(cmp=1e12, mem=0.5 * u, com=0.1e9)] * 3   # nothing fits
+    ses = Session(cfg=cfg, strategy="swift_pipeline", mesh=mesh22,
+                  shape=SHAPE, fleet=tiny, seq_len=64)
+    with pytest.raises(ValueError):
+        ses.strategy.resolve_templates(ses.cfg, ses.mesh)
+
+
+def test_checkpoint_sidecar_roundtrip_pipeline(mesh22, tmp_path):
+    from repro.core import pipeline as pl
+    from repro.train import checkpoint as ckpt
+
+    ses = Session("flad-vision", strategy="pipeline", mesh=mesh22,
+                  shape=SHAPE)
+    state = ses.strategy.init(ses.cfg, ses.shape, ses.mesh, ses.prng())
+    path = str(tmp_path / "pipe_ckpt")
+    ckpt.save(path, state[0], step=3, meta=ses._checkpoint_meta())
+
+    meta = ckpt.load_meta(path)
+    assert meta["strategy"] == "pipeline"
+    templates = {k: tuple(v) for k, v in meta["templates"].items()}
+    assert templates == {k: tuple(v)
+                         for k, v in ses.strategy.templates.items()}
+    restored, step = ckpt.load(path, jax.eval_shape(lambda: state[0]))
+    assert step == 3
+    # merged views agree exactly — the sidecar alone suffices to restage
+    assert _leaves_equal(pl.merge_stage_params(state[0], templates),
+                         pl.merge_stage_params(restored, templates))
+
+
+def test_checkpoint_sidecar_roundtrip_fedavg(mesh22, tmp_path):
+    from repro.core.fedavg import fedavg
+    from repro.train import checkpoint as ckpt
+
+    ses = Session("flad-vision", strategy="fedavg", mesh=mesh22,
+                  shape=SHAPE)
+    state = ses.strategy.init(ses.cfg, ses.shape, ses.mesh, ses.prng())
+    path = str(tmp_path / "fed_ckpt")
+    ckpt.save(path, state[0], step=7, meta=ses._checkpoint_meta())
+
+    meta = ckpt.load_meta(path)
+    assert meta["strategy"] == "fedavg"
+    assert "templates" not in meta            # flat strategies stay bare
+    restored, step = ckpt.load(path, jax.eval_shape(lambda: state[0]))
+    assert step == 7
+    assert _leaves_equal(state[0], restored)
+    assert _leaves_equal(fedavg(state[0]), fedavg(restored))
+    # a bare checkpoint (no meta) reports no sidecar
+    bare = str(tmp_path / "bare_ckpt")
+    ckpt.save(bare, state[0], step=1)
+    assert ckpt.load_meta(bare) is None

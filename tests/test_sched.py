@@ -114,6 +114,68 @@ def test_model_units_match_param_scale():
               - cfg.d_model), rel=0.15)
 
 
+# ------------------------------------------- scheduler -> runtime bridge --
+def test_units_to_layer_template_folds_overflow():
+    """Regression: pipelines with more stages than the SPMD width used to
+    silently drop units (counts[:stages]); overflow now folds into the
+    last stage and the sum invariant always holds."""
+    units = _units(5, 1.0e9)
+    fleet = _fleet([1.1e9, 1.1e9, 6e9, 1.1e9, 1.1e9])
+    pipe = SW.Pipeline(list(fleet), [[u] for u in units], 0.0)
+    t = SW.units_to_layer_template(pipe, 3)
+    assert t == (1, 1, 3)
+    assert sum(t) == len(units)
+    # shorter pipelines still pad with zero-layer stages
+    assert SW.units_to_layer_template(pipe, 8) == (1, 1, 1, 1, 1, 0, 0, 0)
+    assert sum(SW.units_to_layer_template(pipe, 8)) == len(units)
+    # folding that overflows the host vehicle's memory must raise, not drop
+    cramped = SW.Pipeline([fleet[0], fleet[1], fleet[3], fleet[4]],
+                          [[u] for u in units[:4]], 0.0)
+    with pytest.raises(ValueError):
+        SW.units_to_layer_template(cramped, 2)
+
+
+def test_window_fleet_keeps_head():
+    """Regression: head=min(idx, N_MAX-1) pinned the WRONG vehicle as
+    pipeline head for fleets larger than N_MAX."""
+    fleet = _fleet([8e9] * (SW.N_MAX + 6))
+    for idx in (0, SW.N_MAX // 2, SW.N_MAX + 2, SW.N_MAX + 5):
+        win, head = SW.window_fleet(fleet, idx)
+        assert len(win) == SW.N_MAX
+        assert win[head].vid == fleet[idx].vid
+    with pytest.raises(ValueError):
+        SW.window_fleet(fleet, len(fleet))
+
+
+def test_pipeline_env_invalid_slot_penalized():
+    fleet = _fleet([8e9] * 3)
+    units = _units(6, 0.9e9)
+    env = SW.PipelineEnv(fleet, units, CP)
+    env.reset()
+    # action addressing a vehicle slot beyond the fleet: penalty, no crash
+    obs, mask, r, done = env.step((SW.N_MAX - 1) * len(SW.CHUNK_OPTIONS))
+    assert r == -5.0 and done
+    with pytest.raises(ValueError):
+        SW.PipelineEnv(fleet, units, CP, head=5)
+
+
+def test_swift_agent_on_oversized_fleet():
+    """DQN-driven SWIFT over a fleet larger than N_MAX: the fleet is
+    windowed (not truncated), no essential pipeline drops units."""
+    from repro.sched.dqn import DQNConfig, DoubleDQN
+    n = SW.N_MAX + 4
+    fleet = _fleet([8e9] * n, stb=list(np.linspace(1.0, 0.2, n)))
+    units = _units(8, 0.9e9)
+    probe = SW.PipelineEnv(fleet[:SW.N_MAX], units, CP)
+    agent = DoubleDQN(DQNConfig(obs_dim=probe.obs_dim,
+                                n_actions=probe.n_actions))
+    res = SW.swift(fleet, units, agent=agent, cp=CP)
+    assert set(res.essential) == {v.vid for v in fleet}
+    for pipe in res.essential.values():
+        assert sum(len(p) for p in pipe.partition) == len(units)
+        assert partition_feasible(pipe.path, pipe.partition)
+
+
 # ------------------------------------------------------------- clustering --
 def test_availability_split_eq2():
     task = TrainingTask(m_cap=10e9, m_cmp=1e15, e_req=1)
