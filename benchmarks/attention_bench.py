@@ -1,0 +1,165 @@
+"""Flash-attention fwd+bwd — kernel VJP vs reference VJP.
+
+The training hot path (`blocks.attention` -> `ops.flash_attention_ad`)
+used to re-linearize the O(Sq·Skv) reference attention on every backward
+pass; the Pallas backward kernels recompute p = exp(s - lse) blockwise
+from O(S·D) residuals instead. This benchmark sweeps sequence length and
+records, for both VJPs:
+
+  * ``fwd_bwd_s`` — median wall seconds of one jitted forward + backward
+    (on CPU the kernels run in interpret mode, so the *memory* columns
+    are the meaningful trajectory there; wall time is meaningful on TPU);
+  * ``peak_temp_bytes`` — a peak-memory proxy: the largest single
+    intermediate (jaxpr equation output, recursing into sub-jaxprs)
+    anywhere in the fwd+bwd computation;
+  * ``temp_over_io`` — that peak normalized by total input+output bytes.
+    Flat in S for the kernel VJP; grows linearly (i.e. the raw peak grows
+    quadratically) for the reference VJP's score/softmax matrices.
+
+Writes ``BENCH_attention.json`` — the second perf-trajectory entry
+(after ``BENCH_repartition.json``); schema gated by
+``scripts/validate_bench.py`` in CI.
+
+    PYTHONPATH=src python benchmarks/attention_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+DEFAULT_OUT = "BENCH_attention.json"
+BATCH, Q_HEADS, KV_HEADS, HEAD_DIM = 1, 4, 2, 64
+BLOCK_Q = BLOCK_K = 128
+SEQS_FULL = (128, 256, 512, 1024)
+SEQS_QUICK = (128, 512)
+
+
+def _subjaxprs(val):
+    import jax
+    if isinstance(val, jax.core.Jaxpr):
+        yield val
+    elif isinstance(val, jax.core.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, (list, tuple)):
+        for item in val:
+            yield from _subjaxprs(item)
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for sub in _subjaxprs(val):
+                yield from _iter_eqns(sub)
+
+
+def largest_temp_bytes(fn, *args) -> int:
+    """Largest single intermediate of ``fn(*args)`` in bytes — every
+    jaxpr equation output, recursing into sub-jaxprs (scan/pjit bodies,
+    pallas_call kernel bodies, custom_vjp branches)."""
+    import jax
+    import jax.numpy as jnp
+    closed = jax.make_jaxpr(fn)(*args)
+    best = 0
+    for eqn in _iter_eqns(closed.jaxpr):
+        for var in eqn.outvars:
+            aval = var.aval
+            if hasattr(aval, "shape") and hasattr(aval, "dtype"):
+                size = int(np.prod(aval.shape, dtype=np.int64))
+                best = max(best, size * jnp.dtype(aval.dtype).itemsize)
+    return best
+
+
+def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    try:
+        from benchmarks.common import time_fn
+    except ImportError:          # invoked as `python benchmarks/...py`
+        from common import time_fn
+    from repro.kernels import ops as kops
+    from repro.kernels import ref
+
+    def fwd_bwd_kernel(q, k, v, do):
+        o, vjp = jax.vjp(
+            lambda q_, k_, v_: kops.flash_attention_ad(
+                q_, k_, v_, block_q=BLOCK_Q, block_k=BLOCK_K), q, k, v)
+        return o, vjp(do)
+
+    def fwd_bwd_ref(q, k, v, do):
+        o, vjp = jax.vjp(
+            lambda q_, k_, v_: ref.flash_attention_ref(q_, k_, v_),
+            q, k, v)
+        return o, vjp(do)
+
+    seqs = SEQS_QUICK if quick else SEQS_FULL
+    iters = 3 if quick else 5
+    points = []
+    for seq in seqs:
+        ks = jax.random.split(jax.random.PRNGKey(seq), 4)
+        q = jax.random.normal(ks[0], (BATCH, Q_HEADS, seq, HEAD_DIM))
+        k = jax.random.normal(ks[1], (BATCH, KV_HEADS, seq, HEAD_DIM))
+        v = jax.random.normal(ks[2], (BATCH, KV_HEADS, seq, HEAD_DIM))
+        do = jax.random.normal(ks[3], (BATCH, Q_HEADS, seq, HEAD_DIM))
+        # inputs (q, k, v, do) + outputs (o, dq, dk, dv)
+        io = 2 * sum(x.nbytes for x in (q, k, v, do))
+
+        point = {"seq": seq, "io_bytes": io}
+        for name, fn in (("kernel", fwd_bwd_kernel), ("ref", fwd_bwd_ref)):
+            peak = largest_temp_bytes(fn, q, k, v, do)
+            secs = time_fn(jax.jit(fn), q, k, v, do, iters=iters, warmup=1)
+            point[name] = {"fwd_bwd_s": secs, "peak_temp_bytes": peak,
+                           "temp_over_io": peak / io}
+        points.append(point)
+        print(f"attention seq={seq}: kernel peak "
+              f"{point['kernel']['peak_temp_bytes']} B "
+              f"({point['kernel']['fwd_bwd_s'] * 1e3:.1f} ms), ref peak "
+              f"{point['ref']['peak_temp_bytes']} B "
+              f"({point['ref']['fwd_bwd_s'] * 1e3:.1f} ms)", flush=True)
+
+    first, last = points[0], points[-1]
+    payload = {
+        "bench": "attention_fwd_bwd",
+        "schema_version": 1,
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "quick": bool(quick),
+        "shape": {"batch": BATCH, "q_heads": Q_HEADS, "kv_heads": KV_HEADS,
+                  "head_dim": HEAD_DIM, "causal": True, "window": None},
+        "block_q": BLOCK_Q,
+        "block_k": BLOCK_K,
+        "points": points,
+        "summary": {
+            "seq_ratio": last["seq"] / first["seq"],
+            "kernel_temp_growth": (last["kernel"]["peak_temp_bytes"]
+                                   / first["kernel"]["peak_temp_bytes"]),
+            "ref_temp_growth": (last["ref"]["peak_temp_bytes"]
+                                / first["ref"]["peak_temp_bytes"]),
+            "ref_over_kernel_peak_at_max_seq": (
+                last["ref"]["peak_temp_bytes"]
+                / last["kernel"]["peak_temp_bytes"]),
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    s = payload["summary"]
+    print(f"attention: over seq x{s['seq_ratio']:.0f}, kernel peak grew "
+          f"x{s['kernel_temp_growth']:.1f} vs ref x{s['ref_temp_growth']:.1f}"
+          f" (ref/kernel at max seq: "
+          f"x{s['ref_over_kernel_peak_at_max_seq']:.1f}) -> {out}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

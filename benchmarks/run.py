@@ -4,6 +4,8 @@
   Fig. 5(b) recovery time               -> recovery_bench
   §4.2 executed (live repartition)      -> repartition_latency
                                            (writes BENCH_repartition.json)
+  §Kernels (flash-attn fwd+bwd)         -> attention_bench
+                                           (writes BENCH_attention.json)
   Fig. 6(a,b) pipeline execution time   -> pipeline_exec
   Fig. 7(a,b) + Table 2 FHDP            -> fhdp_throughput
   Fig. 8(a) FL accuracy                 -> fl_accuracy
@@ -14,11 +16,14 @@ Prints ``name,value,derived`` CSV lines. ``--quick`` shrinks sweeps.
 """
 import argparse
 import os
+import sys
 import time
 import traceback
 
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
+# make `python benchmarks/run.py` work without the repo root on PYTHONPATH
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
@@ -28,9 +33,10 @@ def main() -> None:
                     help="comma list of benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (distill_quality, fhdp_throughput, fl_accuracy,
-                            pipeline_exec, recovery_bench,
-                            repartition_latency, roofline, swift_opt)
+    from benchmarks import (attention_bench, distill_quality,
+                            fhdp_throughput, fl_accuracy, pipeline_exec,
+                            recovery_bench, repartition_latency, roofline,
+                            swift_opt)
 
     agent_holder = {}
 
@@ -46,6 +52,7 @@ def main() -> None:
         ("pipeline_exec", run_pipeline_exec),
         ("recovery", lambda: recovery_bench.run(quick=args.quick)),
         ("repartition", lambda: repartition_latency.run(quick=args.quick)),
+        ("attention", lambda: attention_bench.run(quick=args.quick)),
         ("fhdp_throughput", lambda: fhdp_throughput.run(quick=args.quick)),
         ("fl_accuracy", lambda: fl_accuracy.run(quick=args.quick)),
         ("distill_quality", lambda: distill_quality.run(quick=args.quick)),

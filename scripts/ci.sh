@@ -27,13 +27,19 @@ if [[ "${1:-}" != "--fast" ]]; then
   python examples/swift_repartition.py --dry-run
 
   echo "=== bench: repartition latency (quick, scratch output) ==="
-  # scratch path: never clobber the committed full-run perf artifact
+  # scratch path: never clobber the committed full-run perf artifacts
   python benchmarks/repartition_latency.py --quick \
       --out /tmp/BENCH_repartition.quick.json
   python scripts/validate_bench.py /tmp/BENCH_repartition.quick.json
 
-  echo "=== validate committed perf-trajectory artifact ==="
+  echo "=== bench: attention fwd+bwd (quick, scratch output) ==="
+  python benchmarks/attention_bench.py --quick \
+      --out /tmp/BENCH_attention.quick.json
+  python scripts/validate_bench.py /tmp/BENCH_attention.quick.json
+
+  echo "=== validate committed perf-trajectory artifacts ==="
   python scripts/validate_bench.py BENCH_repartition.json
+  python scripts/validate_bench.py BENCH_attention.json
 fi
 
 echo "CI OK"

@@ -1,31 +1,52 @@
 #!/usr/bin/env python
-"""Validate BENCH_repartition.json against the perf-trajectory schema.
+"""Validate perf-trajectory artifacts (BENCH_*.json) against their
+schemas. Dispatches on the payload's ``bench`` field:
 
-CI gate for the scheduler->runtime repartition path: beyond key/type
-checks it enforces the two invariants the runtime depends on — merged
-params bit-identical across the restage boundary, and no model units
-dropped by the template bridge (old and new templates cover the same
-layer count).
+  * ``repartition_latency`` (BENCH_repartition.json) — beyond key/type
+    checks it enforces the two invariants the runtime depends on: merged
+    params bit-identical across the restage boundary, and no model units
+    dropped by the template bridge.
+  * ``attention_fwd_bwd`` (BENCH_attention.json) — enforces the memory
+    claim of the Pallas flash-attention backward: the kernel VJP's
+    peak-temp proxy stays flat in S (normalized by I/O) while the
+    reference VJP's grows quadratically.
 
     python scripts/validate_bench.py BENCH_repartition.json
+    python scripts/validate_bench.py BENCH_attention.json
 """
 import json
 import math
 import sys
 
-TOP = {
+REPARTITION_TOP = {
     "bench": str, "schema_version": int, "arch": str, "mesh": list,
     "quick": bool, "fleet": list, "swift": dict, "event": dict,
     "compile_s": (int, float), "post_step_s": (int, float),
     "pre_loss": (int, float), "post_loss": (int, float), "analytic": dict,
 }
-EVENT = {
+REPARTITION_EVENT = {
     "step": int, "vid": int, "old_template": dict, "new_template": dict,
     "lookup_s": (int, float), "restage_s": (int, float),
     "rebuild_s": (int, float), "total_s": (int, float),
     "refresh_s": (int, float), "moved_bytes": (int, float),
     "params_identical": bool,
 }
+
+ATTENTION_TOP = {
+    "bench": str, "schema_version": int, "backend": str, "interpret": bool,
+    "quick": bool, "shape": dict, "block_q": int, "block_k": int,
+    "points": list, "summary": dict,
+}
+ATTENTION_SIDE = {
+    "fwd_bwd_s": (int, float), "peak_temp_bytes": int,
+    "temp_over_io": (int, float),
+}
+# the kernel VJP's normalized peak may wobble (padding, residual dtype)
+# but must not grow with S; the reference VJP's raw peak is the
+# [B, Hkv, G, Sq, Skv] float32 score matrix, i.e. exactly quadratic.
+KERNEL_FLATNESS_BOUND = 3.0
+REF_QUADRATIC_SLACK = 0.5
+MIN_REF_OVER_KERNEL = 2.0
 
 
 def fail(msg: str) -> None:
@@ -41,16 +62,10 @@ def check_keys(obj: dict, spec: dict, where: str) -> None:
                  f"expected {typ}")
 
 
-def main() -> None:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_repartition.json"
-    with open(path) as f:
-        data = json.load(f)
-
-    check_keys(data, TOP, "payload")
-    if data["bench"] != "repartition_latency":
-        fail(f"unexpected bench name {data['bench']!r}")
+def validate_repartition(data: dict, path: str) -> None:
+    check_keys(data, REPARTITION_TOP, "payload")
     ev = data["event"]
-    check_keys(ev, EVENT, "event")
+    check_keys(ev, REPARTITION_EVENT, "event")
 
     for key in ("lookup_s", "restage_s", "rebuild_s", "total_s",
                 "refresh_s"):
@@ -72,6 +87,72 @@ def main() -> None:
     print(f"validate_bench: OK — {path} "
           f"(live switch {ev['total_s'] * 1e3:.1f} ms, "
           f"{new} layers re-staged, params identical)")
+
+
+def validate_attention(data: dict, path: str) -> None:
+    check_keys(data, ATTENTION_TOP, "payload")
+    points = data["points"]
+    if len(points) < 2:
+        fail(f"need >= 2 seq points, got {len(points)}")
+    seqs = []
+    for i, pt in enumerate(points):
+        where = f"points[{i}]"
+        if "seq" not in pt or "io_bytes" not in pt:
+            fail(f"{where} missing seq/io_bytes")
+        seqs.append(pt["seq"])
+        for side in ("kernel", "ref"):
+            if side not in pt:
+                fail(f"{where} missing {side!r}")
+            check_keys(pt[side], ATTENTION_SIDE, f"{where}[{side!r}]")
+            if not (pt[side]["fwd_bwd_s"] > 0
+                    and math.isfinite(pt[side]["fwd_bwd_s"])):
+                fail(f"{where}[{side!r}] fwd_bwd_s not positive-finite")
+            if pt[side]["peak_temp_bytes"] <= 0:
+                fail(f"{where}[{side!r}] peak_temp_bytes <= 0")
+    if seqs != sorted(seqs) or len(set(seqs)) != len(seqs):
+        fail(f"seq points not strictly increasing: {seqs}")
+
+    seq_ratio = seqs[-1] / seqs[0]
+    k_toi = [pt["kernel"]["temp_over_io"] for pt in points]
+    if max(k_toi) / min(k_toi) > KERNEL_FLATNESS_BOUND:
+        fail("kernel VJP peak-temp proxy is NOT flat in S: temp/io spans "
+             f"x{max(k_toi) / min(k_toi):.2f} "
+             f"(bound x{KERNEL_FLATNESS_BOUND}) — an O(S^2) temporary is "
+             "back on the training hot path")
+    ref_growth = (points[-1]["ref"]["peak_temp_bytes"]
+                  / points[0]["ref"]["peak_temp_bytes"])
+    if ref_growth < REF_QUADRATIC_SLACK * seq_ratio ** 2:
+        fail(f"reference VJP peak grew only x{ref_growth:.1f} over seq "
+             f"x{seq_ratio:.0f} — the baseline being compared against is "
+             "not the O(S^2) recompute")
+    ratio = (points[-1]["ref"]["peak_temp_bytes"]
+             / points[-1]["kernel"]["peak_temp_bytes"])
+    if ratio < MIN_REF_OVER_KERNEL:
+        fail(f"kernel VJP peak within x{ratio:.1f} of the reference at "
+             f"seq={seqs[-1]} — no memory win")
+
+    print(f"validate_bench: OK — {path} (seq x{seq_ratio:.0f}: kernel "
+          f"temp/io flat at {max(k_toi):.2f}, ref peak x{ref_growth:.0f}, "
+          f"ref/kernel x{ratio:.1f} at seq={seqs[-1]})")
+
+
+VALIDATORS = {
+    "repartition_latency": validate_repartition,
+    "attention_fwd_bwd": validate_attention,
+}
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_repartition.json"
+    with open(path) as f:
+        data = json.load(f)
+
+    bench = data.get("bench")
+    validator = VALIDATORS.get(bench)
+    if validator is None:
+        fail(f"unknown bench name {bench!r} "
+             f"(expected one of {sorted(VALIDATORS)})")
+    validator(data, path)
 
 
 if __name__ == "__main__":

@@ -66,6 +66,10 @@ class ModelConfig:
     # attention impl: 'auto' picks chunked for long sequences
     q_chunk: int = 512
     kv_chunk: int = 1024
+    # Pallas flash-attention VMEM tile sizes (fwd + bwd kernels); callers
+    # may override per-call via blocks.attention(block_q=..., block_k=...)
+    attn_block_q: int = 128
+    attn_block_k: int = 128
 
     @property
     def hd(self) -> int:

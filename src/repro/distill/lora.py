@@ -5,7 +5,10 @@ on-vehicle/edge personalization feasible under memory constraints).
 leaf name matches ``targets``; ``merge_lora`` returns params with
 w + scale * A @ B folded in (for inference/serving); ``apply_lora`` keeps
 the factors separate so only (A, B) receive gradients during fine-tuning.
-The fused base+low-rank matmul lives in kernels/lora_matmul.
+The fused base+low-rank matmul lives in kernels/lora_matmul and is
+differentiable through ``ops.lora_matmul_ad``'s closed-form custom_vjp
+(``apply_lora`` routes through it) — one pass over x and W, and the
+merged weight is never materialized.
 """
 from __future__ import annotations
 
@@ -71,6 +74,23 @@ def merge_lora(params, lora, cfg: LoRAConfig):
     return jax.tree.map(merge, params, lora,
                         is_leaf=lambda x: x is None
                         or (isinstance(x, dict) and "A" in x))
+
+
+def apply_lora(x, w, factors, cfg: LoRAConfig, *, interpret=None):
+    """Adapted linear ``x @ w + scale * (x @ A) @ B`` through the fused
+    Pallas kernel — differentiable (closed-form custom_vjp), so LoRA
+    fine-tuning can run the fused path instead of merging, and only the
+    factors' cotangents are nonzero where the optimizer masks the base.
+
+    x: [..., K]; w: [K, N]; factors: {"A": [K, r], "B": [r, N]}.
+    """
+    from repro.kernels import ops
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = ops.lora_matmul_ad(x2, w, factors["A"].astype(w.dtype),
+                           factors["B"].astype(w.dtype),
+                           scale=cfg.scale, interpret=interpret)
+    return y.reshape(lead + (w.shape[-1],))
 
 
 def lora_param_count(lora) -> int:

@@ -1,5 +1,5 @@
-"""Blocked online-softmax attention (flash attention) as a Pallas TPU
-kernel.
+"""Blocked online-softmax attention (flash attention) as Pallas TPU
+kernels — forward AND backward.
 
 TPU adaptation notes (vs the CUDA original): tiles live in VMEM sized for
 the MXU (block dims multiples of 128 where the dtype allows); the running
@@ -7,8 +7,28 @@ the MXU (block dims multiples of 128 where the dtype allows); the running
 (sequential) KV-block grid dimension, while (batch, head, q-block) are
 parallel grid dims. GQA is handled in the index map (q head h reads kv
 head h // group). Causal and sliding-window masks are applied from
-absolute positions, so the same kernel serves train, prefill and the
+absolute positions, so the same kernels serve train, prefill and the
 windowed long_500k path.
+
+Backward structure (FlashAttention-2): the forward additionally emits the
+per-row logsumexp ``lse = m + log(l)`` so the VJP saves ``(q, k, v, o,
+lse)`` — O(S·D) residuals — instead of rematerializing the O(Sq·Skv)
+score/softmax matrices. Three kernels then compute the gradients, each
+recomputing ``p = exp(s - lse)`` one block at a time:
+
+  * ``_bwd_preprocess_kernel``: ``delta = rowsum(dO * O)`` (the softmax
+    Jacobian's diagonal correction), grid over q blocks.
+  * ``_bwd_dkv_kernel``: grid over KV blocks (parallel) with a sequential
+    inner dimension over (GQA query group x q block); dK/dV accumulate in
+    float32 VMEM scratch and the query-group contributions sum into the
+    shared KV head.
+  * ``_bwd_dq_kernel``: grid over Q blocks (parallel) with a sequential
+    inner dimension over KV blocks; dQ accumulates in VMEM scratch.
+
+Uneven sequence lengths (e.g. vision token counts) are handled by padding
+Sq/Skv up to a block multiple and masking the tail from absolute
+positions (``kp < kv_len``); padded q rows carry zero cotangents, so they
+contribute nothing to dK/dV and their dQ rows are sliced off.
 """
 from __future__ import annotations
 
@@ -27,9 +47,53 @@ _CompilerParams = pallas_tpu_compiler_params()
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale: float, causal: bool, window: Optional[int],
-            bq: int, bk: int, q_offset: int):
+def _block_and_pad(block: int, s: int) -> tuple:
+    """Tile size and tail padding for a sequence length that need not be a
+    multiple of the requested block (pad + mask instead of asserting)."""
+    b = max(1, min(block, s))
+    return b, (-s) % b
+
+
+def _pad_seq(x, pad: int):
+    """Zero-pad the sequence axis (axis 2 of [B, H, S, D] / [B, H, S])."""
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[2] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _mask_block(qp, kp, *, causal: bool, window: Optional[int],
+                kv_len: int):
+    """[bq, bk] validity mask from absolute q/k positions (qp/kp are
+    broadcasted iotas). ``kv_len`` masks the padded KV tail."""
+    mask = kp < kv_len
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    return mask
+
+
+def _block_live(qp_lo, kp_lo, *, causal: bool, window: Optional[int],
+                kv_len: int, bq: int, bk: int):
+    """Scalar predicate: does block [qp_lo, qp_lo+bq) x [kp_lo, kp_lo+bk)
+    contain ANY unmasked (q, k) pair? Exact for causal and/or window (a
+    pair with kp <= qp and kp > qp - window exists iff kp_lo <= qp_hi and
+    kp_hi > qp_lo - window) — lets the grid skip ~half the tiles on the
+    causal path and all but O(window/bk) per row on the windowed path."""
+    live = kp_lo < kv_len
+    if causal:
+        live &= kp_lo <= qp_lo + bq - 1
+    if window is not None:
+        live &= kp_lo + bk - 1 > qp_lo - window
+    return live
+
+
+# ------------------------------------------------------------- forward ----
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
+                *, scale: float, causal: bool, window: Optional[int],
+                bq: int, bk: int, q_offset: int, kv_len: int):
     kv_i = pl.program_id(3)
 
     @pl.when(kv_i == 0)
@@ -38,58 +102,63 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)        # [bq, d]
-    k = k_ref[0, 0].astype(jnp.float32)        # [bk, d]
-    v = v_ref[0, 0]                            # [bk, d]
+    qp_lo = q_offset + pl.program_id(2) * bq
+    kp_lo = kv_i * bk
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+    @pl.when(_block_live(qp_lo, kp_lo, causal=causal, window=window,
+                         kv_len=kv_len, bq=bq, bk=bk))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)    # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)    # [bk, d]
+        v = v_ref[0, 0]                        # [bk, d]
 
-    qp = q_offset + pl.program_id(2) * bq \
-        + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    kp = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = jnp.ones((bq, bk), jnp.bool_)
-    if causal:
-        mask &= kp <= qp
-    if window is not None:
-        mask &= kp > qp - window
-    s = jnp.where(mask, s, NEG_INF)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
-    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
-        p.astype(jnp.float32), v.astype(jnp.float32),
-        preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+        qp = qp_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = kp_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = _mask_block(qp, kp, causal=causal, window=window,
+                           kv_len=kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p.astype(jnp.float32), v.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(kv_i == pl.num_programs(3) - 1)
     def _done():
-        o_ref[0, 0] = (acc_ref[...]
-                       / jnp.maximum(l_ref[...][:, None], 1e-30)
-                       ).astype(o_ref.dtype)
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_ref[...] + jnp.log(l)
 
 
 def flash_attention(q, k, v, *, scale: Optional[float] = None,
                     causal: bool = True, window: Optional[int] = None,
                     q_offset: int = 0, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = False):
-    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D]. Returns [B, Hq, Sq, D]."""
+                    block_k: int = 128, return_lse: bool = False,
+                    interpret: bool = False):
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D]. Returns [B, Hq, Sq, D]
+    (and the float32 [B, Hq, Sq] row logsumexp when ``return_lse``)."""
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     g = hq // hkv
     scale = scale if scale is not None else d ** -0.5
-    bq = min(block_q, sq)
-    bk = min(block_k, skv)
-    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
-    grid = (b, hq, sq // bq, skv // bk)
+    bq, pq = _block_and_pad(block_q, sq)
+    bk, pk = _block_and_pad(block_k, skv)
+    q_, k_, v_ = _pad_seq(q, pq), _pad_seq(k, pk), _pad_seq(v, pk)
+    spq, spk = sq + pq, skv + pk
+    grid = (b, hq, spq // bq, spk // bk)
 
-    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+    kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal,
                                window=window, bq=bq, bk=bk,
-                               q_offset=q_offset)
-    return pl.pallas_call(
+                               q_offset=q_offset, kv_len=skv)
+    o, lse = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -99,9 +168,14 @@ def flash_attention(q, k, v, *, scale: Optional[float] = None,
             pl.BlockSpec((1, 1, bk, d),
                          lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, d),
-                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, qi, ki: (b_, h, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, spq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, spq), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
@@ -111,4 +185,218 @@ def flash_attention(q, k, v, *, scale: Optional[float] = None,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q, k, v)
+    )(q_, k_, v_)
+    o, lse = o[:, :, :sq], lse[:, :, :sq]
+    return (o, lse) if return_lse else o
+
+
+# ------------------------------------------------------------ backward ----
+def _bwd_preprocess_kernel(o_ref, do_ref, delta_ref):
+    o = o_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    delta_ref[0, 0] = (o * do).sum(axis=1)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc, *,
+                    scale: float, causal: bool, window: Optional[int],
+                    bq: int, bk: int, q_offset: int, kv_len: int,
+                    q_len: int, nqb: int):
+    i = pl.program_id(3)                       # (group, q-block) sequential
+
+    @pl.when(i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    qrow_lo = (i % nqb) * bq
+    qp_lo = q_offset + qrow_lo
+    kp_lo = pl.program_id(2) * bk
+    live = _block_live(qp_lo, kp_lo, causal=causal, window=window,
+                       kv_len=kv_len, bq=bq, bk=bk)
+    live &= qrow_lo < q_len                    # skip fully padded q tiles
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)    # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)    # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)    # [bk, d]
+        do = do_ref[0, 0].astype(jnp.float32)  # [bq, d]
+        lse = lse_ref[0, 0]                    # [bq] f32
+        delta = delta_ref[0, 0]                # [bq] f32
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qrow = qrow_lo \
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        qp = q_offset + qrow
+        kp = kp_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = _mask_block(qp, kp, causal=causal, window=window,
+                           kv_len=kv_len)
+        mask &= qrow < q_len                   # padded q tail contributes 0
+        s = jnp.where(mask, s, NEG_INF)
+
+        p = jnp.exp(s - lse[:, None])          # [bq, bk], recomputed
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(i == pl.num_programs(3) - 1)
+    def _done():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, dq_acc, *,
+                   scale: float, causal: bool, window: Optional[int],
+                   bq: int, bk: int, q_offset: int, kv_len: int):
+    kv_i = pl.program_id(3)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    qp_lo = q_offset + pl.program_id(2) * bq
+    kp_lo = kv_i * bk
+
+    @pl.when(_block_live(qp_lo, kp_lo, causal=causal, window=window,
+                         kv_len=kv_len, bq=bq, bk=bk))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qp = qp_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = kp_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = _mask_block(qp, kp, causal=causal, window=window,
+                           kv_len=kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+
+        p = jnp.exp(s - lse[:, None])
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dq_acc[...] += jax.lax.dot(ds, k,
+                                   preferred_element_type=jnp.float32)
+
+    @pl.when(kv_i == pl.num_programs(3) - 1)
+    def _done():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *,
+                        scale: Optional[float] = None, causal: bool = True,
+                        window: Optional[int] = None, q_offset: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False):
+    """Gradients (dq, dk, dv) from the saved residuals ``(q, k, v, o,
+    lse)`` and the output cotangent ``do`` — O(S·D) memory, no O(S²)
+    temporaries."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    bq, pq = _block_and_pad(block_q, sq)
+    bk, pk = _block_and_pad(block_k, skv)
+    q_, o_, do_ = _pad_seq(q, pq), _pad_seq(o, pq), _pad_seq(do, pq)
+    lse_ = _pad_seq(lse.astype(jnp.float32), pq)
+    k_, v_ = _pad_seq(k, pk), _pad_seq(v, pk)
+    spq, spk = sq + pq, skv + pk
+    nqb, nkb = spq // bq, spk // bk
+
+    delta = pl.pallas_call(
+        _bwd_preprocess_kernel,
+        grid=(b, hq, nqb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi: (b_, h, qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq), lambda b_, h, qi: (b_, h, qi)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, spq), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(o_, do_)
+
+    # dK/dV: grid over KV blocks; the sequential inner dim walks the GQA
+    # query group x q blocks, so each group's contribution accumulates
+    # into the shared KV head's scratch.
+    dkv_kernel = functools.partial(
+        _bwd_dkv_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, q_offset=q_offset, kv_len=skv, q_len=sq, nqb=nqb)
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(b, hkv, nkb, g * nqb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda b_, h, ki, i: (b_, h * g + i // nqb,
+                                               i % nqb, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, ki, i: (b_, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, ki, i: (b_, h, ki, 0)),
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda b_, h, ki, i: (b_, h * g + i // nqb,
+                                               i % nqb, 0)),
+            pl.BlockSpec((1, 1, bq),
+                         lambda b_, h, ki, i: (b_, h * g + i // nqb,
+                                               i % nqb)),
+            pl.BlockSpec((1, 1, bq),
+                         lambda b_, h, ki, i: (b_, h * g + i // nqb,
+                                               i % nqb)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, ki, i: (b_, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, ki, i: (b_, h, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, spk, d), k.dtype),
+            jax.ShapeDtypeStruct((b, hkv, spk, d), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, d), jnp.float32),
+            pltpu.VMEM((bk, d), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q_, k_, v_, do_, lse_, delta)
+
+    dq_kernel = functools.partial(
+        _bwd_dq_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, q_offset=q_offset, kv_len=skv)
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(b, hq, nqb, nkb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, qi, ki: (b_, h, qi)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, qi, ki: (b_, h, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, spq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q_, k_, v_, do_, lse_, delta)
+
+    return dq[:, :, :sq], dk[:, :, :skv], dv[:, :, :skv]

@@ -3,6 +3,13 @@
 On CPU (this container) the kernels run in interpret mode — the kernel
 body executes in Python for correctness validation; on TPU backends they
 compile to Mosaic. ``interpret=None`` auto-detects.
+
+Autodiff: ``flash_attention_ad`` and ``lora_matmul_ad`` carry
+``custom_vjp`` rules whose backward passes are themselves kernels —
+flash attention saves ``(q, k, v, o, lse)`` residuals and runs the
+preprocess/dKV/dQ Pallas kernels (O(S·D) memory; no O(Sq·Skv) score
+matrix is ever materialized), and the LoRA matmul's closed-form dx reuses
+the fused forward kernel on transposed operands.
 """
 from __future__ import annotations
 
@@ -23,43 +30,70 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _fit_block(block: int, dim: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``block`` (tile clamping for
+    kernels that require exact divisibility)."""
+    b = max(1, min(block, dim))
+    while dim % b:
+        b -= 1
+    return b
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
                                              "q_offset", "block_q",
-                                             "block_k", "interpret"))
+                                             "block_k", "return_lse",
+                                             "interpret"))
 def flash_attention(q, k, v, *, scale=None, causal=True, window=None,
-                    q_offset=0, block_q=128, block_k=128, interpret=None):
+                    q_offset=0, block_q=128, block_k=128, return_lse=False,
+                    interpret=None):
     return _fa.flash_attention(q, k, v, scale=scale, causal=causal,
                                window=window, q_offset=q_offset,
                                block_q=block_q, block_k=block_k,
+                               return_lse=return_lse,
                                interpret=_auto_interpret(interpret))
 
 
-# Differentiable wrapper: pallas_call has no autodiff rule, so the VJP
-# recomputes the oracle's linearization (flash-attention backward is a
-# recompute anyway; on TPU this would be the backward kernel).
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def flash_attention_ad(q, k, v, scale, causal, window, q_offset):
+# Differentiable flash attention: the VJP runs the real backward kernels
+# from the saved (q, k, v, o, lse) residuals instead of re-linearizing the
+# O(S^2) reference implementation.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _fa_ad(q, k, v, scale, causal, window, q_offset, block_q, block_k,
+           interpret):
     return _fa.flash_attention(q, k, v, scale=scale, causal=causal,
                                window=window, q_offset=q_offset,
-                               interpret=_auto_interpret(None))
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
 
 
-def _fa_fwd(q, k, v, scale, causal, window, q_offset):
-    out = flash_attention_ad(q, k, v, scale, causal, window, q_offset)
-    return out, (q, k, v)
+def _fa_ad_fwd(q, k, v, scale, causal, window, q_offset, block_q, block_k,
+               interpret):
+    o, lse = _fa.flash_attention(q, k, v, scale=scale, causal=causal,
+                                 window=window, q_offset=q_offset,
+                                 block_q=block_q, block_k=block_k,
+                                 return_lse=True, interpret=interpret)
+    return o, (q, k, v, o, lse)
 
 
-def _fa_bwd(scale, causal, window, q_offset, res, g):
-    from repro.kernels import ref
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: ref.flash_attention_ref(
-            q_, k_, v_, scale=scale, causal=causal, window=window,
-            q_offset=q_offset), q, k, v)
-    return vjp(g)
+def _fa_ad_bwd(scale, causal, window, q_offset, block_q, block_k,
+               interpret, res, g):
+    q, k, v, o, lse = res
+    return _fa.flash_attention_bwd(
+        q, k, v, o, lse, g, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, block_q=block_q, block_k=block_k,
+        interpret=interpret)
 
 
-flash_attention_ad.defvjp(_fa_fwd, _fa_bwd)
+_fa_ad.defvjp(_fa_ad_fwd, _fa_ad_bwd)
+
+
+def flash_attention_ad(q, k, v, scale=None, causal=True, window=None,
+                       q_offset=0, *, block_q=128, block_k=128,
+                       interpret=None):
+    """Differentiable flash attention (kernel forward AND backward).
+    ``block_q``/``block_k`` tune the VMEM tiles of both passes."""
+    scale = float(scale) if scale is not None else q.shape[-1] ** -0.5
+    return _fa_ad(q, k, v, scale, causal, window, q_offset,
+                  int(block_q), int(block_k), _auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -75,3 +109,55 @@ def lora_matmul(x, w, a, b, *, scale=1.0, block_m=256, block_n=256,
     return _lm.lora_matmul(x, w, a, b, scale=scale, block_m=block_m,
                            block_n=block_n, block_k=block_k,
                            interpret=_auto_interpret(interpret))
+
+
+# Differentiable fused LoRA matmul: the raw pallas_call has no autodiff
+# rule, so the distillation path could not differentiate through the
+# fused kernel at all. Closed form for y = x@w + scale*(x@a)@b:
+#   dx = g @ w^T + scale*(g @ b^T) @ a^T   (the same fused kernel, on
+#                                           transposed operands)
+#   dw = x^T @ g
+#   da = scale * x^T @ (g @ b^T)
+#   db = scale * (x @ a)^T @ g
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _lora_ad(x, w, a, b, scale, block_m, block_n, block_k, interpret):
+    return _lm.lora_matmul(x, w, a, b, scale=scale, block_m=block_m,
+                           block_n=block_n, block_k=block_k,
+                           interpret=interpret)
+
+
+def _lora_ad_fwd(x, w, a, b, scale, block_m, block_n, block_k, interpret):
+    out = _lora_ad(x, w, a, b, scale, block_m, block_n, block_k, interpret)
+    return out, (x, w, a, b)
+
+
+def _lora_ad_bwd(scale, block_m, block_n, block_k, interpret, res, g):
+    x, w, a, b = res
+    m, kdim = x.shape
+    n = w.shape[1]
+    dx = _lm.lora_matmul(
+        g, w.T, b.T, a.T, scale=scale,
+        block_m=_fit_block(block_m, m), block_n=_fit_block(block_n, kdim),
+        block_k=_fit_block(block_k, n), interpret=interpret).astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    dw = (xf.T @ gf).astype(w.dtype)
+    gb = gf @ b.astype(jnp.float32).T
+    da = (scale * (xf.T @ gb)).astype(a.dtype)
+    xa = xf @ a.astype(jnp.float32)
+    db = (scale * (xa.T @ gf)).astype(b.dtype)
+    return dx, dw, da, db
+
+
+_lora_ad.defvjp(_lora_ad_fwd, _lora_ad_bwd)
+
+
+def lora_matmul_ad(x, w, a, b, *, scale=1.0, block_m=256, block_n=256,
+                   block_k=512, interpret=None):
+    """Differentiable fused LoRA matmul (closed-form VJP; dx reuses the
+    fused kernel). Tiles are clamped to valid divisors of each dim."""
+    m, kdim = x.shape
+    n = w.shape[1]
+    return _lora_ad(x, w, a, b, float(scale),
+                    _fit_block(block_m, m), _fit_block(block_n, n),
+                    _fit_block(block_k, kdim), _auto_interpret(interpret))

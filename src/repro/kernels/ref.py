@@ -13,9 +13,11 @@ NEG_INF = -1e30
 def flash_attention_ref(q, k, v, *, scale: Optional[float] = None,
                         causal: bool = True,
                         window: Optional[int] = None,
-                        q_offset: int = 0):
+                        q_offset: int = 0, return_lse: bool = False):
     """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D] (GQA when Hq > Hkv).
-    Positions are absolute: q row i has position q_offset + i."""
+    Positions are absolute: q row i has position q_offset + i. With
+    ``return_lse`` also returns the [B, Hq, Sq] float32 row logsumexp
+    (the residual the Pallas backward kernels recompute p from)."""
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     g = hq // hkv
@@ -32,7 +34,11 @@ def flash_attention_ref(q, k, v, *, scale: Optional[float] = None,
     s = jnp.where(mask[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
-    return o.reshape(b, hq, sq, d).astype(q.dtype)
+    o = o.reshape(b, hq, sq, d).astype(q.dtype)
+    if return_lse:
+        lse = jax.scipy.special.logsumexp(s, axis=-1)   # [b, hkv, g, sq]
+        return o, lse.reshape(b, hq, sq)
+    return o
 
 
 def mlstm_chunked_ref(q, k, v, ig, lf, *, chunk: int = 64, C0=None, n0=None,

@@ -13,6 +13,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 
@@ -91,6 +92,25 @@ def _head_rmsnorm(x, scale, eps):
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _contiguous_positions(positions) -> bool:
+    """True iff ``positions`` is a trace-time constant describing the
+    contiguous, non-negative layout the Pallas kernel's absolute-position
+    masks assume (row i at q_offset + i, batch-uniform). Checked in
+    numpy — jnp ops would be staged into the surrounding trace. Traced
+    position arrays (packed sequences, -1 padding, per-example offsets)
+    can't be checked, so they conservatively fall back to the XLA paths."""
+    try:
+        p = np.asarray(positions)
+    except Exception:
+        return False
+    row = p if p.ndim == 1 else p[0]
+    if p.ndim == 2 and not (p == row[None]).all():
+        return False
+    if row.size == 0 or row[0] < 0:
+        return False
+    return row.size == 1 or (np.diff(row) == 1).all()
 
 
 def dense_mha(q, k, v, *, scale, q_pos, kv_pos, causal, window):
@@ -176,8 +196,21 @@ def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
               window: Optional[int] = None,
               cross_kv: Optional[tuple] = None,
               cross_pos: Optional[jnp.ndarray] = None,
-              use_chunked: Optional[bool] = None):
+              use_chunked: Optional[bool] = None,
+              block_q: Optional[int] = None,
+              block_k: Optional[int] = None,
+              positions_contiguous: Optional[bool] = None):
     """Unified attention: self (train/prefill/decode w/ cache) or cross.
+
+    ``block_q``/``block_k`` override the Pallas kernel tile sizes
+    (default ``cfg.attn_block_q``/``cfg.attn_block_k``) so e.g. the FHDP
+    step can tune tiles without bypassing autodiff.
+
+    ``positions_contiguous`` asserts that positions are row i ->
+    q_offset + i (the layout the Pallas kernel's masks assume). Model
+    layers pass True when they built ``positions`` from ``jnp.arange``
+    themselves; when None, concrete position arrays are value-checked
+    and traced ones conservatively take the XLA paths.
 
     Returns (output, new_cache).
     """
@@ -215,12 +248,17 @@ def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
     scale = hd ** -0.5
     q_pos1 = positions if positions.ndim == 1 else positions[0]
     # Pallas fast path (TPU; interpret-mode on CPU): contiguous self-
-    # attention without a ring cache maps 1:1 onto the flash kernel.
+    # attention without a ring cache maps 1:1 onto the flash kernel
+    # (fwd AND bwd — uneven lengths are padded + masked inside it).
+    if positions_contiguous is None:
+        positions_contiguous = _contiguous_positions(positions)
     if (kernel_backend() and cross_kv is None and cache is None
-            and s % 128 == 0 and k.shape[2] % 128 == 0 and hd % 8 == 0):
+            and hd % 8 == 0 and positions_contiguous):
         from repro.kernels import ops as kops
         o = kops.flash_attention_ad(q, k, v, scale, causal, window,
-                                    int(k.shape[2] - s))
+                                    int(k.shape[2] - s),
+                                    block_q=block_q or cfg.attn_block_q,
+                                    block_k=block_k or cfg.attn_block_k)
         o = o.transpose(0, 2, 1, 3).reshape(b, s, nq * hd)
         return (o @ p["wo"]).astype(x.dtype), new_cache
     if use_chunked is None:

@@ -59,7 +59,8 @@ def encode(params, cfg: ModelConfig, frames, *, window=None, remat=False):
 
     def body(h, lp):
         a, _ = B.attention(lp["attn"], B.rms_norm(lp["ln1"], h, cfg.norm_eps),
-                           cfg, positions=pos, causal=False, window=window)
+                           cfg, positions=pos, causal=False, window=window,
+                           positions_contiguous=True)
         h = h + a
         h = h + B.mlp(lp["ffn"], B.rms_norm(lp["ln2"], h, cfg.norm_eps))
         return constrain(h), None
@@ -92,6 +93,7 @@ def decode(params, cfg: ModelConfig, tokens, cross_kv, *, positions=None,
            remat=False):
     """tokens: [B, S_dec]; cross_kv: stacked (k, v) from make_cross_kv."""
     x = B.embed(params["embed"], tokens)
+    pos_contig = True if positions is None else None
     if positions is None:
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)
     mem_pos = jnp.arange(cross_kv[0].shape[3], dtype=jnp.int32)
@@ -99,7 +101,8 @@ def decode(params, cfg: ModelConfig, tokens, cross_kv, *, positions=None,
     def body(h, layer):
         lp, (ck, cv), lc = layer
         a, nc = B.attention(lp["attn"], B.rms_norm(lp["ln1"], h, cfg.norm_eps),
-                            cfg, positions=positions, cache=lc, window=window)
+                            cfg, positions=positions, cache=lc, window=window,
+                            positions_contiguous=pos_contig)
         h = h + a
         xa, _ = B.attention(lp["xattn"], B.rms_norm(lp["ln_x"], h, cfg.norm_eps),
                             cfg, positions=positions, cross_kv=(ck, cv),

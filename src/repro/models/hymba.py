@@ -25,10 +25,12 @@ def init_block(key, cfg: ModelConfig) -> dict:
 
 
 def apply_block(p, x, cfg: ModelConfig, *, positions, kv_cache=None,
-                ssm_state=None, window=None, step=False):
+                ssm_state=None, window=None, step=False,
+                positions_contiguous=None):
     h = B.rms_norm(p["ln1"], x, cfg.norm_eps)
     a, new_kv = B.attention(p["attn"], h, cfg, positions=positions,
-                            cache=kv_cache, window=window)
+                            cache=kv_cache, window=window,
+                            positions_contiguous=positions_contiguous)
     if step:
         s, new_ssm = R.apply_mamba_step(p["mamba"], x, ssm_state, cfg)
     else:
@@ -63,6 +65,7 @@ def forward(params, cfg: ModelConfig, tokens, *, positions=None, states=None,
             window=None, step=False, logits_slice=None, hidden_only=False,
             remat=False, **_):
     x = B.embed(params["embed"], tokens)
+    pos_contig = True if positions is None else None
     if positions is None:
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)
     kv = states["kv"] if states is not None else None
@@ -74,7 +77,8 @@ def forward(params, cfg: ModelConfig, tokens, *, positions=None, states=None,
         lp, lkv, lssm = layer
         h, nkv, nssm = apply_block(lp, h, cfg, positions=positions,
                                    kv_cache=lkv, ssm_state=lssm,
-                                   window=window, step=step)
+                                   window=window, step=step,
+                                   positions_contiguous=pos_contig)
         return constrain(h), (nkv, nssm)
 
     if remat:

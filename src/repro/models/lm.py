@@ -30,10 +30,11 @@ def init_block(key, cfg: ModelConfig) -> dict:
 
 
 def apply_block(p: dict, x, cfg: ModelConfig, *, positions, cache=None,
-                window=None, use_chunked=None):
+                window=None, use_chunked=None, positions_contiguous=None):
     a, new_cache = B.attention(p["attn"], B.rms_norm(p["ln1"], x, cfg.norm_eps),
                                cfg, positions=positions, cache=cache,
-                               window=window, use_chunked=use_chunked)
+                               window=window, use_chunked=use_chunked,
+                               positions_contiguous=positions_contiguous)
     x = x + a
     h = B.rms_norm(p["ln2"], x, cfg.norm_eps)
     if "moe" in p:
@@ -69,16 +70,18 @@ def init(key, cfg: ModelConfig) -> dict:
 
 
 def _scan_blocks(params, x, cfg: ModelConfig, *, positions, caches=None,
-                 window=None, remat=False, use_chunked=None):
+                 window=None, remat=False, use_chunked=None,
+                 positions_contiguous=None):
     """Run the stacked block pytree over x. caches: stacked kv cache or None."""
     from repro.core.act_sharding import constrain
 
     def body(carry, layer):
         h = carry
         lp, lc = layer
-        out, new_cache, aux = apply_block(lp, h, cfg, positions=positions,
-                                          cache=lc, window=window,
-                                          use_chunked=use_chunked)
+        out, new_cache, aux = apply_block(
+            lp, h, cfg, positions=positions, cache=lc, window=window,
+            use_chunked=use_chunked,
+            positions_contiguous=positions_contiguous)
         return constrain(out), (new_cache, aux)
 
     fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
@@ -98,11 +101,13 @@ def forward(params, cfg: ModelConfig, tokens, *, positions=None, caches=None,
         pfx = B.linear(params["projector"], prefix_embeds.astype(x.dtype))
         x = jnp.concatenate([pfx, x], axis=1)
         npfx = pfx.shape[1]
+    pos_contig = True if positions is None else None
     if positions is None:
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)
     x, new_caches, aux = _scan_blocks(params, x, cfg, positions=positions,
                                       caches=caches, window=window,
-                                      remat=remat, use_chunked=use_chunked)
+                                      remat=remat, use_chunked=use_chunked,
+                                      positions_contiguous=pos_contig)
     x = B.rms_norm(params["ln_f"], x, cfg.norm_eps)
     if npfx:
         x = x[:, npfx:]

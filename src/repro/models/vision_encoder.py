@@ -47,7 +47,8 @@ def forward(params, cfg: ModelConfig, batch, **_):
 
     def body(h, lp):
         a, _ = B.attention(lp["attn"], B.rms_norm(lp["ln1"], h, cfg.norm_eps),
-                           cfg, positions=pos, causal=False)
+                           cfg, positions=pos, causal=False,
+                           positions_contiguous=True)
         h = h + a
         h = h + B.mlp(lp["ffn"], B.rms_norm(lp["ln2"], h, cfg.norm_eps))
         return h, None

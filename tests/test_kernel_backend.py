@@ -32,6 +32,58 @@ def test_kernel_backend_matches_xla(kernel_backend):
     assert abs(float(loss_k) - float(loss_x)) < 1e-4
 
 
+def test_train_path_attention_grad_matches_oracle(kernel_backend):
+    """The train-path attention gradient through blocks.attention is
+    bit-close to the XLA oracle — including an uneven (non-128-multiple)
+    sequence length, which the kernels pad + mask."""
+    from repro.config import ModelConfig
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=1,
+                      d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                      vocab_size=64, param_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = B.init_attention(key, cfg)
+    ks = jax.random.split(key, 2)
+    for s in (128, 160):
+        x = jax.random.normal(ks[0], (2, s, cfg.d_model), jnp.float32)
+        w = jax.random.normal(ks[1], (2, s, cfg.d_model), jnp.float32)
+        pos = jnp.arange(s)
+
+        def loss(p):
+            o, _ = B.attention(p, x, cfg, positions=pos)
+            return jnp.sum(o * w)
+
+        B.set_kernel_backend(True)
+        gk = jax.grad(loss)(params)
+        B.set_kernel_backend(False)
+        gx = jax.grad(loss)(params)
+        for name in params:
+            err = float(jnp.max(jnp.abs(gk[name] - gx[name])))
+            scale = max(1.0, float(jnp.max(jnp.abs(gx[name]))))
+            assert err < 1e-4 * scale, (s, name, err)
+
+
+def test_noncontiguous_positions_fall_back(kernel_backend):
+    """Padded (-1) or non-contiguous position arrays must NOT take the
+    Pallas path (its masks assume row i at q_offset + i) — they fall back
+    to the XLA paths, so enabling the backend changes nothing."""
+    from repro.config import ModelConfig
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=1,
+                      d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+                      vocab_size=64, param_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = B.init_attention(key, cfg)
+    x = jax.random.normal(key, (1, 16, cfg.d_model), jnp.float32)
+    padded = jnp.where(jnp.arange(16) < 12, jnp.arange(16), -1)
+
+    assert not B._contiguous_positions(padded)
+    assert B._contiguous_positions(jnp.arange(16))
+
+    o_k, _ = B.attention(params, x, cfg, positions=padded)
+    B.set_kernel_backend(False)
+    o_x, _ = B.attention(params, x, cfg, positions=padded)
+    assert float(jnp.max(jnp.abs(o_k - o_x))) == 0.0
+
+
 def test_kernel_backend_grads(kernel_backend):
     cfg = reduced(get_config("qwen3_14b")).replace(param_dtype="float32")
     model = build_model(cfg)

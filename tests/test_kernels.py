@@ -21,6 +21,8 @@ def _rand(shape, dtype, k):
         (1, 8, 8, 128, 128, 32, True, 96),        # sliding window
         (2, 2, 1, 64, 192, 64, False, None),      # cross-ish, MQA
         (1, 4, 4, 256, 256, 128, True, None),     # MXU-aligned d
+        (1, 4, 2, 160, 160, 64, True, None),      # uneven tail (pad+mask)
+        (1, 2, 2, 197, 197, 32, True, 64),        # prime len + window
     ])
 def test_flash_attention(dtype, b, hq, hkv, sq, skv, d, causal, window):
     ks = jax.random.split(KEY, 3)
@@ -28,14 +30,53 @@ def test_flash_attention(dtype, b, hq, hkv, sq, skv, d, causal, window):
     k = _rand((b, hkv, skv, d), dtype, ks[1])
     v = _rand((b, hkv, skv, d), dtype, ks[2])
     off = skv - sq
-    got = ops.flash_attention(q, k, v, causal=causal, window=window,
-                              q_offset=off, block_q=64, block_k=64,
-                              interpret=True)
-    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
-                                   q_offset=off)
+    got, lse = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=off, block_q=64, block_k=64,
+                                   return_lse=True, interpret=True)
+    want, lse_want = ref.flash_attention_ref(q, k, v, causal=causal,
+                                             window=window, q_offset=off,
+                                             return_lse=True)
     tol = 5e-6 if dtype == jnp.float32 else 2e-2
     assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
                                  - want.astype(jnp.float32)))) < tol
+    assert float(jnp.max(jnp.abs(lse - lse_want))) < tol
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,d,causal,window",
+    [
+        (2, 4, 2, 128, 128, 64, True, None),      # GQA causal
+        (1, 8, 8, 128, 128, 32, True, 96),        # sliding window
+        (2, 2, 1, 64, 192, 64, False, None),      # cross-ish, MQA
+        (1, 4, 2, 160, 160, 64, True, None),      # uneven tail (pad+mask)
+        (1, 2, 2, 197, 197, 32, True, 64),        # prime len + window
+    ])
+def test_flash_attention_grad(dtype, b, hq, hkv, sq, skv, d, causal,
+                              window):
+    """The Pallas backward kernels (preprocess/dKV/dQ) vs jax.vjp over
+    the O(S^2) reference, across mask x GQA x dtype x uneven tails."""
+    ks = jax.random.split(KEY, 4)
+    q = _rand((b, hq, sq, d), dtype, ks[0])
+    k = _rand((b, hkv, skv, d), dtype, ks[1])
+    v = _rand((b, hkv, skv, d), dtype, ks[2])
+    g = _rand((b, hq, sq, d), dtype, ks[3])
+    off = skv - sq
+
+    _, vjp_kernel = jax.vjp(
+        lambda q_, k_, v_: ops.flash_attention_ad(
+            q_, k_, v_, None, causal, window, off, block_q=64, block_k=64,
+            interpret=True), q, k, v)
+    _, vjp_ref = jax.vjp(
+        lambda q_, k_, v_: ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window, q_offset=off),
+        q, k, v)
+    for name, got, want in zip("qkv", vjp_kernel(g), vjp_ref(g)):
+        want = want.astype(jnp.float32)
+        tol = (1e-5 if dtype == jnp.float32 else 5e-2) \
+            * max(1.0, float(jnp.max(jnp.abs(want))))
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want)))
+        assert err < tol, (name, err, tol)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -80,6 +121,38 @@ def test_lora_matmul(dtype, m, k, n, r, scale):
     tol = 1e-3 if dtype == jnp.float32 else 0.25
     assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
                                  - want.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,r,scale", [
+    (128, 256, 192, 8, 0.5),
+    (100, 96, 132, 4, 1.0),    # dims not multiples of the tile
+])
+def test_lora_matmul_grad(dtype, m, k, n, r, scale):
+    """lora_matmul_ad's closed-form VJP vs jax.vjp over the oracle (the
+    raw pallas_call has no autodiff rule at all)."""
+    ks = jax.random.split(KEY, 5)
+    x = _rand((m, k), dtype, ks[0])
+    w = _rand((k, n), dtype, ks[1])
+    a = _rand((k, r), dtype, ks[2])
+    b = _rand((r, n), dtype, ks[3])
+    g = _rand((m, n), dtype, ks[4])
+    out, vjp_kernel = jax.vjp(
+        lambda *t: ops.lora_matmul_ad(*t, scale=scale, block_m=64,
+                                      block_n=64, block_k=64,
+                                      interpret=True), x, w, a, b)
+    out_ref, vjp_ref = jax.vjp(
+        lambda *t: ref.lora_matmul_ref(*t, scale=scale), x, w, a, b)
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - out_ref.astype(jnp.float32)))) \
+        < (1e-3 if dtype == jnp.float32 else 0.25)
+    for name, got, want in zip(["dx", "dw", "da", "db"],
+                               vjp_kernel(g), vjp_ref(g)):
+        want = want.astype(jnp.float32)
+        tol = (1e-4 if dtype == jnp.float32 else 5e-2) \
+            * max(1.0, float(jnp.max(jnp.abs(want))))
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want)))
+        assert err < tol, (name, err, tol)
 
 
 def test_flash_attention_matches_model_attention():
