@@ -1,0 +1,188 @@
+"""Bytes-on-wire and simulated round time of the comm fabric.
+
+Trains the same 2-edge x 2-vehicle non-IID fleet task three ways —
+identical data, seeds, and local-step schedule — and accounts for what
+each round puts on the physical links:
+
+  ``flat_fp32``  flat FedAvg, float32 updates, no edge tier: every
+                 vehicle's full payload transits its uplink AND the
+                 shared edge->cloud backhaul (the seed reproduction's
+                 implicit-mean baseline, with link costs now attached)
+  ``hier_int8``  hierarchical rounds with the int8 stochastic codec
+                 (Pallas kernel pair) + error feedback
+  ``hier_topk``  hierarchical rounds with top-k sparsification + error
+                 feedback
+
+Per mode: upward bytes per round (vehicle uplinks + backhaul), simulated
+round time from the topology's link models, and the held-out loss of the
+final merged params on every town — the matched-quality check for the
+compression claim. Writes schema-gated ``BENCH_comm.json`` (third
+perf-trajectory entry; ``scripts/validate_bench.py`` enforces the >=4x
+upward-bytes reduction of int8+hierarchy over flat fp32 at <=5% held-out
+loss drift).
+
+    PYTHONPATH=src python benchmarks/comm_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+DEFAULT_OUT = "BENCH_comm.json"
+TOPOLOGY = "2@nano*2,agx*2"          # 2 edge pods x 2 vehicles each
+TOPK_FRAC = 0.05
+
+
+def _heldout_loss(model, params, heldout, bs=64):
+    import jax.numpy as jnp
+    import numpy as np
+    losses = []
+    for data in heldout:
+        n = len(data["light"])
+        for i in range(0, n - bs + 1, bs):
+            b = {k: jnp.asarray(v[i:i + bs]) for k, v in data.items()}
+            loss, _ = model.loss(params, b)
+            losses.append(float(loss))
+    return float(np.mean(losses))
+
+
+def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
+    import jax.numpy as jnp
+    import numpy as np
+
+    try:
+        from benchmarks.common import bench_session, emit
+    except ImportError:          # invoked as `python benchmarks/...py`
+        from common import bench_session, emit
+    from repro.api import LoopHooks, load_config
+    from repro.comm.codecs import get_codec, tree_nbytes
+    from repro.comm.topology import parse_topology
+    from repro.config import ShapeConfig
+    from repro.data.partition import fleet_datasets
+    from repro.data.pipeline import client_round_batches
+    from repro.data.synthetic import DrivingDataConfig, TownWorld
+
+    rounds, locsteps, bs, samples = (4, 2, 16, 256) if quick \
+        else (10, 2, 16, 384)
+    quiet = LoopHooks(log_every=10 ** 9, log_fn=lambda *a, **k: None)
+
+    cfg = load_config("flad-vision")
+    dcfg = DrivingDataConfig(feature_dim=cfg.prefix_dim,
+                             patches=cfg.prefix_tokens or 8,
+                             num_waypoints=cfg.num_waypoints,
+                             num_light_classes=cfg.num_light_classes,
+                             n_towns=4)
+    shape = ShapeConfig("comm", dcfg.patches, bs, "train")
+    topo = parse_topology(TOPOLOGY)
+    clients = topo.n_clients
+    datasets = fleet_datasets(dcfg, clients, samples, beta=0.3)
+    world = TownWorld(dcfg)
+    rng = np.random.default_rng(99)
+    heldout = [world.sample(t, 128, rng) for t in range(dcfg.n_towns)]
+
+    def round_batches(r):
+        rb = client_round_batches(datasets, locsteps, bs, round_idx=r)
+        return {k: jnp.asarray(v) for k, v in rb.items()}
+
+    def train(strategy, **options):
+        ses = bench_session("flad-vision", mesh=(1,), shape=shape,
+                            strategy=strategy, learning_rate=2e-3,
+                            local_steps=locsteps, remat=False, **options)
+        ses.run(rounds, batches=round_batches, hooks=quiet)
+        return ses, _heldout_loss(ses.model, ses.merged_params(), heldout)
+
+    # wire format sizes come from the model's parameter tree
+    from repro.core.steps import abstract_params
+    ptree = abstract_params(cfg)
+    fp32_payload = tree_nbytes(get_codec("none"), ptree)
+
+    modes = []
+
+    # flat fp32 FedAvg: no edge tier, every payload transits the backhaul
+    ses, loss = train("fedavg", clients=clients)
+    stats = topo.flat_round_stats(fp32_payload)
+    modes.append({
+        "name": "flat_fp32", "strategy": "fedavg", "codec": "none",
+        "bytes_per_client": fp32_payload,
+        "uplink_bytes_per_round": stats["uplink_bytes"],
+        "backhaul_bytes_per_round": stats["backhaul_bytes"],
+        "total_up_bytes_per_round": (stats["uplink_bytes"]
+                                     + stats["backhaul_bytes"]),
+        "sim_round_s": stats["round_time_s"],
+        "final_loss": loss,
+    })
+
+    for name, codec, options in (
+            ("hier_int8", "int8", {}),
+            ("hier_topk", "topk", {"k_frac": TOPK_FRAC})):
+        ses, loss = train("hier_fl", topology=topo, codec=codec,
+                          codec_options=options)
+        st = ses.strategy.comm_stats
+        modes.append({
+            "name": name, "strategy": "hier_fl", "codec": codec,
+            "bytes_per_client": st["bytes_per_client"],
+            "uplink_bytes_per_round": st["uplink_bytes"],
+            "backhaul_bytes_per_round": st["backhaul_bytes"],
+            "total_up_bytes_per_round": (st["uplink_bytes"]
+                                         + st["backhaul_bytes"]),
+            "sim_round_s": st["round_time_s"],
+            "final_loss": loss,
+        })
+
+    flat, int8, topk = modes
+    payload = {
+        "bench": "comm_fabric",
+        "schema_version": 1,
+        "arch": cfg.name,
+        "quick": bool(quick),
+        "rounds": rounds,
+        "local_steps": locsteps,
+        "topology": {
+            "spec": TOPOLOGY,
+            "edges": topo.n_edges,
+            "vehicles": topo.n_clients,
+            "backhaul_bw": topo.backhaul_bw,
+        },
+        "param_fp32_bytes": fp32_payload,
+        "modes": modes,
+        "summary": {
+            "int8_up_reduction": (flat["total_up_bytes_per_round"]
+                                  / int8["total_up_bytes_per_round"]),
+            "topk_up_reduction": (flat["total_up_bytes_per_round"]
+                                  / topk["total_up_bytes_per_round"]),
+            "int8_compression": (flat["bytes_per_client"]
+                                 / int8["bytes_per_client"]),
+            "topk_compression": (flat["bytes_per_client"]
+                                 / topk["bytes_per_client"]),
+            "int8_loss_drift": abs(int8["final_loss"] / flat["final_loss"]
+                                   - 1.0),
+            "topk_loss_drift": abs(topk["final_loss"] / flat["final_loss"]
+                                   - 1.0),
+            "int8_round_speedup": (flat["sim_round_s"]
+                                   / int8["sim_round_s"]),
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    s = payload["summary"]
+    for m in modes:
+        emit(f"comm/{m['name']}/total_up_bytes",
+             m["total_up_bytes_per_round"],
+             f"loss={m['final_loss']:.4f} sim_round={m['sim_round_s']:.4g}s")
+    print(f"comm: int8 x{s['int8_up_reduction']:.1f} up-bytes "
+          f"(loss drift {s['int8_loss_drift']:.3f}), topk "
+          f"x{s['topk_up_reduction']:.1f} "
+          f"(drift {s['topk_loss_drift']:.3f}) -> {out}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

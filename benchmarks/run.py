@@ -6,6 +6,8 @@
                                            (writes BENCH_repartition.json)
   §Kernels (flash-attn fwd+bwd)         -> attention_bench
                                            (writes BENCH_attention.json)
+  §3.1 comm fabric (bytes / round time) -> comm_bench
+                                           (writes BENCH_comm.json)
   Fig. 6(a,b) pipeline execution time   -> pipeline_exec
   Fig. 7(a,b) + Table 2 FHDP            -> fhdp_throughput
   Fig. 8(a) FL accuracy                 -> fl_accuracy
@@ -33,7 +35,7 @@ def main() -> None:
                     help="comma list of benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (attention_bench, distill_quality,
+    from benchmarks import (attention_bench, comm_bench, distill_quality,
                             fhdp_throughput, fl_accuracy, pipeline_exec,
                             recovery_bench, repartition_latency, roofline,
                             swift_opt)
@@ -53,6 +55,7 @@ def main() -> None:
         ("recovery", lambda: recovery_bench.run(quick=args.quick)),
         ("repartition", lambda: repartition_latency.run(quick=args.quick)),
         ("attention", lambda: attention_bench.run(quick=args.quick)),
+        ("comm", lambda: comm_bench.run(quick=args.quick)),
         ("fhdp_throughput", lambda: fhdp_throughput.run(quick=args.quick)),
         ("fl_accuracy", lambda: fl_accuracy.run(quick=args.quick)),
         ("distill_quality", lambda: distill_quality.run(quick=args.quick)),

@@ -19,6 +19,10 @@ if [[ "${1:-}" != "--fast" ]]; then
   echo "=== smoke: train launcher (Session CLI) ==="
   python -m repro.launch.train --strategy pipeline --devices 8 --steps 2
 
+  echo "=== smoke: hierarchical FL over the comm fabric ==="
+  python -m repro.launch.train --strategy hier_fl --devices 2 --mesh 2 \
+      --topology "2@nano*2,agx*2" --codec int8 --steps 2
+
   echo "=== smoke: serve launcher (Session.serve) ==="
   python -m repro.launch.serve --devices 2 --batch 2 --context 16 \
       --decode-steps 4 --requests 1
@@ -37,9 +41,14 @@ if [[ "${1:-}" != "--fast" ]]; then
       --out /tmp/BENCH_attention.quick.json
   python scripts/validate_bench.py /tmp/BENCH_attention.quick.json
 
+  echo "=== bench: comm fabric (quick, scratch output) ==="
+  python benchmarks/comm_bench.py --quick --out /tmp/BENCH_comm.quick.json
+  python scripts/validate_bench.py /tmp/BENCH_comm.quick.json
+
   echo "=== validate committed perf-trajectory artifacts ==="
   python scripts/validate_bench.py BENCH_repartition.json
   python scripts/validate_bench.py BENCH_attention.json
+  python scripts/validate_bench.py BENCH_comm.json
 fi
 
 echo "CI OK"

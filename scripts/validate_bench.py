@@ -10,9 +10,15 @@ schemas. Dispatches on the payload's ``bench`` field:
     claim of the Pallas flash-attention backward: the kernel VJP's
     peak-temp proxy stays flat in S (normalized by I/O) while the
     reference VJP's grows quadratically.
+  * ``comm_fabric`` (BENCH_comm.json) — enforces the compression claim
+    of the :mod:`repro.comm` fabric: hierarchical aggregation with the
+    int8 codec moves >= 4x fewer upward bytes per round than flat fp32
+    FedAvg while the held-out loss stays within 5%, and the simulated
+    round time (link models) does not regress.
 
     python scripts/validate_bench.py BENCH_repartition.json
     python scripts/validate_bench.py BENCH_attention.json
+    python scripts/validate_bench.py BENCH_comm.json
 """
 import json
 import math
@@ -41,6 +47,20 @@ ATTENTION_SIDE = {
     "fwd_bwd_s": (int, float), "peak_temp_bytes": int,
     "temp_over_io": (int, float),
 }
+COMM_TOP = {
+    "bench": str, "schema_version": int, "arch": str, "quick": bool,
+    "rounds": int, "local_steps": int, "topology": dict,
+    "param_fp32_bytes": int, "modes": list, "summary": dict,
+}
+COMM_MODE = {
+    "name": str, "strategy": str, "codec": str, "bytes_per_client": int,
+    "uplink_bytes_per_round": int, "backhaul_bytes_per_round": int,
+    "total_up_bytes_per_round": int, "sim_round_s": (int, float),
+    "final_loss": (int, float),
+}
+MIN_INT8_UP_REDUCTION = 4.0     # the acceptance bar: int8 + edge tier
+MAX_INT8_LOSS_DRIFT = 0.05      # matched final loss, within 5%
+
 # the kernel VJP's normalized peak may wobble (padding, residual dtype)
 # but must not grow with S; the reference VJP's raw peak is the
 # [B, Hkv, G, Sq, Skv] float32 score matrix, i.e. exactly quadratic.
@@ -136,9 +156,50 @@ def validate_attention(data: dict, path: str) -> None:
           f"ref/kernel x{ratio:.1f} at seq={seqs[-1]})")
 
 
+def validate_comm(data: dict, path: str) -> None:
+    check_keys(data, COMM_TOP, "payload")
+    modes = {m.get("name"): m for m in data["modes"]}
+    for want in ("flat_fp32", "hier_int8", "hier_topk"):
+        if want not in modes:
+            fail(f"modes missing {want!r}")
+    for name, m in modes.items():
+        check_keys(m, COMM_MODE, f"modes[{name!r}]")
+        if not math.isfinite(m["final_loss"]):
+            fail(f"modes[{name!r}] final_loss not finite")
+        if m["sim_round_s"] <= 0:
+            fail(f"modes[{name!r}] sim_round_s not positive")
+        if m["total_up_bytes_per_round"] != (m["uplink_bytes_per_round"]
+                                             + m["backhaul_bytes_per_round"]):
+            fail(f"modes[{name!r}] byte totals inconsistent")
+    flat, int8, topk = (modes[n] for n in ("flat_fp32", "hier_int8",
+                                           "hier_topk"))
+    reduction = (flat["total_up_bytes_per_round"]
+                 / int8["total_up_bytes_per_round"])
+    if reduction < MIN_INT8_UP_REDUCTION:
+        fail(f"int8 + edge aggregation moves only x{reduction:.2f} fewer "
+             f"upward bytes than flat fp32 (need >= "
+             f"x{MIN_INT8_UP_REDUCTION}) — the fabric is not compressing")
+    drift = abs(int8["final_loss"] / flat["final_loss"] - 1.0)
+    if drift > MAX_INT8_LOSS_DRIFT:
+        fail(f"int8 held-out loss drifted {drift:.1%} from flat fp32 "
+             f"(bound {MAX_INT8_LOSS_DRIFT:.0%}) — compression is not "
+             f"quality-matched")
+    if int8["sim_round_s"] > flat["sim_round_s"]:
+        fail("int8 hierarchical round is slower than flat fp32 on the "
+             "same links — the link models contradict the fabric's point")
+    if topk["total_up_bytes_per_round"] >= int8["total_up_bytes_per_round"]:
+        fail("top-k payload is not smaller than int8 — sparsification "
+             "accounting is wrong")
+
+    print(f"validate_bench: OK — {path} (int8 x{reduction:.1f} upward "
+          f"bytes vs flat fp32, loss drift {drift:.1%}, round "
+          f"{flat['sim_round_s'] / int8['sim_round_s']:.1f}x faster)")
+
+
 VALIDATORS = {
     "repartition_latency": validate_repartition,
     "attention_fwd_bwd": validate_attention,
+    "comm_fabric": validate_comm,
 }
 
 

@@ -21,6 +21,12 @@ Registered strategies:
                       scheduler over a declared heterogeneous fleet, with
                       pre-generated departure templates for live dynamic
                       repartitioning (paper §4.1.3 + §4.2)
+  ``hier_fl``         FedAvg rounds over the explicit vehicle->edge->cloud
+                      fabric (:mod:`repro.comm`): compressed uplinks
+                      (int8 / top-k codecs with error feedback), edge
+                      partial averages, staleness-aware cloud merge, and
+                      per-round bytes-on-wire + simulated round time from
+                      the topology's link models
 
 New execution modes (async rounds, new backends) plug in via
 :func:`register_strategy` instead of another bespoke launcher.
@@ -33,6 +39,7 @@ from typing import Any, Callable, Dict, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig, ShapeConfig
 from repro.configs.common import concrete_batch
@@ -401,6 +408,127 @@ class FedAvgStrategy(Strategy):
     def default_batch(self, cfg, shape, mesh, key):
         return _stacked_batch(cfg, shape, key,
                               (self.n_clients(mesh), self.local_steps))
+
+
+@register_strategy("hier_fl")
+class HierFLStrategy(FedAvgStrategy):
+    """FedAvg rounds over the explicit comm fabric (paper §3.1, Fig. 1).
+
+    Clients transmit round deltas through a lossy ``codec`` (with
+    error-feedback residuals), edge pods partially average the decoded
+    updates, and the cloud merges edge partials — down-weighting edges
+    the link models predict to miss the round deadline when
+    ``async_decay`` is set. Bytes-on-wire and the simulated round time
+    ride along in every round's metrics (and reach
+    ``LoopHooks.on_round``).
+
+    ``topology``: a :class:`repro.comm.Topology` or an ``"E@FLEET"``
+    spec like ``"2@nano*2,agx*2"`` (2 edge pods over that fleet);
+    the client count comes from the topology's vehicle head count.
+    ``codec``: ``none`` | ``int8`` | ``topk`` (see
+    :mod:`repro.comm.codecs`), options via ``codec_options``.
+    """
+
+    loop = "round"
+
+    def __init__(self, *, learning_rate: float = 1e-3, local_steps: int = 1,
+                 remat: bool = False, topology="2@nano*2,agx*2",
+                 codec: str = "none",
+                 codec_options: Optional[Dict] = None,
+                 client_weights: Optional[Any] = None,
+                 async_decay: Optional[float] = None,
+                 async_deadline: Optional[float] = None,
+                 seed: int = 0):
+        from repro.comm.codecs import Codec, get_codec
+        from repro.comm.topology import parse_topology
+        self.topology = parse_topology(topology)
+        super().__init__(learning_rate=learning_rate,
+                         local_steps=local_steps,
+                         clients=self.topology.n_clients, remat=remat,
+                         client_weights=client_weights)
+        self.codec = codec if isinstance(codec, Codec) \
+            else get_codec(codec, **(codec_options or {}))
+        if async_deadline is not None and async_decay is None:
+            raise ValueError(
+                "async_deadline only affects the staleness-aware async "
+                "merge; set async_decay to enable it")
+        self.async_decay = async_decay
+        self.async_deadline = async_deadline
+        #: fallback PRNG seed for the codec's stochastic rounding when
+        #: make_step runs without init(); under Session the stream is
+        #: derived from the session's init key (Session(seed=...))
+        self.seed = seed
+        self.comm_stats: Optional[Dict] = None
+        self._residual = None
+        self._key = None
+
+    def _round_stats(self, cfg) -> Dict:
+        """Static per-round wire accounting from the link models."""
+        from repro.comm.codecs import tree_edge_nbytes, tree_nbytes
+        from repro.comm.hierarchy import staleness_weights
+        ptree = _abstract_init(cfg)
+        per_client = tree_nbytes(self.codec, ptree)
+        per_edge = [tree_edge_nbytes(self.codec, ptree, len(members))
+                    for members in self.topology.edges]
+        stats = self.topology.hier_round_stats(per_client, per_edge)
+        stats["bytes_per_client"] = per_client
+        if self.async_decay is not None:
+            # async mode: the cloud closes the round at the deadline
+            # (default: the median edge arrival) and discounts the rest
+            deadline = self.async_deadline \
+                if self.async_deadline is not None \
+                else float(np.median(stats["edge_arrival_s"]))
+            stats["staleness"] = staleness_weights(
+                stats["edge_arrival_s"], deadline,
+                decay=self.async_decay)
+            stats["round_time_s"] = deadline
+        else:
+            stats["staleness"] = None
+        return stats
+
+    def init(self, cfg, shape, mesh, key):
+        state = super().init(cfg, shape, mesh, key)
+        self._residual = None           # fresh error-feedback state
+        # derive the codec's rounding stream from the init key so runs
+        # are seedable through Session(seed=...) and re-inits restart it
+        self._key = jax.random.fold_in(key, 1)
+        return state
+
+    def make_step(self, cfg, shape, mesh):
+        from repro.comm.codecs import zero_residual
+        from repro.comm.hierarchy import make_hier_round
+
+        stats = self._round_stats(cfg)
+        self.comm_stats = stats
+        hier_round = jax.jit(make_hier_round(
+            cfg, shape, self._optimizer(), self.topology, self.codec,
+            local_steps=self.local_steps, remat=self.remat,
+            client_weights=self.client_weights,
+            staleness=stats["staleness"]))
+        wire_metrics = {
+            "comm_bytes_up": float(stats["uplink_bytes"]),
+            "comm_bytes_backhaul": float(stats["backhaul_bytes"]),
+            "sim_round_s": float(stats["round_time_s"]),
+        }
+
+        def round_fn(client_params, client_opt, batches):
+            if self._key is None:
+                self._key = jax.random.PRNGKey(self.seed)
+            if self._residual is None:
+                self._residual = zero_residual(client_params)
+            self._key, sub = jax.random.split(self._key)
+            client_params, client_opt, metrics, self._residual = \
+                hier_round(client_params, client_opt, batches,
+                           self._residual, sub)
+            return client_params, client_opt, dict(metrics, **wire_metrics)
+
+        return round_fn
+
+    def merge_params(self, state, cfg=None):
+        from repro.core.fedavg import fedavg
+        w = None if self.client_weights is None else \
+            jnp.asarray(self.client_weights, jnp.float32)
+        return fedavg(state[0], weights=w, topology=self.topology)
 
 
 @register_strategy("fl_pipeline")

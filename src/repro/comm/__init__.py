@@ -1,0 +1,27 @@
+"""Explicit vehicle -> edge -> cloud aggregation fabric (paper §3.1).
+
+The reproduction's FL strategies originally relied on whatever reduction
+tree XLA picked for a client-axis mean; this package makes the paper's
+first innovation — the cloud-edge-vehicle collaborative architecture —
+an explicit runtime object:
+
+  * :mod:`repro.comm.topology` — declarative :class:`Topology` mapping
+    vehicles to edge pods to the cloud, built from the same fleet specs
+    as :mod:`repro.sched.costmodel` and reusing ``Vehicle.com`` uplink
+    bandwidths as link models;
+  * :mod:`repro.comm.codecs` — update codecs (int8 stochastic
+    quantization, top-k sparsification) with error-feedback residuals,
+    the int8 hot path a Pallas kernel pair (:mod:`repro.kernels.quantize`);
+  * :mod:`repro.comm.hierarchy` — two-tier weighted aggregation (edge
+    partial averages, cloud merge) plus staleness-aware down-weighting of
+    late edge updates for async rounds.
+
+The ``hier_fl`` strategy (:mod:`repro.api.strategies`) wires all three
+into :class:`repro.api.Session`.
+"""
+from repro.comm.topology import Topology, parse_topology  # noqa: F401
+from repro.comm.codecs import (Codec, IdentityCodec, Int8Codec,  # noqa: F401
+                               TopKCodec, available_codecs, get_codec)
+from repro.comm.hierarchy import (cloud_merge, edge_aggregate,  # noqa: F401
+                                  hierarchical_mean, make_hier_round,
+                                  staleness_weights)

@@ -1,0 +1,227 @@
+"""Update codecs for the uplink: what a vehicle actually transmits.
+
+Every codec maps a flat float leaf to a wire payload and back, and
+reports the payload's wire size — the quantity the topology's link
+models turn into round time. Lossy codecs are used with **error
+feedback**: the un-transmitted remainder of round t is added back to the
+update of round t+1 (:func:`roundtrip_stacked` carries the residual
+tree), so the compression error telescopes instead of accumulating —
+the standard convergence fix for sparsified/quantized FL.
+
+  ``none``  float32 passthrough (4 B/elem) — the fp32 FedAvg baseline
+  ``int8``  rowwise-absmax stochastic int8 (1 B/elem + 4 B per 128-lane
+            row); the quantize/dequantize hot path is the Pallas kernel
+            pair in :mod:`repro.kernels.quantize`
+  ``topk``  magnitude top-k sparsification (8 B per kept element:
+            float32 value + int32 index)
+
+Encode/decode is a plain function pair — no ``custom_vjp`` — because it
+runs on already-computed deltas, outside the differentiated path.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Dict, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.quantize import LANES
+
+_REGISTRY: Dict[str, Type["Codec"]] = {}
+
+
+def register_codec(name: str) -> Callable[[type], type]:
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_codecs() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_codec(name: str, **options) -> "Codec":
+    """Instantiate a registered codec; unknown names list valid ones."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; available: "
+            f"{', '.join(available_codecs())}") from None
+    return cls(**options)
+
+
+class Codec(abc.ABC):
+    """Flat-leaf wire codec. All methods are jit-traceable."""
+
+    name: str = ""
+    #: lossless codecs skip the error-feedback residual entirely
+    lossless: bool = False
+
+    @abc.abstractmethod
+    def encode(self, flat: jnp.ndarray, key) -> Dict[str, jnp.ndarray]:
+        """flat float [N] -> wire payload (dict of arrays)."""
+
+    @abc.abstractmethod
+    def decode(self, payload: Dict[str, jnp.ndarray], size: int
+               ) -> jnp.ndarray:
+        """Wire payload -> float32 [size] (what the edge reconstructs)."""
+
+    @abc.abstractmethod
+    def nbytes(self, size: int) -> int:
+        """Wire bytes for one [size] leaf (static)."""
+
+    def edge_nbytes(self, size: int, members: int) -> int:
+        """Wire bytes for an edge pod's *aggregated* update of one
+        [size] leaf (``members`` vehicles in the pod). Dense formats
+        aggregate to the same wire format as a client payload; sparse
+        formats must pay for the support union (override)."""
+        return self.nbytes(size)
+
+
+@register_codec("none")
+class IdentityCodec(Codec):
+    """float32 passthrough — the uncompressed FedAvg wire format."""
+
+    lossless = True
+
+    def encode(self, flat, key):
+        return {"values": flat.astype(jnp.float32)}
+
+    def decode(self, payload, size):
+        return payload["values"]
+
+    def nbytes(self, size):
+        return 4 * size
+
+
+@register_codec("int8")
+class Int8Codec(Codec):
+    """Rowwise-absmax int8 with unbiased stochastic rounding.
+
+    The flat leaf is packed into rows of 128 lanes (zero-padded tail)
+    and handed to the Pallas kernel pair; one float32 scale per row
+    rides along. ~3.9x smaller than fp32 on the wire.
+    """
+
+    def __init__(self, *, block_rows: int = 256):
+        self.block_rows = block_rows
+
+    def _rows(self, size: int) -> int:
+        return -(-size // LANES)
+
+    def encode(self, flat, key):
+        rows = self._rows(flat.size)
+        x = jnp.zeros((rows * LANES,), jnp.float32)
+        x = x.at[:flat.size].set(flat.astype(jnp.float32))
+        x = x.reshape(rows, LANES)
+        bits = jax.random.bits(key, (rows, LANES), jnp.uint32)
+        q, scale = ops.quantize_int8(x, bits, block_rows=self.block_rows)
+        return {"q": q, "scale": scale}
+
+    def decode(self, payload, size):
+        x = ops.dequantize_int8(payload["q"], payload["scale"],
+                                block_rows=self.block_rows)
+        return x.reshape(-1)[:size]
+
+    def nbytes(self, size):
+        return size + 4 * self._rows(size)
+
+
+@register_codec("topk")
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification: transmit the k largest-|.| entries
+    as (float32 value, int32 index) pairs; the edge scatters them into a
+    zero vector. ``k_frac`` is the kept fraction (>= 1 element)."""
+
+    def __init__(self, *, k_frac: float = 0.05):
+        if not 0.0 < k_frac <= 1.0:
+            raise ValueError(f"k_frac must be in (0, 1], got {k_frac}")
+        self.k_frac = k_frac
+
+    def k(self, size: int) -> int:
+        return max(1, min(size, int(round(self.k_frac * size))))
+
+    def encode(self, flat, key):
+        k = self.k(flat.size)
+        f = flat.astype(jnp.float32)
+        _, idx = jax.lax.top_k(jnp.abs(f), k)
+        return {"values": f[idx], "indices": idx.astype(jnp.int32)}
+
+    def decode(self, payload, size):
+        out = jnp.zeros((size,), jnp.float32)
+        return out.at[payload["indices"]].set(payload["values"])
+
+    def nbytes(self, size):
+        return 8 * self.k(size)
+
+    def edge_nbytes(self, size, members):
+        # the pod average's support is the union of its members' top-k
+        # sets — up to members*k nonzeros; past that, dense fp32 wins
+        union = min(members * self.k(size), size)
+        return min(8 * union, 4 * size)
+
+
+# ---- tree-level error-feedback transport ---------------------------------
+
+def tree_nbytes(codec: Codec, tree) -> int:
+    """Static wire bytes for one client's update of this tree."""
+    return sum(codec.nbytes(int(leaf.size))
+               for leaf in jax.tree.leaves(tree))
+
+
+def tree_edge_nbytes(codec: Codec, tree, members: int) -> int:
+    """Static wire bytes for an edge pod's aggregated update of this
+    tree (``members`` vehicles in the pod)."""
+    return sum(codec.edge_nbytes(int(leaf.size), members)
+               for leaf in jax.tree.leaves(tree))
+
+
+def roundtrip_leaf(codec: Codec, leaf, residual, key):
+    """Encode+decode one leaf with error feedback.
+
+    Returns ``(decoded, new_residual)`` where ``decoded`` is what the
+    edge reconstructs from the wire and ``new_residual`` the untransmitted
+    remainder to re-inject next round (zeros for lossless codecs).
+    """
+    x = leaf.astype(jnp.float32) + residual
+    flat = x.reshape(-1)
+    decoded = codec.decode(codec.encode(flat, key), flat.size)
+    decoded = decoded.reshape(leaf.shape)
+    if codec.lossless:
+        return decoded, jnp.zeros_like(residual)
+    return decoded, x - decoded
+
+
+def roundtrip_stacked(codec: Codec, stacked, residual, key):
+    """Per-client wire roundtrip of a client-stacked [C, ...] tree.
+
+    ``residual`` carries each client's error-feedback state (same
+    structure, float32). Every client's leaf has the same shape, so the
+    client axis is ``vmap``-ed — one traced encode/decode body per leaf
+    regardless of fleet size (top-k and the quantize kernel pair both
+    batch), with per-client PRNG keys.
+    """
+    leaves, treedef = jax.tree.flatten(stacked)
+    res_leaves = jax.tree.leaves(residual)
+    C = leaves[0].shape[0]
+    leaf_keys = jax.random.split(key, len(leaves))
+    dec_cols, res_cols = [], []
+    for lk, leaf, res in zip(leaf_keys, leaves, res_leaves):
+        d, r = jax.vmap(
+            lambda x, rr, kk: roundtrip_leaf(codec, x, rr, kk)
+        )(leaf, res, jax.random.split(lk, C))
+        dec_cols.append(d)
+        res_cols.append(r)
+    return (jax.tree.unflatten(treedef, dec_cols),
+            jax.tree.unflatten(treedef, res_cols))
+
+
+def zero_residual(stacked):
+    """Fresh float32 error-feedback state for a client-stacked tree."""
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), stacked)

@@ -1,0 +1,167 @@
+"""Two-tier aggregation over an explicit topology (paper §3.1, Fig. 1).
+
+``edge_aggregate`` computes each edge pod's data-volume-weighted partial
+average of its members' updates; ``cloud_merge`` combines the edge
+partials, optionally down-weighting **stale** edges — the async mode
+where the cloud closes a round at a deadline and late edge updates
+(predicted from the link models) count for ``decay ** lag``.
+
+With every staleness weight at 1 the two-tier weighted mean is
+algebraically the flat weighted mean — ``core.fedavg.fedavg`` delegates
+here when given a topology, so flat and hierarchical FedAvg are the same
+math on different fabrics.
+
+``make_hier_round`` is the full round the ``hier_fl`` strategy jits:
+vmapped local steps, per-client codec roundtrip with error feedback,
+edge partial averages, staleness-aware cloud merge, broadcast.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.codecs import Codec, roundtrip_stacked
+from repro.comm.topology import Topology
+
+
+def edge_aggregate(stacked, weights: Optional[jnp.ndarray],
+                   topology: Topology):
+    """Client-stacked [C, ...] tree -> (edge-stacked [E, ...] tree,
+    [E] edge weights).
+
+    Each edge's partial average is weighted by its members' ``weights``
+    (uniform when None); the returned edge weight is the members' total,
+    so a downstream weighted merge reproduces the global weighted mean.
+    """
+    from repro.core.fedavg import check_weights
+    C = jax.tree.leaves(stacked)[0].shape[0]
+    if C != topology.n_clients:
+        raise ValueError(
+            f"client axis has {C} entries but the topology declares "
+            f"{topology.n_clients} vehicles")
+    w = jnp.ones((C,), jnp.float32) if weights is None \
+        else jnp.asarray(weights, jnp.float32)
+
+    member_idx = [np.asarray(members, np.int32)
+                  for members in topology.edges]
+    for e, idx in enumerate(member_idx):
+        # a pod whose members sum to zero weight would 0/0 its partial
+        # average — the global-sum check upstream cannot see this
+        try:
+            check_weights(w[idx])
+        except ValueError as err:
+            raise ValueError(
+                f"edge pod {e} (vehicles {topology.edges[e]}): {err}"
+            ) from None
+
+    def per_edge(x):
+        parts = []
+        for idx in member_idx:
+            wm = w[idx]
+            xm = x[idx].astype(jnp.float32)
+            wb = wm.reshape((-1,) + (1,) * (x.ndim - 1))
+            parts.append((xm * wb).sum(axis=0) / wm.sum())
+        return jnp.stack(parts).astype(x.dtype)
+
+    edge_w = jnp.stack([w[idx].sum() for idx in member_idx])
+    return jax.tree.map(per_edge, stacked), edge_w
+
+
+def cloud_merge(edge_stacked, edge_weights: jnp.ndarray,
+                staleness: Optional[jnp.ndarray] = None):
+    """Edge-stacked [E, ...] tree -> global [...] tree.
+
+    ``staleness``: optional [E] multipliers (1 = fresh); the effective
+    weight of a late edge is ``edge_weight * staleness`` before
+    normalization, the classic staleness-discounted async merge.
+    """
+    w = jnp.asarray(edge_weights, jnp.float32)
+    if staleness is not None:
+        w = w * jnp.asarray(staleness, jnp.float32)
+
+    def merge(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return ((x.astype(jnp.float32) * wb).sum(axis=0)
+                / w.sum()).astype(x.dtype)
+
+    return jax.tree.map(merge, edge_stacked)
+
+
+def hierarchical_mean(stacked, weights, topology: Topology,
+                      staleness: Optional[jnp.ndarray] = None):
+    """Explicit two-tier (edge, then cloud) weighted mean of a
+    client-stacked tree — the fabric-aware form of ``fedavg``."""
+    edge_tree, edge_w = edge_aggregate(stacked, weights, topology)
+    return cloud_merge(edge_tree, edge_w, staleness)
+
+
+def staleness_weights(arrivals, deadline: float, *,
+                      decay: float = 0.5) -> np.ndarray:
+    """[E] multipliers from predicted edge arrival times.
+
+    An edge landing within the round ``deadline`` is fresh (1.0); one
+    landing during the following round is one round stale (``decay``),
+    and so on: ``decay ** ceil(arrival/deadline - 1)``.
+    """
+    if deadline <= 0:
+        raise ValueError(f"deadline must be positive, got {deadline}")
+    if not 0.0 < decay <= 1.0:
+        raise ValueError(f"decay must be in (0, 1], got {decay}")
+    lag = np.maximum(0.0, np.ceil(np.asarray(arrivals, np.float64)
+                                  / deadline) - 1.0)
+    return (decay ** lag).astype(np.float32)
+
+
+def make_hier_round(cfg, shape, optimizer, topology: Topology,
+                    codec: Codec, *, local_steps: int = 1,
+                    remat: bool = False, client_weights=None,
+                    staleness: Optional[np.ndarray] = None):
+    """One hierarchical FL round over client-stacked params.
+
+    hier_round(client_params, client_opt, batches, residual, key) ->
+    (client_params', client_opt', metrics, residual') where ``batches``
+    carry [C, E, B, ...] leaves like ``core.fedavg.make_fl_round``,
+    ``residual`` is the codec's per-client error-feedback state and
+    ``key`` drives the round's stochastic rounding.
+
+    Unlike flat ``make_fl_round``, the aggregation path is the explicit
+    fabric: clients transmit **deltas** (w.r.t. the round's broadcast
+    params) through the codec, edges partially average the decoded
+    deltas, and the cloud merges edge partials — down-weighting stale
+    edges when ``staleness`` is given — before re-broadcasting.
+    """
+    from repro.core.fedavg import (broadcast_round, check_weights,
+                                   make_local_train)
+    from repro.core.steps import make_train_step
+
+    step = make_train_step(cfg, shape, optimizer, remat=remat)
+    w = None if client_weights is None else check_weights(client_weights)
+    stale = None if staleness is None else \
+        jnp.asarray(staleness, jnp.float32)
+    local_train = make_local_train(step)
+
+    def hier_round(client_params, client_opt, batches, residual, key):
+        C = jax.tree.leaves(client_params)[0].shape[0]
+        if w is not None and w.shape != (C,):
+            raise ValueError(
+                f"client_weights has shape {w.shape}, expected ({C},)")
+        # round-start broadcast state: all clients hold the same params
+        global_params = jax.tree.map(lambda x: x[0], client_params)
+        params, opts, metrics = jax.vmap(local_train)(client_params,
+                                                      client_opt, batches)
+        deltas = jax.tree.map(
+            lambda after, g: after.astype(jnp.float32) - g[None], params,
+            global_params)
+        decoded, residual = roundtrip_stacked(codec, deltas, residual, key)
+        edge_tree, edge_w = edge_aggregate(decoded, w, topology)
+        merged = cloud_merge(edge_tree, edge_w, stale)
+        new_global = jax.tree.map(
+            lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype),
+            global_params, merged)
+        new_clients = broadcast_round(new_global, C)
+        return new_clients, opts, metrics, residual
+
+    return hier_round

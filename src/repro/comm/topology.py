@@ -1,0 +1,170 @@
+"""Declarative vehicle -> edge -> cloud topology with link models.
+
+A :class:`Topology` names which vehicles sit under which edge pod and
+what the links can carry. It is built from the **same fleet specs** the
+SWIFT scheduler consumes (:func:`repro.sched.costmodel.parse_fleet`):
+each :class:`~repro.sched.costmodel.Vehicle`'s ``com`` bandwidth is the
+vehicle -> edge uplink model, and a shared ``backhaul_bw`` models the
+edge -> cloud links (paper §3.1: vehicles reach edge servers over V2X
+radio; edges reach the cloud over the metro backhaul).
+
+Round-time accounting distinguishes the two aggregation shapes:
+
+  * :meth:`Topology.hier_round_stats` — edges reduce their members'
+    updates, so the backhaul carries ONE payload per edge;
+  * :meth:`Topology.flat_round_stats` — no edge aggregation (flat
+    FedAvg): every vehicle's payload transits both its uplink and the
+    backhaul.
+
+Both return bytes-on-wire and a simulated round time from the link
+models; the ``hier_fl`` strategy surfaces them per round through
+``LoopHooks.on_round``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.sched.costmodel import Vehicle, parse_fleet, t_uplink
+
+#: default edge -> cloud backhaul (bytes/s) — metro fiber, not V2X radio
+DEFAULT_BACKHAUL_BW = 1.25e9
+#: one-way edge -> cloud latency floor (s)
+DEFAULT_BACKHAUL_LATENCY = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Vehicles grouped under edge pods, with link bandwidths."""
+
+    vehicles: Tuple[Vehicle, ...]
+    #: per-edge tuple of indices into ``vehicles``
+    edges: Tuple[Tuple[int, ...], ...]
+    backhaul_bw: float = DEFAULT_BACKHAUL_BW
+    backhaul_latency: float = DEFAULT_BACKHAUL_LATENCY
+
+    def __post_init__(self):
+        seen = [i for members in self.edges for i in members]
+        if sorted(seen) != list(range(len(self.vehicles))):
+            raise ValueError(
+                f"edges must partition the {len(self.vehicles)} vehicles "
+                f"exactly; got memberships {self.edges}")
+        if any(not members for members in self.edges):
+            raise ValueError("every edge pod needs at least one vehicle")
+        if self.backhaul_bw <= 0:
+            raise ValueError("backhaul_bw must be positive")
+
+    # ---- shape -----------------------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        return len(self.vehicles)
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    @property
+    def client_edge(self) -> np.ndarray:
+        """[C] edge index of each client (client i == vehicles[i])."""
+        out = np.empty(self.n_clients, np.int32)
+        for e, members in enumerate(self.edges):
+            out[list(members)] = e
+        return out
+
+    # ---- constructors ----------------------------------------------------
+    @classmethod
+    def from_fleet(cls, fleet, n_edges: int, *,
+                   backhaul_bw: float = DEFAULT_BACKHAUL_BW,
+                   backhaul_latency: float = DEFAULT_BACKHAUL_LATENCY
+                   ) -> "Topology":
+        """Group a fleet (any :func:`parse_fleet` form) into ``n_edges``
+        contiguous pods, as even as the head count allows."""
+        vehicles = tuple(parse_fleet(fleet))
+        c = len(vehicles)
+        if not 1 <= n_edges <= c:
+            raise ValueError(
+                f"need 1 <= n_edges <= {c} vehicles, got {n_edges}")
+        base, extra = divmod(c, n_edges)
+        edges, start = [], 0
+        for e in range(n_edges):
+            size = base + (1 if e < extra else 0)
+            edges.append(tuple(range(start, start + size)))
+            start += size
+        return cls(vehicles, tuple(edges), backhaul_bw=backhaul_bw,
+                   backhaul_latency=backhaul_latency)
+
+    # ---- link timing -----------------------------------------------------
+    def uplink_times(self, bytes_per_client: float) -> np.ndarray:
+        """[C] seconds for each vehicle to push one payload to its edge."""
+        return np.array([t_uplink(bytes_per_client, v)
+                         for v in self.vehicles])
+
+    def hier_round_stats(self, bytes_per_client: float,
+                         bytes_per_edge=None) -> Dict:
+        """Bytes-on-wire and simulated time for one hierarchical round.
+
+        Each vehicle uploads its (compressed) update to its edge; each
+        edge reduces and forwards ONE payload to the cloud.
+        ``bytes_per_edge``: scalar or per-edge sequence (default: same
+        wire format as a client payload — correct for dense codecs;
+        sparse codecs pay for the support union, see
+        ``Codec.edge_nbytes``). An edge's update arrives when its
+        slowest member has uploaded plus the backhaul transfer; the
+        round closes on the last edge.
+        """
+        if bytes_per_edge is None:
+            bytes_per_edge = bytes_per_client
+        per_edge = np.broadcast_to(
+            np.asarray(bytes_per_edge, np.float64), (self.n_edges,))
+        up = self.uplink_times(bytes_per_client)
+        arrivals = np.array([
+            up[list(members)].max()
+            + per_edge[e] / self.backhaul_bw + self.backhaul_latency
+            for e, members in enumerate(self.edges)])
+        return {
+            "uplink_bytes": int(bytes_per_client) * self.n_clients,
+            "backhaul_bytes": int(per_edge.sum()),
+            "edge_arrival_s": arrivals,
+            "round_time_s": float(arrivals.max()),
+        }
+
+    def flat_round_stats(self, bytes_per_client: float) -> Dict:
+        """The no-edge-aggregation baseline on the same physical links:
+        all C payloads transit the backhaul unreduced, serialized behind
+        one another on the shared link."""
+        up = self.uplink_times(bytes_per_client)
+        backhaul = (self.n_clients * bytes_per_client / self.backhaul_bw
+                    + self.backhaul_latency)
+        round_time = float(up.max() + backhaul)
+        return {
+            "uplink_bytes": int(bytes_per_client) * self.n_clients,
+            "backhaul_bytes": int(bytes_per_client) * self.n_clients,
+            "edge_arrival_s": np.full(self.n_edges, round_time),
+            "round_time_s": round_time,
+        }
+
+
+def parse_topology(spec, *, backhaul_bw: float = DEFAULT_BACKHAUL_BW,
+                   backhaul_latency: float = DEFAULT_BACKHAUL_LATENCY
+                   ) -> Topology:
+    """Coerce a topology declaration.
+
+    Accepts a :class:`Topology` (passed through), an ``"E@FLEET"`` string
+    — e.g. ``"2@nano*2,agx*2"`` is 2 edge pods over that 4-vehicle fleet
+    — or a plain fleet spec (one edge pod over the whole fleet).
+    """
+    if isinstance(spec, Topology):
+        return spec
+    n_edges = 1
+    if isinstance(spec, str) and "@" in spec:
+        head, _, spec = spec.partition("@")
+        try:
+            n_edges = int(head)
+        except ValueError:
+            raise ValueError(
+                f"topology spec must look like 'E@FLEET' with integer E, "
+                f"got {head!r}") from None
+    return Topology.from_fleet(spec, n_edges, backhaul_bw=backhaul_bw,
+                               backhaul_latency=backhaul_latency)

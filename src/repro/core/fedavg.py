@@ -15,10 +15,18 @@ Two operating modes:
 2. **Gradient mean** (FedSGD / the tensor baseline): a plain psum-mean of
    grads over (pod, data) — what ``pjit`` does implicitly when the loss is a
    global-batch mean.
+
+The vehicle -> edge -> cloud fabric itself lives in :mod:`repro.comm`:
+pass ``topology=`` to :func:`fedavg` for the explicit two-tier (edge
+partial-average, cloud merge) aggregation over declared link models, or
+use the ``hier_fl`` strategy for the full compressed, staleness-aware
+round. Without a topology this module's mean is a *flat* client-axis
+reduction — whatever tree XLA picks, with no link costs attached.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -47,15 +55,41 @@ def client_specs(mesh: Mesh, params_shape, *, fsdp: bool = True):
                         is_leaf=lambda x: isinstance(x, P))
 
 
-def fedavg(client_params, *, weights: Optional[jnp.ndarray] = None):
+def check_weights(weights) -> jnp.ndarray:
+    """Validate aggregation weights: a degenerate vector (all-zero,
+    negative, or non-finite sum) would silently NaN the global params
+    through the normalizing division. Raises when the sum is concrete;
+    traced weights must be validated by the caller at build time."""
+    w = jnp.asarray(weights, jnp.float32)
+    try:
+        total = float(w.sum())
+    except jax.errors.ConcretizationTypeError:
+        return w
+    if not math.isfinite(total) or total <= 0.0:
+        raise ValueError(
+            f"degenerate aggregation weights (sum={total}): the "
+            f"normalizing division would NaN the global params; weights "
+            f"must be finite with a positive sum")
+    return w
+
+
+def fedavg(client_params, *, weights: Optional[jnp.ndarray] = None,
+           topology=None):
     """Average client-stacked params [C, ...] -> global params [...].
 
     ``weights``: optional [C] client weights (paper: data-volume weighted).
-    The mean over the client axis IS the edge+cloud aggregation: the client
-    axis is laid out (pod, data)-major, so XLA lowers this to a
-    reduce-scatter/all-reduce within pods followed by the cross-pod step —
-    exactly the two-level tree of Fig. 1.
+    ``topology``: optional :class:`repro.comm.Topology` — aggregate over
+    the explicit vehicle -> edge -> cloud fabric (edge partial averages,
+    then the cloud merge) instead of a flat client-axis mean. Without
+    it, the mean is flat: XLA picks some reduction tree, but nothing
+    models the paper's edge tier, link costs, or compression — that is
+    what :mod:`repro.comm` and the ``hier_fl`` strategy provide.
     """
+    if weights is not None:
+        weights = check_weights(weights)
+    if topology is not None:
+        from repro.comm.hierarchy import hierarchical_mean
+        return hierarchical_mean(client_params, weights, topology)
     if weights is None:
         return jax.tree.map(lambda x: x.mean(axis=0), client_params)
     w = weights / weights.sum()
@@ -70,6 +104,26 @@ def fedavg(client_params, *, weights: Optional[jnp.ndarray] = None):
 def broadcast_round(global_params, n_clients: int):
     """Cloud -> edge -> vehicle model distribution for the next round."""
     return stack_clients(global_params, n_clients)
+
+
+def make_local_train(step):
+    """One client's E local steps via ``lax.scan``: (params, opt_state,
+    steps_batches) -> (params', opt_state', last-step metrics). The
+    round builders (:func:`make_fl_round` here, ``make_hier_round`` in
+    :mod:`repro.comm.hierarchy`) vmap this over the client axis — one
+    definition of the local-training contract for both fabrics."""
+
+    def local_train(params, opt_state, steps_batches):
+        def body(carry, batch):
+            p, o = carry
+            p, o, m = step(p, o, batch)
+            return (p, o), m
+
+        (params, opt_state), ms = jax.lax.scan(body, (params, opt_state),
+                                               steps_batches)
+        return params, opt_state, jax.tree.map(lambda x: x[-1], ms)
+
+    return local_train
 
 
 def make_fl_round(cfg, shape, optimizer, *, local_steps: int = 1,
@@ -90,18 +144,8 @@ def make_fl_round(cfg, shape, optimizer, *, local_steps: int = 1,
     """
     from repro.core.steps import make_train_step
     step = make_train_step(cfg, shape, optimizer, remat=remat)
-    w = None if client_weights is None else \
-        jnp.asarray(client_weights, jnp.float32)
-
-    def local_train(params, opt_state, steps_batches):
-        def body(carry, batch):
-            p, o = carry
-            p, o, m = step(p, o, batch)
-            return (p, o), m
-
-        (params, opt_state), ms = jax.lax.scan(body, (params, opt_state),
-                                               steps_batches)
-        return params, opt_state, jax.tree.map(lambda x: x[-1], ms)
+    w = None if client_weights is None else check_weights(client_weights)
+    local_train = make_local_train(step)
 
     def fl_round(client_params, client_opt, batches):
         C = jax.tree.leaves(client_params)[0].shape[0]

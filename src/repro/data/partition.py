@@ -32,6 +32,9 @@ def vehicle_dataset(world: TownWorld, mixture: np.ndarray, n: int,
         cnt = int((towns == t).sum())
         if cnt:
             parts.append((t, world.sample(t, cnt, rng)))
+    if not parts:
+        # n == 0: an empty dataset with the right keys/trailing shapes
+        parts.append((0, world.sample(0, 0, rng)))
     out: Dict[str, np.ndarray] = {}
     keys = parts[0][1].keys()
     for k in keys:

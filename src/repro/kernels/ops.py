@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lora_matmul as _lm
 from repro.kernels import mlstm as _ml
+from repro.kernels import quantize as _qz
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -94,6 +95,26 @@ def flash_attention_ad(q, k, v, scale=None, causal=True, window=None,
     scale = float(scale) if scale is not None else q.shape[-1] ** -0.5
     return _fa_ad(q, k, v, scale, causal, window, q_offset,
                   int(block_q), int(block_k), _auto_interpret(interpret))
+
+
+# Codec hot path (repro.comm): no custom_vjp — encode/decode runs outside
+# the differentiated path, so the pair stays a plain kernel call.
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_int8(x, bits, *, block_rows=256, interpret=None):
+    """Rowwise int8 stochastic quantization of [M, 128] rows; ``bits``
+    are explicit uint32 randomness (jax.random.bits) so the call is
+    deterministic given its inputs."""
+    return _qz.quantize_int8(x, bits, block_rows=block_rows,
+                             interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "block_rows",
+                                             "interpret"))
+def dequantize_int8(q, scale, *, dtype=jnp.float32, block_rows=256,
+                    interpret=None):
+    return _qz.dequantize_int8(q, scale, dtype=dtype,
+                               block_rows=block_rows,
+                               interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -77,6 +77,25 @@ def mlstm_chunked_ref(q, k, v, ig, lf, *, chunk: int = 64, C0=None, n0=None,
     return hs.transpose(1, 2, 0, 3).astype(q.dtype), (C, n, m)
 
 
+def quantize_int8_ref(x, bits):
+    """Rowwise-absmax int8 stochastic quantization (oracle for
+    kernels/quantize.py). x: [M, 128] float; bits: [M, 128] uint32.
+    Returns (q int8 [M, 128], scale float32 [M, 1]); all-zero rows emit
+    scale 0 / q 0."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    safe = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
+    u = bits.astype(jnp.float32) * (2.0 ** -32)
+    q = jnp.clip(jnp.floor(xf / safe + u), -127.0, 127.0).astype(jnp.int8)
+    scale = jnp.where(absmax > 0.0, safe, 0.0)
+    return q, scale
+
+
+def dequantize_int8_ref(q, scale, *, dtype=jnp.float32):
+    """Inverse of :func:`quantize_int8_ref`: ``q * scale``."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
 def lora_matmul_ref(x, w, a, b, *, scale: float = 1.0):
     """y = x @ w + scale * (x @ a) @ b.
 

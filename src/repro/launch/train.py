@@ -19,7 +19,7 @@ def main():
     ap.add_argument("--shape", default=None, help="named shape or 'SEQxBATCH'")
     ap.add_argument("--strategy", default="pipeline",
                     choices=["tensor", "pipeline", "fedavg", "fl_pipeline",
-                             "swift_pipeline"])
+                             "swift_pipeline", "hier_fl"])
     ap.add_argument("--steps", type=int, default=50,
                     help="train steps (FL strategies: rounds)")
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -28,6 +28,16 @@ def main():
     ap.add_argument("--fleet", default="nano*4,agx*2",
                     help="heterogeneous fleet spec for swift_pipeline, "
                          "e.g. 'nano*4,nx*2,agx'")
+    ap.add_argument("--topology", default="2@nano*2,agx*2",
+                    help="hier_fl vehicle->edge->cloud topology: "
+                         "'E@FLEET', e.g. '2@nano*2,agx*2' = 2 edge pods "
+                         "over that fleet")
+    ap.add_argument("--codec", default="none",
+                    choices=["none", "int8", "topk"],
+                    help="hier_fl uplink codec (update compression)")
+    ap.add_argument("--async-decay", type=float, default=None,
+                    help="hier_fl: staleness decay per missed round "
+                         "deadline (enables the async merge)")
     ap.add_argument("--depart", default=None, metavar="STEP:VID",
                     help="swift_pipeline: simulate vehicle VID departing "
                          "after step STEP (live template repartition)")
@@ -44,11 +54,14 @@ def main():
     from repro.recovery.backup import EdgeBackup
 
     options = {}
-    fl = args.strategy in ("fedavg", "fl_pipeline")
+    fl = args.strategy in ("fedavg", "fl_pipeline", "hier_fl")
     if fl:
         options["local_steps"] = args.local_steps
     if args.strategy == "swift_pipeline":
         options["fleet"] = args.fleet
+    if args.strategy == "hier_fl":
+        options.update(topology=args.topology, codec=args.codec,
+                       async_decay=args.async_decay)
     session = Session(
         args.arch, full=args.full, shape=args.shape,
         mesh=MeshSpec.parse(args.mesh, devices=args.devices or None),

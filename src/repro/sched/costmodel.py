@@ -180,6 +180,14 @@ def t_com(boundary_bytes: float, v: Vehicle, cp: CostParams) -> float:
     return 2.0 * boundary_bytes * cp.n_batch * cp.nu / v.com      # Eq. 9
 
 
+def t_uplink(nbytes: float, v: Vehicle) -> float:
+    """One-way vehicle -> edge transfer of an FL update payload over the
+    vehicle's V2X link — the per-link model :mod:`repro.comm.topology`
+    builds round times from. Contrast :func:`t_com`, the per-step
+    boundary-activation exchange of Eq. 9 (round trip, batch-scaled)."""
+    return nbytes / v.com
+
+
 def path_time(path: Sequence[Vehicle], partition: Sequence[Sequence[Unit]],
               cp: CostParams) -> float:
     """Eq. 10: sum of stage compute plus inter-stage communication."""

@@ -48,6 +48,11 @@ class LoopHooks:
     checkpoint_meta: Optional[object] = None
     #: optional user callback (step_or_round_idx, params, metrics) -> None
     on_step: Optional[Callable] = None
+    #: FL-round callback (round_idx, metrics) -> None; for the ``hier_fl``
+    #: strategy the metrics carry the comm fabric's per-round accounting
+    #: (``comm_bytes_up``, ``comm_bytes_backhaul``, ``sim_round_s`` from
+    #: the topology's link models)
+    on_round: Optional[Callable] = None
     #: live dynamic repartitioning hook (paper §4.2 executed in-loop):
     #: (idx, step_fn, params, opt) -> None to keep going, or a replacement
     #: (step_fn, params, opt) after a template switch
@@ -117,6 +122,8 @@ def fl_loop(fl_round: Callable, client_params, client_opt,
         client_params, client_opt, metrics = fl_round(client_params,
                                                       client_opt, batches)
         hooks.after_step(r, client_params, metrics)
+        if hooks.on_round is not None:
+            hooks.on_round(r, metrics)
         if hooks.should_log(r):
             m = {k: float(np.mean(v)) for k, v in metrics.items()}
             hist.append(dict(m, round=r + 1))

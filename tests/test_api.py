@@ -29,6 +29,8 @@ def _session(strategy, mesh, **kw):
     ("pipeline", {}),
     ("fedavg", {"local_steps": 2}),
     ("fl_pipeline", {"local_steps": 2}),
+    ("hier_fl", {"local_steps": 2, "topology": "2@nano*2,agx*2",
+                 "codec": "int8"}),
 ])
 def test_session_runs_every_strategy(mesh22, strategy, options):
     ses = _session(strategy, mesh22, **options)
@@ -47,7 +49,8 @@ def test_session_runs_every_strategy(mesh22, strategy, options):
 
 def test_registry_lists_strategies():
     names = available_strategies()
-    for expected in ("tensor", "pipeline", "fedavg", "fl_pipeline"):
+    for expected in ("tensor", "pipeline", "fedavg", "fl_pipeline",
+                     "swift_pipeline", "hier_fl"):
         assert expected in names
 
 

@@ -1,0 +1,339 @@
+"""The vehicle->edge->cloud fabric: topology, codecs, two-tier
+aggregation, staleness, and the ``hier_fl`` strategy end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.comm.codecs import (available_codecs, get_codec,
+                               roundtrip_leaf, roundtrip_stacked,
+                               tree_nbytes, zero_residual)
+from repro.comm.hierarchy import (cloud_merge, edge_aggregate,
+                                  hierarchical_mean, staleness_weights)
+from repro.comm.topology import Topology, parse_topology
+from repro.core.fedavg import fedavg
+
+KEY = jax.random.PRNGKey(0)
+TOPO = parse_topology("2@nano*2,agx*2")
+
+
+def _stacked(c=4, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"a": jax.random.normal(k1, (c, 6, 5)),
+            "b": jax.random.normal(k2, (c, 300))}
+
+
+# ---- topology -------------------------------------------------------------
+
+def test_parse_topology_spec():
+    assert TOPO.n_clients == 4 and TOPO.n_edges == 2
+    assert TOPO.edges == ((0, 1), (2, 3))
+    assert list(TOPO.client_edge) == [0, 0, 1, 1]
+    # plain fleet spec = one edge pod; passthrough for instances
+    assert parse_topology("nano*3").n_edges == 1
+    assert parse_topology(TOPO) is TOPO
+
+
+def test_topology_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="1 <= n_edges"):
+        Topology.from_fleet("nano*2", 3)
+    with pytest.raises(ValueError, match="integer E"):
+        parse_topology("two@nano*2")
+    with pytest.raises(ValueError, match="partition"):
+        Topology(TOPO.vehicles, ((0, 1), (2,)))
+
+
+def test_round_stats_link_math():
+    topo = parse_topology("2@nano*4", backhaul_bw=1e9,
+                          backhaul_latency=0.0)
+    nbytes = 125e6                         # 1 s on a nano's 0.125 GB/s V2X
+    hier = topo.hier_round_stats(nbytes)
+    flat = topo.flat_round_stats(nbytes)
+    assert hier["uplink_bytes"] == flat["uplink_bytes"] == 4 * int(nbytes)
+    # edges reduce: 2 backhaul payloads vs 4
+    assert hier["backhaul_bytes"] == 2 * int(nbytes)
+    assert flat["backhaul_bytes"] == 4 * int(nbytes)
+    assert hier["round_time_s"] == pytest.approx(1.0 + 0.125)
+    assert flat["round_time_s"] == pytest.approx(1.0 + 0.5)
+
+
+# ---- codecs ---------------------------------------------------------------
+
+def test_codec_registry():
+    assert set(available_codecs()) >= {"none", "int8", "topk"}
+    with pytest.raises(ValueError, match="unknown codec"):
+        get_codec("gzip")
+
+
+@pytest.mark.parametrize("name,opts", [("none", {}), ("int8", {}),
+                                       ("topk", {"k_frac": 0.25})])
+def test_codec_wire_bytes(name, opts):
+    codec = get_codec(name, **opts)
+    n = 1000
+    expected = {"none": 4 * n, "int8": n + 4 * 8, "topk": 8 * 250}[name]
+    assert codec.nbytes(n) == expected
+
+
+def test_int8_roundtrip_error_bound():
+    codec = get_codec("int8")
+    x = jax.random.normal(KEY, (700,)) * 4.0
+    dec = codec.decode(codec.encode(x, KEY), x.size)
+    # rowwise bound: one quantization step of the row's absmax
+    rows = np.asarray(jnp.pad(x, (0, 896 - 700)).reshape(7, 128))
+    step = np.abs(rows).max(axis=1, keepdims=True) / 127.0
+    err = np.abs(np.asarray(dec) - np.asarray(x))
+    assert (err.reshape(-1) <= step.repeat(128, 1).reshape(-1)[:700]
+            + 1e-6).all()
+
+
+def test_topk_exact_support_recovery():
+    codec = get_codec("topk", k_frac=0.01)       # k = 10 of 1000
+    x = jnp.zeros((1000,)).at[jnp.arange(0, 1000, 100)].set(
+        jnp.arange(10.0) + 1.0)
+    dec = codec.decode(codec.encode(x, KEY), x.size)
+    assert codec.k(1000) == 10
+    # the support IS the k largest entries, recovered exactly
+    assert jnp.array_equal(dec, x)
+
+
+def test_error_feedback_telescopes():
+    """decoded_t = (x + res_{t-1}) - res_t, so the running sum of decoded
+    updates tracks t*x to within one bounded residual."""
+    codec = get_codec("topk", k_frac=0.1)
+    x = jax.random.normal(KEY, (400,))
+    res = jnp.zeros_like(x)
+    total = jnp.zeros_like(x)
+    for t in range(12):
+        dec, res = roundtrip_leaf(codec, x, res,
+                                  jax.random.PRNGKey(t))
+        total = total + dec
+    err = float(jnp.abs(total / 12 - x).max())
+    one_shot = float(jnp.abs(
+        codec.decode(codec.encode(x, KEY), x.size) - x).max())
+    assert err < one_shot / 3, (err, one_shot)
+
+
+def test_roundtrip_stacked_shapes_and_lossless():
+    stacked = _stacked()
+    codec = get_codec("none")
+    res = zero_residual(stacked)
+    dec, res2 = roundtrip_stacked(codec, stacked, res, KEY)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: jnp.allclose(a, b), dec, stacked))
+    assert all(float(jnp.abs(r).max()) == 0.0
+               for r in jax.tree.leaves(res2))
+
+
+# ---- hypothesis property tests (skip when hypothesis is absent) -----------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 500), st.integers(0, 2 ** 31 - 1))
+def test_prop_int8_roundtrip_bounded(n, seed):
+    codec = get_codec("int8")
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n,)) * (1.0 + seed % 7)
+    dec = codec.decode(codec.encode(x, key), n)
+    rows = -(-n // 128)
+    padded = np.zeros(rows * 128, np.float32)
+    padded[:n] = np.asarray(x)
+    step = np.abs(padded.reshape(rows, 128)).max(axis=1)
+    err = np.abs(np.asarray(dec) - padded[:n])
+    assert (err <= step.repeat(128)[:n] / 127.0 + 1e-6).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 300), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.05, 1.0))
+def test_prop_topk_support(n, seed, k_frac):
+    codec = get_codec("topk", k_frac=k_frac)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n,))
+    dec = np.asarray(codec.decode(codec.encode(x, key), n))
+    k = codec.k(n)
+    assert (dec != 0).sum() <= k
+    kept = np.abs(np.asarray(x))[dec != 0]
+    if kept.size:
+        # every kept magnitude >= every dropped magnitude
+        assert kept.min() >= np.abs(np.asarray(x))[dec == 0].max() - 1e-6
+    np.testing.assert_allclose(dec[dec != 0],
+                               np.asarray(x)[dec != 0], rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(["int8", "topk"]), st.integers(0, 2 ** 31 - 1))
+def test_prop_error_feedback_converges(name, seed):
+    """Repeated EF rounds on a constant update: the mean transmitted
+    value converges to the true update (residual stays bounded)."""
+    codec = get_codec(name, **({} if name == "int8" else
+                               {"k_frac": 0.2}))
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,))
+    res = jnp.zeros_like(x)
+    total = jnp.zeros_like(x)
+    rounds = 16
+    for t in range(rounds):
+        dec, res = roundtrip_leaf(codec, x, res, jax.random.PRNGKey(t))
+        total = total + dec
+    assert float(jnp.abs(res).max()) < 10.0           # residual bounded
+    err = float(jnp.abs(total / rounds - x).max())
+    assert err <= float(jnp.abs(res).max()) / rounds + 1e-5
+
+
+# ---- hierarchy ------------------------------------------------------------
+
+def test_two_tier_equals_flat_mean():
+    stacked = _stacked()
+    w = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    flat = fedavg(stacked, weights=w)
+    hier = fedavg(stacked, weights=w, topology=TOPO)
+    for k in flat:
+        assert jnp.allclose(flat[k], hier[k], atol=1e-5)
+    uni = fedavg(stacked)
+    hier_u = hierarchical_mean(stacked, None, TOPO)
+    for k in uni:
+        assert jnp.allclose(uni[k], hier_u[k], atol=1e-5)
+
+
+def test_edge_aggregate_weights():
+    stacked = {"a": jnp.stack([jnp.zeros(3), jnp.ones(3),
+                               jnp.full(3, 2.0), jnp.full(3, 4.0)])}
+    w = jnp.asarray([1.0, 3.0, 1.0, 1.0])
+    edge_tree, edge_w = edge_aggregate(stacked, w, TOPO)
+    assert jnp.allclose(edge_tree["a"][0], 0.75)      # (0*1 + 1*3) / 4
+    assert jnp.allclose(edge_tree["a"][1], 3.0)       # (2 + 4) / 2
+    assert jnp.allclose(edge_w, jnp.asarray([4.0, 2.0]))
+    with pytest.raises(ValueError, match="topology declares"):
+        edge_aggregate({"a": jnp.zeros((3, 2))}, None, TOPO)
+
+
+def test_cloud_merge_staleness_downweights():
+    edge_tree = {"a": jnp.stack([jnp.zeros(4), jnp.ones(4)])}
+    w = jnp.asarray([1.0, 1.0])
+    fresh = cloud_merge(edge_tree, w)
+    assert jnp.allclose(fresh["a"], 0.5)
+    stale = cloud_merge(edge_tree, w, staleness=jnp.asarray([1.0, 0.25]))
+    assert jnp.allclose(stale["a"], 0.2)              # 0.25 / 1.25
+
+
+def test_staleness_weights_lag():
+    s = staleness_weights([0.5, 1.0, 1.5, 3.2], 1.0, decay=0.5)
+    np.testing.assert_allclose(s, [1.0, 1.0, 0.5, 0.125])
+    with pytest.raises(ValueError, match="deadline"):
+        staleness_weights([1.0], 0.0)
+    with pytest.raises(ValueError, match="decay"):
+        staleness_weights([1.0], 1.0, decay=1.5)
+
+
+# ---- hier_fl strategy end-to-end ------------------------------------------
+
+def _session(codec="none", **kw):
+    from repro.api import Session
+    return Session("flad-vision", strategy="hier_fl", mesh=(1,),
+                   shape="16x8", topology=TOPO, codec=codec,
+                   local_steps=2, **kw)
+
+
+def test_hier_fl_trains_and_reports_wire_metrics():
+    from repro.api import LoopHooks
+    seen = []
+    hooks = LoopHooks(log_every=1, log_fn=lambda *a, **k: None,
+                      on_round=lambda r, m: seen.append((r, m)))
+    ses = _session(codec="int8")
+    out = ses.run(2, hooks=hooks)
+    assert len(out["history"]) == 2
+    assert all(np.isfinite(h["loss"]) for h in out["history"])
+    assert [r for r, _ in seen] == [0, 1]
+    stats = ses.strategy.comm_stats
+    for _, m in seen:
+        assert m["comm_bytes_up"] == stats["uplink_bytes"]
+        assert m["sim_round_s"] == pytest.approx(stats["round_time_s"])
+    # int8 wire format ~3.9x smaller per client than fp32
+    fp32 = tree_nbytes(get_codec("none"),
+                       ses.merged_params())
+    assert fp32 / stats["bytes_per_client"] > 3.5
+    merged = ses.merged_params()
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(merged))
+
+
+def test_hier_fl_identity_codec_matches_flat_fedavg():
+    """With the lossless codec and uniform weights, the fabric round is
+    the flat FedAvg round (two-tier mean == flat mean on deltas)."""
+    from repro.api import LoopHooks, Session
+    quiet = LoopHooks(log_every=10 ** 9, log_fn=lambda *a, **k: None)
+    hier = _session(codec="none")
+    hier.run(2, hooks=quiet)
+    flat = Session("flad-vision", strategy="fedavg", mesh=(1,),
+                   shape="16x8", clients=TOPO.n_clients, local_steps=2)
+    flat.run(2, hooks=quiet)
+    a = jax.tree.leaves(hier.merged_params())
+    b = jax.tree.leaves(flat.merged_params())
+    for x, y in zip(a, b):
+        assert jnp.allclose(x, y, atol=1e-5), \
+            float(jnp.abs(x - y).max())
+
+
+def test_hier_fl_async_staleness_mode():
+    ses = _session(codec="int8", async_decay=0.5)
+    step = ses.strategy.make_step(ses.cfg, ses.shape, ses.mesh)
+    assert step is not None
+    stats = ses.strategy.comm_stats
+    assert stats["staleness"] is not None
+    assert stats["staleness"].shape == (TOPO.n_edges,)
+    assert (stats["staleness"] <= 1.0).all()
+    assert (stats["staleness"] > 0.0).all()
+
+
+# ---- review regressions ---------------------------------------------------
+
+def test_edge_pod_zero_weights_raise():
+    """Weights passing the global sum check but zeroing out one pod used
+    to 0/0 that edge's partial average and NaN the global params."""
+    stacked = _stacked()
+    w = jnp.asarray([0.0, 0.0, 1.0, 1.0])       # pod 0 sums to zero
+    with pytest.raises(ValueError, match="edge pod 0"):
+        fedavg(stacked, weights=w, topology=TOPO)
+
+
+def test_topk_edge_payload_pays_for_support_union():
+    codec = get_codec("topk", k_frac=0.05)
+    n = 1000                                     # k = 50
+    assert codec.nbytes(n) == 8 * 50
+    assert codec.edge_nbytes(n, 2) == 8 * 100    # union of 2 members
+    # union saturating the leaf falls back to dense fp32
+    assert codec.edge_nbytes(n, 50) == 4 * n
+    # dense codecs aggregate to the client wire format
+    assert get_codec("int8").edge_nbytes(n, 4) == \
+        get_codec("int8").nbytes(n)
+
+
+def test_hier_round_stats_per_edge_bytes():
+    topo = parse_topology("2@nano*4", backhaul_bw=1e9,
+                          backhaul_latency=0.0)
+    stats = topo.hier_round_stats(125e6, [1e9, 2e9])
+    assert stats["backhaul_bytes"] == 3_000_000_000
+    np.testing.assert_allclose(stats["edge_arrival_s"], [2.0, 3.0])
+
+
+def test_async_deadline_requires_decay():
+    from repro.api import get_strategy
+    with pytest.raises(ValueError, match="async_decay"):
+        get_strategy("hier_fl", async_deadline=1.0)
+
+
+def test_hier_fl_rounding_stream_is_seedable():
+    """The codec's stochastic-rounding stream derives from the init key:
+    same key -> same stream (reproducible re-init), different keys ->
+    different streams."""
+    from repro.api import get_strategy
+    ses = _session(codec="int8")
+    ses.build()
+    k0 = ses.strategy._key
+    assert k0 is not None
+    s2 = get_strategy("hier_fl", topology=TOPO, codec="int8")
+    s2.init(ses.cfg, ses.shape, ses.mesh, ses.prng())
+    assert jnp.array_equal(k0, s2._key)
+    s2.init(ses.cfg, ses.shape, ses.mesh, jax.random.PRNGKey(123))
+    assert not jnp.array_equal(k0, s2._key)

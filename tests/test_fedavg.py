@@ -121,3 +121,23 @@ def test_fl_round_clients_average():
     for leaf in jax.tree.leaves(cp2):
         assert jnp.allclose(leaf[0], leaf[1], atol=1e-5)
         assert jnp.allclose(leaf[0], leaf[2], atol=1e-5)
+
+
+@pytest.mark.parametrize("weights", [
+    np.zeros(3),                      # all-zero
+    np.asarray([1.0, -2.0, 0.5]),     # negative sum
+    np.asarray([np.inf, 1.0, 1.0]),   # non-finite sum
+])
+def test_fedavg_degenerate_weights_raise(weights):
+    """Regression: degenerate weights used to divide by zero and
+    silently NaN the global params through the normalizing division."""
+    tree = {"a": jnp.ones((3, 4))}
+    with pytest.raises(ValueError, match="degenerate aggregation"):
+        fedavg(tree, weights=jnp.asarray(weights))
+
+
+def test_make_fl_round_degenerate_weights_raise_at_build():
+    cfg = reduced(get_config("flad_vision"))
+    with pytest.raises(ValueError, match="degenerate aggregation"):
+        make_fl_round(cfg, SHAPE, Adam(lr=1e-3),
+                      client_weights=np.zeros(2))

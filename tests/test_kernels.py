@@ -168,3 +168,52 @@ def test_flash_attention_matches_model_attention():
     pall = ops.flash_attention(q, k, v, causal=True, block_q=64,
                                block_k=64, interpret=True)
     assert float(jnp.max(jnp.abs(xla - pall))) < 5e-5
+
+
+@pytest.mark.parametrize("m,block_rows", [(8, 256), (520, 256), (96, 32)])
+def test_quantize_int8_matches_ref(m, block_rows):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (m, 128), jnp.float32) * 3.0
+    x = x.at[min(3, m - 1)].set(0.0)                 # all-zero row
+    bits = jax.random.bits(ks[1], (m, 128), jnp.uint32)
+    q, s = ops.quantize_int8(x, bits, block_rows=block_rows,
+                             interpret=True)
+    q_ref, s_ref = ref.quantize_int8_ref(x, bits)
+    assert q.dtype == jnp.int8 and s.shape == (m, 1)
+    assert jnp.array_equal(q, q_ref)
+    assert jnp.allclose(s, s_ref)
+    got = ops.dequantize_int8(q, s, block_rows=block_rows, interpret=True)
+    want = ref.dequantize_int8_ref(q_ref, s_ref)
+    assert jnp.allclose(got, want)
+
+
+def test_quantize_int8_error_bound_and_zero_rows():
+    """Round-trip error < one quantization step per row; zero rows stay
+    exactly zero (scale 0 on the wire, not NaN)."""
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (64, 128), jnp.float32) * 10.0
+    x = x.at[5].set(0.0)
+    bits = jax.random.bits(ks[1], (64, 128), jnp.uint32)
+    q, s = ops.quantize_int8(x, bits, interpret=True)
+    back = ops.dequantize_int8(q, s, interpret=True)
+    step = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0
+    assert float(jnp.max(jnp.abs(back - x) - step)) <= 1e-6
+    assert float(jnp.abs(back[5]).max()) == 0.0
+    assert float(s[5, 0]) == 0.0
+
+
+def test_quantize_int8_stochastic_rounding_unbiased():
+    """E[dequant(quant(x))] -> x: averaging round-trips over many draws
+    shrinks the error well below a single deterministic rounding step."""
+    x = jnp.full((8, 128), 0.3456789, jnp.float32)
+    x = x.at[:, 0].set(5.0)                  # pins scale = 5/127
+    acc = jnp.zeros_like(x)
+    n = 64
+    for i in range(n):
+        bits = jax.random.bits(jax.random.PRNGKey(i), (8, 128),
+                               jnp.uint32)
+        q, s = ops.quantize_int8(x, bits, interpret=True)
+        acc = acc + ops.dequantize_int8(q, s, interpret=True)
+    mean_err = float(jnp.abs(acc / n - x)[:, 1:].max())
+    step = 5.0 / 127.0
+    assert mean_err < 0.25 * step, (mean_err, step)

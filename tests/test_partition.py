@@ -1,0 +1,64 @@
+"""Direct unit tests for :mod:`repro.data.partition` (non-IID fleet
+partitioning): Dirichlet limits, determinism, and the empty-vehicle
+edge case."""
+import numpy as np
+import pytest
+
+from repro.data.partition import (dirichlet_mixtures, fleet_datasets,
+                                  vehicle_dataset)
+from repro.data.synthetic import DrivingDataConfig, TownWorld
+
+DCFG = DrivingDataConfig(n_towns=4, patches=4, feature_dim=16,
+                         num_waypoints=3, num_light_classes=4)
+
+
+def test_dirichlet_rows_are_distributions():
+    mix = dirichlet_mixtures(8, 4, beta=0.5, seed=1)
+    assert mix.shape == (8, 4)
+    assert (mix >= 0).all()
+    np.testing.assert_allclose(mix.sum(axis=1), 1.0, atol=1e-12)
+
+
+def test_dirichlet_beta_to_zero_is_hard_partition():
+    """beta -> 0: each vehicle's mixture collapses onto one town."""
+    mix = dirichlet_mixtures(16, 4, beta=1e-3, seed=0)
+    assert (mix.max(axis=1) > 0.99).all()
+
+
+def test_dirichlet_beta_to_inf_is_iid():
+    """beta -> inf: every vehicle sees the uniform town mixture."""
+    mix = dirichlet_mixtures(16, 4, beta=1e6, seed=0)
+    np.testing.assert_allclose(mix, 0.25, atol=5e-3)
+
+
+def test_vehicle_dataset_deterministic_under_seed():
+    world = TownWorld(DCFG)
+    mix = dirichlet_mixtures(1, DCFG.n_towns, beta=0.5, seed=3)[0]
+    a = vehicle_dataset(world, mix, 32, seed=7)
+    b = vehicle_dataset(world, mix, 32, seed=7)
+    c = vehicle_dataset(world, mix, 32, seed=8)
+    assert set(a) == {"rgb", "lidar", "light", "waypoints"}
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    assert any(not np.array_equal(a[k], c[k]) for k in a)
+
+
+def test_vehicle_dataset_n_zero():
+    """n=0 used to IndexError on ``parts[0]``; it must yield an empty
+    dataset with the right keys and trailing shapes."""
+    world = TownWorld(DCFG)
+    mix = np.full(DCFG.n_towns, 1.0 / DCFG.n_towns)
+    out = vehicle_dataset(world, mix, 0, seed=0)
+    assert set(out) == {"rgb", "lidar", "light", "waypoints"}
+    for v in out.values():
+        assert len(v) == 0
+    assert out["rgb"].shape[1:] == (DCFG.patches, DCFG.feature_dim)
+    assert out["waypoints"].shape[1:] == (DCFG.num_waypoints, 2)
+
+
+def test_fleet_datasets_shapes_and_count():
+    ds = fleet_datasets(DCFG, 3, 16, beta=0.5, seed=0)
+    assert len(ds) == 3
+    for d in ds:
+        assert len(d["light"]) == 16
+        assert d["rgb"].shape == (16, DCFG.patches, DCFG.feature_dim)
