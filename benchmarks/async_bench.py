@@ -1,0 +1,205 @@
+"""Simulated time-to-target-loss: synchronous vs event-driven async FL.
+
+Both modes run through the same discrete-event engine
+(:mod:`repro.comm.events`), so their simulated clocks are directly
+comparable:
+
+  ``sync``   infinite cloud deadline — the cloud merges when every pod
+             has reported, so each round is gated by the slowest
+             vehicle (the classic straggler problem the paper's
+             parallelized collaborative training targets);
+  ``async``  the cloud merges on a fixed clock, edge pods flush partial
+             aggregates instead of waiting for stragglers, and late
+             commits are down-weighted by their **observed** staleness
+             lag.
+
+Two straggler severities (fraction of the fleet that is a ~8x-slower
+``nano``): 25% and 50%. Per severity: the sync run's final held-out
+loss is the target; the async run gets the same simulated-time budget,
+and its speedup is sync-total-time over the first merge at which its
+held-out loss reaches the target. Writes schema-gated
+``BENCH_async.json`` (fourth perf-trajectory entry;
+``scripts/validate_bench.py`` enforces >= 1.5x speedup at the
+50%-straggler point with <= 2% held-out loss regression).
+
+    PYTHONPATH=src python benchmarks/async_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+DEFAULT_OUT = "BENCH_async.json"
+SEVERITIES = (
+    (0.25, "2@nano*1,agx*3"),     # 1 straggler in 4, sharing a pod
+    (0.50, "2@nano*2,agx*2"),     # a whole straggler pod
+)
+COMPUTE_FLOPS = 4.7e11            # ~2.0 s/round on a nano, ~0.25 s on agx
+CLOCK = 0.4                       # async cloud merge period (simulated s)
+DECAY = 0.7                       # observed-staleness decay per lag round
+
+
+def _make_heldout_loss(model, heldout, bs=64):
+    """Jitted held-out evaluator — it runs after every async merge, so
+    an eager per-batch loss would dominate the benchmark's wall time."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    loss_fn = jax.jit(lambda p, b: model.loss(p, b)[0])
+    batches = []
+    for data in heldout:
+        n = len(data["light"])
+        for i in range(0, n - bs + 1, bs):
+            batches.append({k: jnp.asarray(v[i:i + bs])
+                            for k, v in data.items()})
+
+    def heldout_loss(params):
+        return float(np.mean([float(loss_fn(params, b)) for b in batches]))
+
+    return heldout_loss
+
+
+def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
+    import jax.numpy as jnp
+    import numpy as np
+
+    try:
+        from benchmarks.common import bench_session, emit
+    except ImportError:          # invoked as `python benchmarks/...py`
+        from common import bench_session, emit
+    from repro.api import LoopHooks, load_config
+    from repro.comm.topology import parse_topology
+    from repro.config import ShapeConfig
+    from repro.data.partition import fleet_datasets
+    from repro.data.pipeline import client_round_batches
+    from repro.data.synthetic import DrivingDataConfig, TownWorld
+    from repro.train.loop import async_fl_loop
+
+    rounds, locsteps, bs, samples = (3, 2, 16, 256) if quick \
+        else (6, 2, 16, 384)
+    quiet = LoopHooks(log_every=10 ** 9, log_fn=lambda *a, **k: None)
+
+    cfg = load_config("flad-vision")
+    dcfg = DrivingDataConfig(feature_dim=cfg.prefix_dim,
+                             patches=cfg.prefix_tokens or 8,
+                             num_waypoints=cfg.num_waypoints,
+                             num_light_classes=cfg.num_light_classes,
+                             n_towns=4)
+    shape = ShapeConfig("async", dcfg.patches, bs, "train")
+    world = TownWorld(dcfg)
+    rng = np.random.default_rng(99)
+    heldout = [world.sample(t, 64 if quick else 128, rng)
+               for t in range(dcfg.n_towns)]
+    from repro.models import build_model
+    heldout_loss = _make_heldout_loss(build_model(cfg), heldout)
+
+    def severity_run(severity, spec):
+        topo = parse_topology(spec)
+        datasets = fleet_datasets(dcfg, topo.n_clients, samples, beta=1.0)
+
+        def round_batches(r):
+            rb = client_round_batches(datasets, locsteps, bs, round_idx=r)
+            return {k: jnp.asarray(v) for k, v in rb.items()}
+
+        def session(**options):
+            return bench_session(
+                "flad-vision", mesh=(1,), shape=shape,
+                strategy="async_hier_fl", learning_rate=2e-3,
+                local_steps=locsteps, remat=False, topology=topo,
+                codec="int8", compute_flops=COMPUTE_FLOPS, **options)
+
+        # ---- sync: infinite deadline, every round gated by stragglers
+        ses = session()
+        sync_out = ses.run(rounds, batches=round_batches, hooks=quiet)
+        t_budget = sync_out["sim_time_s"]
+        sync_loss = heldout_loss(ses.merged_params())
+        sync_rec = {"rounds": sync_out["merges"],
+                    "sim_time_s": t_budget, "final_loss": sync_loss}
+
+        # ---- async: merge clock, same simulated-time budget; evaluate
+        # the merged global params at every cloud merge
+        asy = session(clock=CLOCK, decay=DECAY)
+        engine, (params, opt) = asy.build()
+        curve = []
+        staleness = []
+
+        def on_round(r, metrics):
+            # hooks.on_round sees every merge; the loop's history only
+            # records merges that pass the log cadence
+            staleness.append(float(metrics["staleness_mean"]))
+            curve.append((float(metrics["t_sim"]),
+                          heldout_loss(engine.global_params)))
+
+        hooks = LoopHooks(log_every=10 ** 9, log_fn=lambda *a, **k: None,
+                          on_round=on_round)
+        asy_out = async_fl_loop(engine, params, opt, round_batches,
+                                rounds=10 ** 6, hooks=hooks,
+                                until_time=t_budget)
+        async_loss = curve[-1][1]
+        t_hit = next((t for t, l in curve if l <= sync_loss), None)
+        if t_hit is None:
+            raise SystemExit(
+                f"async never reached the sync target loss {sync_loss:.4f}"
+                f" within {t_budget:.2f}s simulated (best "
+                f"{min(l for _, l in curve):.4f})")
+        speedup = t_budget / t_hit
+        drift = max(0.0, async_loss / sync_loss - 1.0)
+        return {
+            "severity": severity,
+            "topology": spec,
+            "sync": sync_rec,
+            "async": {
+                "merges": asy_out["merges"],
+                "sim_time_s": asy_out["sim_time_s"],
+                "final_loss": async_loss,
+                "clock": CLOCK,
+                "decay": DECAY,
+                "t_target_s": t_hit,
+                "staleness_mean": float(np.mean(staleness)),
+            },
+            "speedup": speedup,
+            "loss_drift": drift,
+        }
+
+    severities = [severity_run(s, spec) for s, spec in SEVERITIES]
+    payload = {
+        "bench": "async_fabric",
+        "schema_version": 1,
+        "arch": cfg.name,
+        "quick": bool(quick),
+        "sync_rounds": rounds,
+        "local_steps": locsteps,
+        "compute_flops": COMPUTE_FLOPS,
+        "severities": severities,
+        "summary": {
+            f"speedup_{int(s['severity'] * 100)}": s["speedup"]
+            for s in severities} | {
+            f"drift_{int(s['severity'] * 100)}": s["loss_drift"]
+            for s in severities},
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    for s in severities:
+        emit(f"async/straggler_{int(s['severity'] * 100)}/speedup",
+             round(s["speedup"], 3),
+             f"drift={s['loss_drift']:.4f} "
+             f"sync={s['sync']['sim_time_s']:.2f}s "
+             f"t_target={s['async']['t_target_s']:.2f}s")
+    print(f"async: " + ", ".join(
+        f"{int(s['severity'] * 100)}% stragglers -> x{s['speedup']:.1f} "
+        f"time-to-target (drift {s['loss_drift']:.3f})"
+        for s in severities) + f" -> {out}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

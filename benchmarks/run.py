@@ -8,6 +8,8 @@
                                            (writes BENCH_attention.json)
   §3.1 comm fabric (bytes / round time) -> comm_bench
                                            (writes BENCH_comm.json)
+  §3.1 async event-time engine          -> async_bench
+                                           (writes BENCH_async.json)
   Fig. 6(a,b) pipeline execution time   -> pipeline_exec
   Fig. 7(a,b) + Table 2 FHDP            -> fhdp_throughput
   Fig. 8(a) FL accuracy                 -> fl_accuracy
@@ -35,10 +37,10 @@ def main() -> None:
                     help="comma list of benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (attention_bench, comm_bench, distill_quality,
-                            fhdp_throughput, fl_accuracy, pipeline_exec,
-                            recovery_bench, repartition_latency, roofline,
-                            swift_opt)
+    from benchmarks import (async_bench, attention_bench, comm_bench,
+                            distill_quality, fhdp_throughput, fl_accuracy,
+                            pipeline_exec, recovery_bench,
+                            repartition_latency, roofline, swift_opt)
 
     agent_holder = {}
 
@@ -56,6 +58,7 @@ def main() -> None:
         ("repartition", lambda: repartition_latency.run(quick=args.quick)),
         ("attention", lambda: attention_bench.run(quick=args.quick)),
         ("comm", lambda: comm_bench.run(quick=args.quick)),
+        ("async", lambda: async_bench.run(quick=args.quick)),
         ("fhdp_throughput", lambda: fhdp_throughput.run(quick=args.quick)),
         ("fl_accuracy", lambda: fl_accuracy.run(quick=args.quick)),
         ("distill_quality", lambda: distill_quality.run(quick=args.quick)),

@@ -1,0 +1,107 @@
+"""Event-driven asynchronous FL with live vehicle migration.
+
+Runs the same non-IID fleet task twice over the vehicle->edge->cloud
+fabric:
+
+  * synchronously — the cloud merges when every pod has reported, so
+    every round is gated by the slowest vehicle (the two `nano`
+    stragglers are ~8x slower than the `agx` pair);
+  * asynchronously — the cloud merges on a fixed clock, edge pods flush
+    partial aggregates instead of waiting, late commits are
+    down-weighted by their **observed** staleness lag, and vehicles
+    migrate between edge pods mid-run along DTMC mobility trajectories.
+
+Both runs go through the same discrete-event engine
+(`repro.comm.events`), so the simulated times are comparable: the async
+run reaches the sync run's final training loss in a fraction of the
+simulated time.
+
+Runs on CPU in ~2 minutes:
+    PYTHONPATH=src python examples/async_fl_migration.py
+"""
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import LoopHooks, Session, load_config
+from repro.comm.topology import parse_topology
+from repro.config import ShapeConfig
+from repro.data.partition import fleet_datasets
+from repro.data.pipeline import client_round_batches
+
+TOPOLOGY = "2@nano*2,agx*2"     # pod 0 = straggler nanos, pod 1 = fast agx
+COMPUTE_FLOPS = 4.7e11          # ~2.0 s/round on a nano, ~0.25 s on an agx
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6,
+                    help="sync rounds (the async run gets the same "
+                         "simulated-time budget)")
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--clock", type=float, default=0.4,
+                    help="async cloud merge period (simulated s)")
+    args = ap.parse_args()
+
+    cfg = load_config("flad-vision")
+    from repro.data.synthetic import DrivingDataConfig
+    dcfg = DrivingDataConfig(feature_dim=cfg.prefix_dim,
+                             patches=cfg.prefix_tokens or 8,
+                             num_waypoints=cfg.num_waypoints,
+                             num_light_classes=cfg.num_light_classes)
+    topo = parse_topology(TOPOLOGY)
+    shape = ShapeConfig("async", dcfg.patches, 16, "train")
+    datasets = fleet_datasets(dcfg, topo.n_clients, 256, beta=1.0)
+
+    def round_batches(r):
+        rb = client_round_batches(datasets, args.local_steps, 16,
+                                  round_idx=r)
+        return {k: jnp.asarray(v) for k, v in rb.items()}
+
+    quiet = LoopHooks(log_every=1, log_fn=lambda *a, **k: None)
+    sync = Session(cfg=cfg, strategy="async_hier_fl", mesh=(1,),
+                   shape=shape, topology=topo, codec="int8",
+                   local_steps=args.local_steps, learning_rate=2e-3,
+                   compute_flops=COMPUTE_FLOPS)
+    sync_out = sync.run(args.rounds, batches=round_batches, hooks=quiet)
+    t_budget = sync_out["sim_time_s"]
+    sync_loss = float(np.nanmean(
+        sync_out["history"][-1]["per_client/loss"]))
+    print(f"sync : {sync_out['merges']} rounds in {t_budget:6.2f}s "
+          f"simulated (every round gated by the nano stragglers), "
+          f"train loss {sync_loss:.4f}")
+
+    # async: same time budget, merge clock + mobility-driven migration
+    events = []
+    hooks = LoopHooks(log_every=1, log_fn=lambda *a, **k: None,
+                      on_event=lambda ev: events.append(ev.kind))
+    asy = Session(cfg=cfg, strategy="async_hier_fl", mesh=(1,),
+                  shape=shape, topology=topo, codec="int8",
+                  local_steps=args.local_steps, learning_rate=2e-3,
+                  compute_flops=COMPUTE_FLOPS, clock=args.clock,
+                  compute_jitter=0.1, migrate_every=1.0, decay=0.7)
+    step, (params, opt) = asy.build()
+    from repro.train.loop import async_fl_loop
+    out = async_fl_loop(step, params, opt, round_batches,
+                        rounds=10 ** 6, hooks=hooks,
+                        until_time=t_budget)
+    eng = asy.strategy.engine
+    losses = [float(np.nanmean(h["per_client/loss"]))
+              for h in out["history"]]
+    hit = next((h["t_sim"] for h, l in zip(out["history"], losses)
+                if l <= sync_loss), None)
+    print(f"async: {out['merges']} merges in {out['sim_time_s']:6.2f}s "
+          f"simulated, {eng.n_migrations} pod migrations, "
+          f"final topology {eng.topo.edges}, "
+          f"train loss {losses[-1]:.4f}")
+    if hit is not None:
+        print(f"async reached the sync final loss at t={hit:.2f}s "
+              f"simulated — {t_budget / hit:.1f}x faster than the "
+              f"synchronous {t_budget:.2f}s")
+    kinds = sorted(set(events))
+    print(f"event kinds seen: {kinds}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ Runs on CPU in ~2 minutes:
 import argparse
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import LoopHooks, Session, load_config
 from repro.comm.codecs import get_codec, tree_nbytes
@@ -63,7 +64,8 @@ def main():
         out = ses.run(args.rounds, batches=round_batches, hooks=hooks)
         up, bh, secs = wire[-1]
         fp32 = tree_nbytes(get_codec("none"), ses.merged_params())
-        print(f"codec {codec:5s}: loss {out['history'][-1]['loss']:.4f}  "
+        loss = float(np.mean(out["history"][-1]["per_client/loss"]))
+        print(f"codec {codec:5s}: loss {loss:.4f}  "
               f"uplink {up / 1e6:7.3f} MB + backhaul {bh / 1e6:7.3f} MB "
               f"per round ({topo.n_clients * fp32 / 1e6:.3f} MB raw), "
               f"simulated round {secs * 1e3:.1f} ms")

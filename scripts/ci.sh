@@ -23,6 +23,14 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.train --strategy hier_fl --devices 2 --mesh 2 \
       --topology "2@nano*2,agx*2" --codec int8 --steps 2
 
+  echo "=== smoke: async event-time FL (clocked merge + migration) ==="
+  python -m repro.launch.train --strategy async_hier_fl --devices 2 \
+      --mesh 2 --topology "2@nano*2,agx*2" --codec int8 \
+      --async-clock 0.3 --migrate-every 0.5 --compute-jitter 0.2 --steps 2
+
+  echo "=== smoke: async FL migration example ==="
+  python examples/async_fl_migration.py --rounds 3
+
   echo "=== smoke: serve launcher (Session.serve) ==="
   python -m repro.launch.serve --devices 2 --batch 2 --context 16 \
       --decode-steps 4 --requests 1
@@ -45,10 +53,16 @@ if [[ "${1:-}" != "--fast" ]]; then
   python benchmarks/comm_bench.py --quick --out /tmp/BENCH_comm.quick.json
   python scripts/validate_bench.py /tmp/BENCH_comm.quick.json
 
+  echo "=== bench: async event-time engine (quick, scratch output) ==="
+  python benchmarks/async_bench.py --quick \
+      --out /tmp/BENCH_async.quick.json
+  python scripts/validate_bench.py /tmp/BENCH_async.quick.json
+
   echo "=== validate committed perf-trajectory artifacts ==="
   python scripts/validate_bench.py BENCH_repartition.json
   python scripts/validate_bench.py BENCH_attention.json
   python scripts/validate_bench.py BENCH_comm.json
+  python scripts/validate_bench.py BENCH_async.json
 fi
 
 echo "CI OK"

@@ -15,10 +15,16 @@ schemas. Dispatches on the payload's ``bench`` field:
     int8 codec moves >= 4x fewer upward bytes per round than flat fp32
     FedAvg while the held-out loss stays within 5%, and the simulated
     round time (link models) does not regress.
+  * ``async_fabric`` (BENCH_async.json) — enforces the asynchrony claim
+    of the event-time engine (:mod:`repro.comm.events`): under a
+    50%-straggler fleet the clocked async merge reaches the synchronous
+    run's held-out target loss >= 1.5x faster in simulated time, with
+    <= 2% held-out loss regression (and no regression at 25%).
 
     python scripts/validate_bench.py BENCH_repartition.json
     python scripts/validate_bench.py BENCH_attention.json
     python scripts/validate_bench.py BENCH_comm.json
+    python scripts/validate_bench.py BENCH_async.json
 """
 import json
 import math
@@ -60,6 +66,27 @@ COMM_MODE = {
 }
 MIN_INT8_UP_REDUCTION = 4.0     # the acceptance bar: int8 + edge tier
 MAX_INT8_LOSS_DRIFT = 0.05      # matched final loss, within 5%
+
+ASYNC_TOP = {
+    "bench": str, "schema_version": int, "arch": str, "quick": bool,
+    "sync_rounds": int, "local_steps": int,
+    "compute_flops": (int, float), "severities": list, "summary": dict,
+}
+ASYNC_SEVERITY = {
+    "severity": (int, float), "topology": str, "sync": dict,
+    "async": dict, "speedup": (int, float), "loss_drift": (int, float),
+}
+ASYNC_SYNC = {
+    "rounds": int, "sim_time_s": (int, float), "final_loss": (int, float),
+}
+ASYNC_ASYNC = {
+    "merges": int, "sim_time_s": (int, float), "final_loss": (int, float),
+    "clock": (int, float), "decay": (int, float),
+    "t_target_s": (int, float), "staleness_mean": (int, float),
+}
+MIN_ASYNC_SPEEDUP_50 = 1.5      # the acceptance bar at 50% stragglers
+MIN_ASYNC_SPEEDUP_25 = 1.0      # no regression at mild severity
+MAX_ASYNC_LOSS_DRIFT = 0.02     # held-out loss no worse than sync by >2%
 
 # the kernel VJP's normalized peak may wobble (padding, residual dtype)
 # but must not grow with S; the reference VJP's raw peak is the
@@ -196,10 +223,53 @@ def validate_comm(data: dict, path: str) -> None:
           f"{flat['sim_round_s'] / int8['sim_round_s']:.1f}x faster)")
 
 
+def validate_async(data: dict, path: str) -> None:
+    check_keys(data, ASYNC_TOP, "payload")
+    by_sev = {}
+    for i, s in enumerate(data["severities"]):
+        where = f"severities[{i}]"
+        check_keys(s, ASYNC_SEVERITY, where)
+        check_keys(s["sync"], ASYNC_SYNC, f"{where}[sync]")
+        check_keys(s["async"], ASYNC_ASYNC, f"{where}[async]")
+        for side in ("sync", "async"):
+            if not math.isfinite(s[side]["final_loss"]):
+                fail(f"{where}[{side}] final_loss not finite")
+            if s[side]["sim_time_s"] <= 0:
+                fail(f"{where}[{side}] sim_time_s not positive")
+        if not 0 < s["async"]["t_target_s"] <= s["sync"]["sim_time_s"]:
+            fail(f"{where} t_target_s outside (0, sync budget]")
+        if s["async"]["merges"] <= s["sync"]["rounds"]:
+            fail(f"{where}: async made {s['async']['merges']} merges in "
+                 f"the sync budget vs {s['sync']['rounds']} sync rounds — "
+                 "the clocked merge is not decoupled from stragglers")
+        if s["loss_drift"] > MAX_ASYNC_LOSS_DRIFT:
+            fail(f"{where}: async held-out loss regressed "
+                 f"{s['loss_drift']:.1%} vs sync (bound "
+                 f"{MAX_ASYNC_LOSS_DRIFT:.0%}) — asynchrony is not "
+                 "quality-matched")
+        by_sev[round(float(s["severity"]), 2)] = s
+    for want in (0.25, 0.5):
+        if want not in by_sev:
+            fail(f"severities missing the {want:.0%}-straggler point")
+    if by_sev[0.5]["speedup"] < MIN_ASYNC_SPEEDUP_50:
+        fail(f"50%-straggler speedup x{by_sev[0.5]['speedup']:.2f} below "
+             f"the x{MIN_ASYNC_SPEEDUP_50} acceptance bar — the async "
+             "engine is not beating the straggler-gated sync round")
+    if by_sev[0.25]["speedup"] < MIN_ASYNC_SPEEDUP_25:
+        fail(f"25%-straggler speedup x{by_sev[0.25]['speedup']:.2f} is a "
+             "regression vs sync")
+
+    print(f"validate_bench: OK — {path} (50% stragglers: "
+          f"x{by_sev[0.5]['speedup']:.1f} simulated time-to-target, "
+          f"drift {by_sev[0.5]['loss_drift']:.1%}; 25%: "
+          f"x{by_sev[0.25]['speedup']:.1f})")
+
+
 VALIDATORS = {
     "repartition_latency": validate_repartition,
     "attention_fwd_bwd": validate_attention,
     "comm_fabric": validate_comm,
+    "async_fabric": validate_async,
 }
 
 

@@ -209,13 +209,15 @@ class Session:
         """
         import dataclasses
 
-        from repro.train.loop import LoopHooks, fl_loop, train_loop
+        from repro.train.loop import (LoopHooks, async_fl_loop, fl_loop,
+                                      train_loop)
 
         step, init_state = self.build(init=state is None)
         if state is not None:
             init_state = state
         hooks = hooks or self.hooks or (
-            LoopHooks(log_every=1) if self.strategy.loop == "round"
+            LoopHooks(log_every=1) if self.strategy.loop in ("round",
+                                                             "async")
             else LoopHooks())
         if hooks.backup is not None and hooks.backup_view is None:
             # default the edge snapshot to the merged flat model, the form
@@ -229,16 +231,26 @@ class Session:
             hooks = dataclasses.replace(
                 hooks, checkpoint_meta=self._checkpoint_meta)
         params, opt = init_state
-        if self.strategy.loop == "round":
+        if self.strategy.loop in ("round", "async"):
             if batches is None:
                 it = self.default_batches()
                 round_fn = lambda r: next(it)          # noqa: E731
             elif callable(batches):
                 round_fn = batches
             else:
+                if self.strategy.loop == "async" and \
+                        hasattr(batches, "__len__"):
+                    # the event engine consumes one batch per broadcast
+                    # WAVE, and async waves outnumber cloud merges — a
+                    # finite per-round list would StopIteration mid-run,
+                    # so cycle it instead
+                    import itertools
+                    batches = itertools.cycle(batches)
                 round_fn = lambda r, _it=iter(batches): next(_it)  # noqa: E731
-            out = fl_loop(step, params, opt, round_fn, rounds=steps,
-                          hooks=hooks)
+            loop = async_fl_loop if self.strategy.loop == "async" \
+                else fl_loop
+            out = loop(step, params, opt, round_fn, rounds=steps,
+                       hooks=hooks)
             self.state = (out["client_params"], out["client_opt"])
         else:
             it = iter(batches) if batches is not None \

@@ -27,9 +27,16 @@ Registered strategies:
                       partial averages, staleness-aware cloud merge, and
                       per-round bytes-on-wire + simulated round time from
                       the topology's link models
+  ``async_hier_fl``   the same fabric driven in event time
+                      (:mod:`repro.comm.events`): edges commit partial
+                      aggregates as members arrive, the cloud merges on a
+                      configurable clock with **observed** staleness lags,
+                      and vehicles migrate between edge pods mid-run; with
+                      an infinite deadline, zero jitter, and no migrations
+                      it reproduces ``hier_fl`` bit for bit
 
-New execution modes (async rounds, new backends) plug in via
-:func:`register_strategy` instead of another bespoke launcher.
+New execution modes plug in via :func:`register_strategy` instead of
+another bespoke launcher.
 """
 from __future__ import annotations
 
@@ -529,6 +536,99 @@ class HierFLStrategy(FedAvgStrategy):
         w = None if self.client_weights is None else \
             jnp.asarray(self.client_weights, jnp.float32)
         return fedavg(state[0], weights=w, topology=self.topology)
+
+
+@register_strategy("async_hier_fl")
+class AsyncHierFLStrategy(HierFLStrategy):
+    """Event-driven hierarchical FL (paper §3.1's *parallelized
+    collaborative training*): the comm fabric of ``hier_fl`` driven by
+    the discrete-event engine in :mod:`repro.comm.events`.
+
+    ``clock``: cloud merge period in simulated seconds — ``None`` is the
+    infinite deadline, i.e. the synchronous special case, guaranteed
+    bit-identical to ``hier_fl`` (same topology/codec/seed, zero jitter,
+    no migrations). With a finite clock, edge pods flush partial
+    aggregates instead of waiting for stragglers and the cloud
+    down-weights late commits by ``decay ** observed_lag`` — the lag is
+    what actually happened on the simulated links, not a prediction.
+    ``compute_flops`` sizes the per-vehicle compute-time model (default:
+    a 6*params*tokens estimate from the config); ``compute_jitter`` adds
+    up-to-that-fraction uniform slowdown per (vehicle, round).
+    ``migrate_every`` turns on DTMC mobility: every that-many simulated
+    seconds each vehicle takes one grid step and migrates to the nearest
+    edge pod when it leaves its pod's comm radius.
+    """
+
+    loop = "async"
+
+    def __init__(self, *, learning_rate: float = 1e-3, local_steps: int = 1,
+                 remat: bool = False, topology="2@nano*2,agx*2",
+                 codec: str = "none",
+                 codec_options: Optional[Dict] = None,
+                 client_weights: Optional[Any] = None,
+                 clock: Optional[float] = None, decay: float = 0.5,
+                 flush_every: Optional[float] = None,
+                 compute_flops: Optional[float] = None,
+                 compute_jitter: float = 0.0,
+                 migrate_every: Optional[float] = None,
+                 mobility: Optional[Any] = None,
+                 sim_seed: int = 0, seed: int = 0):
+        super().__init__(learning_rate=learning_rate,
+                         local_steps=local_steps, remat=remat,
+                         topology=topology, codec=codec,
+                         codec_options=codec_options,
+                         client_weights=client_weights, seed=seed)
+        self.clock = clock
+        self.decay = decay
+        self.flush_every = flush_every
+        self.compute_flops = compute_flops
+        self.compute_jitter = compute_jitter
+        self.migrate_every = migrate_every
+        self.mobility = mobility
+        self.sim_seed = sim_seed
+        self.engine = None
+
+    def make_step(self, cfg, shape, mesh):
+        from repro.comm.codecs import tree_edge_nbytes, tree_nbytes
+        from repro.comm.events import (AsyncHierFLEngine, ComputeModel,
+                                       HierFLProgram, MobilitySpec,
+                                       default_compute_flops)
+
+        self.comm_stats = self._round_stats(cfg)    # predicted, for info
+        program = HierFLProgram(cfg, shape, self._optimizer(), self.codec,
+                                remat=self.remat)
+        ptree = _abstract_init(cfg)
+        flops = self.compute_flops if self.compute_flops is not None \
+            else default_compute_flops(cfg, shape, self.local_steps)
+        mobility = self.mobility
+        if mobility is None and self.migrate_every is not None:
+            mobility = MobilitySpec(seed=self.sim_seed)
+        self.engine = AsyncHierFLEngine(
+            self.topology, tree_nbytes(self.codec, ptree),
+            lambda m: tree_edge_nbytes(self.codec, ptree, m),
+            program=program,
+            compute=ComputeModel(flops=flops, jitter=self.compute_jitter),
+            client_weights=self.client_weights,
+            clock=self.clock, decay=self.decay,
+            flush_every=self.flush_every, mobility=mobility,
+            migrate_every=self.migrate_every, seed=self.sim_seed,
+            key_fn=self._take_run_key)
+        return self.engine
+
+    def _take_run_key(self):
+        """The engine's codec-rounding stream: the first run replays
+        ``hier_fl``'s exact stream (fold_in(init_key, 1)); later runs
+        advance so they do not reuse it."""
+        if self._key is None:
+            self._key = jax.random.PRNGKey(self.seed)
+        k = self._key
+        self._key = jax.random.fold_in(k, 0x517)
+        return k
+
+    def merge_params(self, state, cfg=None):
+        if self.engine is not None and self.engine.version > 0:
+            return self.engine.global_params
+        return super().merge_params(state, cfg)
 
 
 @register_strategy("fl_pipeline")

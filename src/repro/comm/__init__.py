@@ -14,14 +14,26 @@ an explicit runtime object:
     the int8 hot path a Pallas kernel pair (:mod:`repro.kernels.quantize`);
   * :mod:`repro.comm.hierarchy` — two-tier weighted aggregation (edge
     partial averages, cloud merge) plus staleness-aware down-weighting of
-    late edge updates for async rounds.
+    late edge updates for async rounds, split into per-pod
+    :func:`~repro.comm.hierarchy.edge_commit` and clocked
+    :func:`~repro.comm.hierarchy.cloud_merge_at` halves;
+  * :mod:`repro.comm.events` — the discrete-event engine driving the
+    fabric in event time: edges commit as members arrive, the cloud
+    merges on a clock with observed staleness, vehicles migrate between
+    pods mid-run (``Topology.reassign``) along DTMC mobility
+    trajectories.
 
-The ``hier_fl`` strategy (:mod:`repro.api.strategies`) wires all three
-into :class:`repro.api.Session`.
+The ``hier_fl`` (synchronous) and ``async_hier_fl`` (event-driven)
+strategies (:mod:`repro.api.strategies`) wire these into
+:class:`repro.api.Session`.
 """
 from repro.comm.topology import Topology, parse_topology  # noqa: F401
 from repro.comm.codecs import (Codec, IdentityCodec, Int8Codec,  # noqa: F401
                                TopKCodec, available_codecs, get_codec)
-from repro.comm.hierarchy import (cloud_merge, edge_aggregate,  # noqa: F401
+from repro.comm.hierarchy import (cloud_merge, cloud_merge_at,  # noqa: F401
+                                  edge_aggregate, edge_commit,
                                   hierarchical_mean, make_hier_round,
                                   staleness_weights)
+from repro.comm.events import (AsyncHierFLEngine, ComputeModel,  # noqa: F401
+                               EventQueue, FleetMobility, HierFLProgram,
+                               MobilitySpec, simulate_schedule)

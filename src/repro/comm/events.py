@@ -1,0 +1,721 @@
+"""Discrete-event engine for asynchronous vehicle-edge-cloud FL.
+
+The synchronous ``hier_fl`` round is one fused jitted function: every
+vehicle trains, every pod aggregates, the cloud merges, all in lockstep.
+This module inverts that control flow. A priority queue of timestamped
+events drives the round:
+
+  ``LocalStepDone``    a vehicle finished its local steps (compute-time
+                       model over ``Vehicle.cmp``, optional jitter)
+  ``UplinkArrived``    its coded update crossed the V2X link
+                       (:func:`repro.sched.costmodel.t_uplink`)
+  ``BackhaulArrived``  an edge pod's partial aggregate crossed the
+                       metro backhaul to the cloud
+  ``CloudDeadline``    the cloud's merge clock ticked: merge whatever
+                       commits arrived, with **observed** staleness
+                       lags, and re-broadcast to idle vehicles
+  ``PodMigration``     a vehicle moved between edge pods
+                       (:meth:`repro.comm.topology.Topology.reassign`),
+                       driven by DTMC trajectories from
+                       :mod:`repro.sched.mobility`
+
+Edges commit partial aggregates (:func:`repro.comm.hierarchy
+.edge_commit`) whenever their members arrive — without waiting for
+stragglers when a merge clock is set — and the cloud merges commits at
+deadlines (:func:`repro.comm.hierarchy.cloud_merge_at`), feeding the
+observed arrival lags into the existing ``staleness_weights``.
+
+With ``clock=None`` (infinite deadline), zero jitter, and no migrations
+the engine IS the synchronous round: the cloud merges exactly when every
+vehicle's update has arrived, and the piecewise-jitted computation is
+bit-identical to ``make_hier_round``'s fused jit (the ``async_hier_fl``
+strategy's sync-equivalence guarantee, enforced by
+``tests/test_events.py``).
+
+Event ordering ties break deterministically by ``(timestamp,
+sequence-id)``: replaying a seed reproduces the exact event log and
+final params on any platform.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, ClassVar, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.comm.topology import Topology
+from repro.sched.costmodel import t_uplink
+from repro.sched.mobility import GridWorld, make_patterns
+
+# ---- events ---------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalStepDone:
+    t: float
+    vehicle: int
+    kind: ClassVar[str] = "local_step_done"
+
+
+@dataclasses.dataclass(frozen=True)
+class UplinkArrived:
+    t: float
+    vehicle: int
+    nbytes: int
+    kind: ClassVar[str] = "uplink_arrived"
+
+
+@dataclasses.dataclass(frozen=True)
+class BackhaulArrived:
+    t: float
+    edge: int
+    commit_id: int
+    kind: ClassVar[str] = "backhaul_arrived"
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudDeadline:
+    t: float
+    index: int
+    kind: ClassVar[str] = "cloud_deadline"
+
+
+@dataclasses.dataclass(frozen=True)
+class PodMigration:
+    t: float
+    vehicle: int
+    src: int
+    dst: int
+    kind: ClassVar[str] = "pod_migration"
+
+
+@dataclasses.dataclass(frozen=True)
+class MobilityTick:
+    t: float
+    index: int
+    kind: ClassVar[str] = "mobility_tick"
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeFlush:
+    t: float
+    edge: int
+    gen: int
+    kind: ClassVar[str] = "edge_flush"
+
+
+def _log_entry(ev) -> Tuple:
+    d = dataclasses.asdict(ev)
+    t = d.pop("t")
+    return (ev.kind, t) + tuple(v for _, v in sorted(d.items()))
+
+
+class EventQueue:
+    """Min-heap of events keyed ``(timestamp, sequence-id)`` — identical
+    timestamps pop in push order, so runs replay identically across
+    platforms (heapq never compares the event payloads themselves)."""
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, object]] = []
+        self._seq = 0
+
+    def push(self, ev) -> None:
+        heapq.heappush(self._heap, (ev.t, self._seq, ev))
+        self._seq += 1
+
+    def pop(self):
+        if not self._heap:
+            return None
+        return heapq.heappop(self._heap)[2]
+
+    def peek_t(self) -> float:
+        return self._heap[0][0] if self._heap else math.inf
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+# ---- timing models --------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ComputeModel:
+    """Per-vehicle local-round compute time: ``flops`` of one local round
+    (all local steps) at the vehicle's effective throughput ``cmp * mu``
+    (paper Eq. 8's utilization), times a multiplicative jitter drawn
+    uniformly from ``[1, 1 + jitter]`` per (vehicle, round)."""
+
+    flops: float
+    mu: float = 0.5
+    jitter: float = 0.0
+
+    def time_s(self, vehicle, rng) -> float:
+        t = self.flops / (vehicle.cmp * self.mu)
+        if self.jitter > 0.0:
+            t *= 1.0 + float(rng.uniform(0.0, self.jitter))
+        return t
+
+
+def default_compute_flops(cfg, shape, local_steps: int = 1) -> float:
+    """fwd+bwd FLOPs of one local round: 6 * active params * tokens."""
+    tokens = shape.global_batch * shape.seq_len * max(local_steps, 1)
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+# ---- mobility -> migration events ----------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MobilitySpec:
+    """DTMC mobility driving ``PodMigration`` events: vehicles random-walk
+    a ``size x size`` grid under :func:`repro.sched.mobility
+    .make_patterns` patterns; a vehicle migrates to the nearest edge pod
+    when it leaves the ``radius``-cell comm range of its current pod's
+    home cell."""
+
+    size: int = 6
+    n_patterns: int = 3
+    radius: int = 2
+    persistence: float = 0.55
+    seed: int = 0
+
+
+class FleetMobility:
+    """Live mobility state: one cell + pattern per vehicle, one home cell
+    per edge pod (spread along the grid diagonal)."""
+
+    def __init__(self, spec: MobilitySpec, topology: Topology):
+        self.spec = spec
+        self.world: GridWorld = make_patterns(
+            spec.size, spec.n_patterns, seed=spec.seed,
+            persistence=spec.persistence)
+        E, C = topology.n_edges, topology.n_clients
+        coords = (np.round(np.linspace(0, spec.size - 1, E)).astype(int)
+                  if E > 1 else np.array([spec.size // 2]))
+        self.edge_cells = coords * spec.size + coords
+        self.patterns = np.arange(C) % spec.n_patterns
+        self.cells = self.edge_cells[topology.client_edge].copy()
+        self.histories: List[List[int]] = [[int(c)] for c in self.cells]
+
+    def advance(self, vehicle: int, rng) -> int:
+        c = int(rng.choice(self.world.n_cells,
+                           p=self.world.patterns[self.patterns[vehicle],
+                                                 self.cells[vehicle]]))
+        self.cells[vehicle] = c
+        self.histories[vehicle].append(c)
+        return c
+
+    def out_of_range(self, vehicle: int, edge: int) -> bool:
+        return int(self.world.cell_dist(
+            self.cells[vehicle], self.edge_cells[edge])) > self.spec.radius
+
+    def nearest_edge(self, vehicle: int) -> int:
+        d = self.world.cell_dist(self.cells[vehicle], self.edge_cells)
+        return int(np.argmin(d))        # ties -> lowest edge index
+
+
+def time_to_migration(world: GridWorld, traj, speed: float,
+                      radius: int) -> float:
+    """Seconds until ``traj`` leaves the ``radius``-cell comm range of
+    its start cell, on the dwell-data timescale of
+    :func:`repro.sched.dwell.synthetic_dwell_data` (2.0 s per newly
+    entered cell at unit speed); capped at the route end. This is the
+    simulated quantity the WDR-predicted dwell time upper-bounds in
+    expectation (property-tested in ``tests/test_events.py``)."""
+    start = int(traj[0])
+    visited = {start}
+    for c in traj[1:]:
+        visited.add(int(c))
+        if int(world.cell_dist(start, int(c))) > radius:
+            break
+    return len(visited) * 2.0 / speed
+
+
+# ---- the jitted compute program ------------------------------------------
+
+
+class HierFLProgram:
+    """The jitted compute pieces of the async fabric — the same algebra
+    as ``make_hier_round``, split at the event boundaries: vmapped local
+    steps over the client stack, delta + codec roundtrip with error
+    feedback, per-pod ``edge_commit``, clocked ``cloud_merge_at``, and
+    masked row select/assign for partial-wave state updates. Composed in
+    the synchronous schedule these reproduce the fused round bit for
+    bit."""
+
+    def __init__(self, cfg, shape, optimizer, codec, *, remat: bool = False):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.comm.codecs import roundtrip_stacked
+        from repro.comm.hierarchy import cloud_merge_at, edge_commit
+        from repro.core.fedavg import make_local_train
+        from repro.core.steps import make_train_step
+
+        step = make_train_step(cfg, shape, optimizer, remat=remat)
+        self.local_all = jax.jit(jax.vmap(make_local_train(step)))
+        self.commit = jax.jit(edge_commit)
+        self.merge = jax.jit(cloud_merge_at)
+
+        @jax.jit
+        def deltas(params, base):
+            return jax.tree.map(
+                lambda a, g: a.astype(jnp.float32) - g, params, base)
+
+        @jax.jit
+        def roundtrip(d, residual, key):
+            return roundtrip_stacked(codec, d, residual, key)
+
+        @jax.jit
+        def select_rows(new, old, mask):
+            def sel(n, o):
+                m = mask.reshape((-1,) + (1,) * (n.ndim - 1))
+                return jnp.where(m, n, o)
+
+            return jax.tree.map(sel, new, old)
+
+        @jax.jit
+        def assign_rows(tree, mask, flat):
+            def asg(x, g):
+                m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+                return jnp.where(m, jnp.broadcast_to(g[None], x.shape), x)
+
+            return jax.tree.map(asg, tree, flat)
+
+        self.deltas = deltas
+        self.roundtrip = roundtrip
+        self.select_rows = select_rows
+        self.assign_rows = assign_rows
+
+
+@dataclasses.dataclass
+class _Commit:
+    partial: object               # float32 partial-average tree (or None)
+    weight: object                # scalar total member weight
+    vehicles: Tuple[int, ...]
+    base_version: int
+    base_time: float
+    nbytes: int
+    edge: int
+    t_commit: float
+    t_arrive: float = math.nan
+
+
+@dataclasses.dataclass
+class _Buffered:
+    vehicle: int
+    delta: object
+    weight: float
+    base_version: int
+    base_time: float
+
+
+# ---- the engine -----------------------------------------------------------
+
+
+class AsyncHierFLEngine:
+    """Event-time driver of one asynchronous hierarchical-FL fabric.
+
+    ``clock``: cloud merge period in simulated seconds; ``None`` means
+    the infinite deadline — the cloud merges exactly when every
+    vehicle's update has arrived (the synchronous special case).
+    ``program=None`` runs the schedule timing-only (no tensors), which
+    is what ``launch/dryrun.py --async-clock`` uses.
+
+    The engine treats :class:`Topology` as mutable over time: every
+    ``PodMigration`` swaps ``self.topo`` for ``topo.reassign(vehicle,
+    edge)``, so ``client_edge`` / ``member_indices`` always describe the
+    live assignment.
+    """
+
+    def __init__(self, topology: Topology, bytes_per_client: int,
+                 edge_nbytes_fn: Callable[[int], int], *,
+                 program: Optional[HierFLProgram] = None,
+                 compute: Optional[ComputeModel] = None,
+                 client_weights: Optional[np.ndarray] = None,
+                 clock: Optional[float] = None, decay: float = 0.5,
+                 flush_every: Optional[float] = None,
+                 mobility: Optional[MobilitySpec] = None,
+                 migrate_every: Optional[float] = None,
+                 seed: int = 0,
+                 key_fn: Optional[Callable] = None):
+        if clock is not None and clock <= 0:
+            raise ValueError(f"clock must be positive or None, got {clock}")
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.topo0 = topology
+        self.bytes_per_client = int(bytes_per_client)
+        self.edge_nbytes_fn = edge_nbytes_fn
+        self.program = program
+        self.compute = compute or ComputeModel(flops=1e9)
+        self.client_w = (np.ones(topology.n_clients, np.float32)
+                         if client_weights is None
+                         else np.asarray(client_weights, np.float32))
+        if self.client_w.shape != (topology.n_clients,):
+            raise ValueError(
+                f"client_weights has shape {self.client_w.shape}, expected "
+                f"({topology.n_clients},)")
+        topology.validate_pod_weights(self.client_w)
+        self.clock = clock
+        self.decay = decay
+        self.flush_every = flush_every if flush_every is not None else clock
+        self.mobility_spec = mobility
+        self.migrate_every = migrate_every
+        self.seed = seed
+        self.key_fn = key_fn
+        self.topo = topology
+        self.version = 0
+
+    # ---- lifecycle -----------------------------------------------------
+    def reset(self, client_params=None, client_opt=None,
+              round_batches_fn=None) -> None:
+        C = self.topo0.n_clients
+        self.C = C
+        self.topo = self.topo0
+        self.now = 0.0
+        self.queue = EventQueue()
+        self.rng = np.random.default_rng(self.seed)
+        self.event_log: List[Tuple] = []
+        self.version = 0
+        self.n_migrations = 0
+        self.state = ["idle"] * C
+        self._wave_open: set = set()
+        self.wave_count = 0
+        self._delta: List = [None] * C
+        self.last_metrics: Dict[str, np.ndarray] = {}
+        self.base_version = np.zeros(C, np.int64)
+        self.base_time = np.zeros(C, np.float64)
+        self.edge_buffers: List[List[_Buffered]] = \
+            [[] for _ in range(self.topo0.n_edges)]
+        self.flush_gen = [0] * self.topo0.n_edges
+        self.commits: Dict[int, _Commit] = {}
+        self._next_commit = 0
+        self.cloud_buffer: List[int] = []
+        self.bytes_up = 0
+        self.bytes_backhaul = 0
+        self._bytes_up_mark = 0
+        self._bytes_backhaul_mark = 0
+        self._batches_fn = round_batches_fn
+        self.mobility = (FleetMobility(self.mobility_spec, self.topo0)
+                         if self.mobility_spec is not None else None)
+        if self.program is not None:
+            import jax
+
+            from repro.comm.codecs import zero_residual
+            if client_params is None:
+                raise ValueError("a compute program needs client params")
+            self.client_params = client_params
+            self.client_opt = client_opt
+            self.residual = zero_residual(client_params)
+            self.global_params = jax.tree.map(lambda x: x[0], client_params)
+            self.base_params = client_params
+            self._key = self.key_fn() if self.key_fn is not None \
+                else jax.random.PRNGKey(self.seed)
+        else:
+            self.client_params = client_params
+            self.client_opt = client_opt
+            self.global_params = None
+        self._broadcast(range(C), 0.0)
+        if self.clock is not None:
+            self.queue.push(CloudDeadline(self.clock, 1))
+        if self.mobility is not None and self.migrate_every is not None:
+            self.queue.push(MobilityTick(self.migrate_every, 1))
+
+    # ---- event dispatch ------------------------------------------------
+    def handle(self, ev) -> Optional[Dict]:
+        """Process one event; returns the merge record when the event
+        closed a cloud round, else None."""
+        self.now = ev.t
+        self.event_log.append(_log_entry(ev))
+        if isinstance(ev, LocalStepDone):
+            return self._on_local_done(ev)
+        if isinstance(ev, UplinkArrived):
+            return self._on_uplink(ev)
+        if isinstance(ev, BackhaulArrived):
+            return self._on_backhaul(ev)
+        if isinstance(ev, CloudDeadline):
+            return self._on_deadline(ev)
+        if isinstance(ev, EdgeFlush):
+            return self._on_flush(ev)
+        if isinstance(ev, MobilityTick):
+            return self._on_mobility(ev)
+        if isinstance(ev, PodMigration):
+            return self._on_migration(ev)
+        raise TypeError(f"unknown event {ev!r}")
+
+    # ---- vehicle lifecycle ---------------------------------------------
+    def _broadcast(self, vehicles, t: float) -> None:
+        ids = [i for i in vehicles if self.state[i] == "idle"]
+        if not ids:
+            return
+        if self.program is not None:
+            import jax.numpy as jnp
+            mask = np.zeros(self.C, bool)
+            mask[ids] = True
+            m = jnp.asarray(mask)
+            self.client_params = self.program.assign_rows(
+                self.client_params, m, self.global_params)
+            self.base_params = self.program.assign_rows(
+                self.base_params, m, self.global_params)
+        for i in ids:
+            self.base_version[i] = self.version
+            self.base_time[i] = t
+            self.state[i] = "computing"
+            self._wave_open.add(i)
+            dt = self.compute.time_s(self.topo.vehicles[i], self.rng)
+            self.queue.push(LocalStepDone(t + dt, i))
+
+    def _run_wave(self) -> None:
+        members = sorted(self._wave_open)
+        self._wave_open.clear()
+        w = self.wave_count
+        self.wave_count += 1
+        if self.program is None:
+            return
+        # The wave always runs the full [C]-stacked vmapped computation
+        # and masks non-members out afterwards: fixed shapes (one jit
+        # trace) and, in the synchronous schedule where every wave is the
+        # whole fleet, bit-identity with the fused round. The price is
+        # O(waves * C) local steps in async mode — discarded rows for
+        # idle/straggling vehicles. Gathering members into padded
+        # buckets would trade that for per-bucket retraces; see the
+        # ROADMAP async item.
+        import jax
+        import jax.numpy as jnp
+        batches = self._batches_fn(w)
+        self._key, sub = jax.random.split(self._key)
+        params, opts, metrics = self.program.local_all(
+            self.client_params, self.client_opt, batches)
+        d = self.program.deltas(params, self.base_params)
+        decoded, new_res = self.program.roundtrip(d, self.residual, sub)
+        mask = np.zeros(self.C, bool)
+        mask[members] = True
+        m = jnp.asarray(mask)
+        self.client_params = self.program.select_rows(
+            params, self.client_params, m)
+        self.client_opt = self.program.select_rows(
+            opts, self.client_opt, m)
+        self.residual = self.program.select_rows(
+            new_res, self.residual, m)
+        for i in members:
+            self._delta[i] = jax.tree.map(lambda x, _i=i: x[_i], decoded)
+        for k, v in metrics.items():
+            arr = np.asarray(v)
+            buf = self.last_metrics.setdefault(
+                k, np.full(arr.shape, np.nan, np.float64))
+            buf[members] = arr[members]
+
+    def _on_local_done(self, ev: LocalStepDone) -> None:
+        i = ev.vehicle
+        if i in self._wave_open:
+            self._run_wave()
+        self.state[i] = "uplink"
+        dt = t_uplink(self.bytes_per_client, self.topo.vehicles[i])
+        self.queue.push(UplinkArrived(ev.t + dt, i, self.bytes_per_client))
+        return None
+
+    # ---- edge tier ------------------------------------------------------
+    def _on_uplink(self, ev: UplinkArrived) -> None:
+        i = ev.vehicle
+        self.bytes_up += ev.nbytes
+        self.state[i] = "idle"
+        e = int(self.topo.client_edge[i])
+        if any(b.vehicle == i for b in self.edge_buffers[e]):
+            # a fast vehicle lapped the pod's flush timer: forward the
+            # current partial first so one commit never carries the same
+            # member twice (which would double its aggregation weight)
+            self._commit(e, ev.t)
+        self.edge_buffers[e].append(_Buffered(
+            i, self._delta[i], float(self.client_w[i]),
+            int(self.base_version[i]), float(self.base_time[i])))
+        return self._edge_check(e, ev.t)
+
+    def _edge_check(self, e: int, t: float) -> None:
+        """Commit when every current member has arrived; otherwise (async
+        only) arm the flush timer so stragglers cannot gate the pod."""
+        buf = self.edge_buffers[e]
+        if not buf:
+            return None
+        have = {b.vehicle for b in buf}
+        if set(self.topo.edges[e]).issubset(have):
+            self._commit(e, t)
+        elif self.flush_every is not None and len(buf) == 1:
+            self.flush_gen[e] += 1
+            self.queue.push(EdgeFlush(t + self.flush_every, e,
+                                      self.flush_gen[e]))
+        return None
+
+    def _on_flush(self, ev: EdgeFlush) -> None:
+        if ev.gen == self.flush_gen[ev.edge] and \
+                self.edge_buffers[ev.edge]:
+            self._commit(ev.edge, ev.t)
+        return None
+
+    def _commit(self, e: int, t: float) -> None:
+        entries = self.edge_buffers[e]
+        self.edge_buffers[e] = []
+        self.flush_gen[e] += 1          # invalidate any armed flush
+        if len({b.vehicle for b in entries}) != len(entries):
+            raise RuntimeError(
+                f"edge pod {e} commit carries a duplicate member — the "
+                f"weighted-mean invariant would break: {entries}")
+        pos = {v: k for k, v in enumerate(self.topo.edges[e])}
+        entries.sort(key=lambda b: pos.get(b.vehicle, self.C + b.vehicle))
+        partial, weight = None, float(sum(b.weight for b in entries))
+        if self.program is not None:
+            import jax
+            import jax.numpy as jnp
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[b.delta for b in entries])
+            w_m = jnp.asarray([b.weight for b in entries], jnp.float32)
+            partial, weight = self.program.commit(stacked, w_m)
+        nbytes = int(self.edge_nbytes_fn(len(entries)))
+        cid = self._next_commit
+        self._next_commit += 1
+        self.commits[cid] = _Commit(
+            partial, weight, tuple(b.vehicle for b in entries),
+            min(b.base_version for b in entries),
+            min(b.base_time for b in entries), nbytes, e, t)
+        dt = nbytes / self.topo.backhaul_bw + self.topo.backhaul_latency
+        self.queue.push(BackhaulArrived(t + dt, e, cid))
+
+    # ---- cloud tier -----------------------------------------------------
+    def _on_backhaul(self, ev: BackhaulArrived) -> Optional[Dict]:
+        c = self.commits[ev.commit_id]
+        c.t_arrive = ev.t
+        self.bytes_backhaul += c.nbytes
+        self.cloud_buffer.append(ev.commit_id)
+        if self.clock is None:
+            covered = sum(len(self.commits[i].vehicles)
+                          for i in self.cloud_buffer)
+            if covered == self.C:       # the synchronous barrier
+                return self._merge(ev.t)
+        return None
+
+    def _on_deadline(self, ev: CloudDeadline) -> Optional[Dict]:
+        self.queue.push(CloudDeadline(ev.t + self.clock, ev.index + 1))
+        if self.cloud_buffer:
+            return self._merge(ev.t)
+        self._broadcast(range(self.C), ev.t)    # restart idle vehicles
+        return None
+
+    def _merge(self, t: float) -> Dict:
+        ids = sorted(self.cloud_buffer,
+                     key=lambda i: (self.commits[i].edge, i))
+        self.cloud_buffer = []
+        commits = [self.commits.pop(i) for i in ids]
+        from repro.comm.hierarchy import staleness_weights
+        if self.clock is None:
+            stale = np.ones(len(commits), np.float32)
+            lags = np.zeros(len(commits))
+        else:
+            observed = np.array([c.t_arrive - c.base_time
+                                 for c in commits])
+            stale = staleness_weights(observed, self.clock,
+                                      decay=self.decay)
+            lags = np.maximum(0.0, np.ceil(observed / self.clock) - 1.0)
+        if self.program is not None:
+            import jax.numpy as jnp
+            self.global_params = self.program.merge(
+                self.global_params,
+                tuple(c.partial for c in commits),
+                tuple(c.weight for c in commits),
+                jnp.asarray(stale))
+        self.version += 1
+        covered = sum(len(c.vehicles) for c in commits)
+        metrics: Dict = {
+            "t_sim": float(t),
+            "round_version": float(self.version),
+            "n_commits": float(len(commits)),
+            "n_vehicles": float(covered),
+            "staleness_min": float(stale.min()),
+            "staleness_mean": float(stale.mean()),
+            "lag_max": float(lags.max()),
+            "comm_bytes_up": float(self.bytes_up - self._bytes_up_mark),
+            "comm_bytes_backhaul": float(
+                self.bytes_backhaul - self._bytes_backhaul_mark),
+        }
+        self._bytes_up_mark = self.bytes_up
+        self._bytes_backhaul_mark = self.bytes_backhaul
+        for k, v in self.last_metrics.items():
+            metrics[k] = v.copy()
+        self._broadcast(range(self.C), t)
+        return metrics
+
+    # ---- mobility -------------------------------------------------------
+    def _on_mobility(self, ev: MobilityTick) -> None:
+        self.queue.push(MobilityTick(ev.t + self.migrate_every,
+                                     ev.index + 1))
+        for i in range(self.C):
+            self.mobility.advance(i, self.rng)
+            cur = int(self.topo.client_edge[i])
+            if self.mobility.out_of_range(i, cur):
+                dst = self.mobility.nearest_edge(i)
+                if dst != cur and len(self.topo.edges[cur]) > 1:
+                    self.queue.push(PodMigration(ev.t, i, cur, dst))
+        return None
+
+    def _on_migration(self, ev: PodMigration) -> None:
+        i = ev.vehicle
+        cur = int(self.topo.client_edge[i])
+        if cur != ev.src or len(self.topo.edges[cur]) == 1:
+            return None                 # a same-tick migration got there first
+        self.topo = self.topo.reassign(i, ev.dst)
+        self.n_migrations += 1
+        # membership changed: either pod may now be complete
+        self._edge_check(ev.src, ev.t)
+        self._edge_check(ev.dst, ev.t)
+        return None
+
+
+# ---- timing-only schedule exploration (dryrun) ---------------------------
+
+
+def simulate_schedule(topology: Topology, *, bytes_per_client: int = 2 ** 21,
+                      clock: Optional[float] = None, decay: float = 0.5,
+                      compute_flops: float = 4.7e11, jitter: float = 0.0,
+                      migrate_every: Optional[float] = None,
+                      mobility: Optional[MobilitySpec] = None,
+                      rounds: int = 10, seed: int = 0,
+                      max_events: int = 1_000_000) -> Dict:
+    """Run the event schedule with no tensors — merge cadence, observed
+    staleness, and migration counts for a topology + clock, in
+    microseconds of host time. Backs ``launch/dryrun.py --async-clock``."""
+    if mobility is None and migrate_every is not None:
+        mobility = MobilitySpec(seed=seed)
+    engine = AsyncHierFLEngine(
+        topology, bytes_per_client, lambda m: bytes_per_client,
+        compute=ComputeModel(flops=compute_flops, jitter=jitter),
+        clock=clock, decay=decay, mobility=mobility,
+        migrate_every=migrate_every, seed=seed)
+    engine.reset()
+    merges: List[Dict] = []
+    for _ in range(max_events):
+        if len(merges) >= rounds:
+            break
+        ev = engine.queue.pop()
+        if ev is None:
+            raise RuntimeError(
+                "event queue drained before the schedule finished — the "
+                "fabric deadlocked (a pod is waiting on a member that "
+                "will never arrive)")
+        rec = engine.handle(ev)
+        if rec is not None:
+            merges.append(rec)
+    if len(merges) < rounds:
+        raise RuntimeError(
+            f"schedule produced only {len(merges)} of {rounds} merges "
+            f"within max_events={max_events} — clock too small for the "
+            f"fabric's arrival rate?")
+    return {
+        "merges": merges,
+        "sim_time_s": engine.now,
+        "mean_period_s": (engine.now / len(merges)) if merges else math.inf,
+        "mean_staleness": float(np.mean(
+            [m["staleness_mean"] for m in merges])) if merges else 1.0,
+        "n_migrations": engine.n_migrations,
+        "events": len(engine.event_log),
+        "event_log": engine.event_log,
+    }

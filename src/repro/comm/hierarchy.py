@@ -14,6 +14,13 @@ math on different fabrics.
 ``make_hier_round`` is the full round the ``hier_fl`` strategy jits:
 vmapped local steps, per-client codec roundtrip with error feedback,
 edge partial averages, staleness-aware cloud merge, broadcast.
+
+The aggregation is also available split into its event-time halves —
+per-pod :func:`edge_commit` (an edge partially averages whatever
+members have arrived) and clocked :func:`cloud_merge_at` (the cloud
+merges the commits it holds at a deadline, with **observed** staleness
+multipliers) — which the discrete-event engine in
+:mod:`repro.comm.events` jits piecewise instead of as one fused round.
 """
 from __future__ import annotations
 
@@ -27,16 +34,39 @@ from repro.comm.codecs import Codec, roundtrip_stacked
 from repro.comm.topology import Topology
 
 
+def edge_commit(member_stacked, member_weights: jnp.ndarray):
+    """One pod's partial aggregate: member-stacked [M, ...] tree + [M]
+    weights -> (float32 partial-average tree, scalar total weight).
+
+    This is the per-pod piece of :func:`edge_aggregate`, split out so the
+    event engine (:mod:`repro.comm.events`) can jit it per pod — an edge
+    commits whatever members have arrived, without waiting for the rest
+    of the fleet. The returned weight is the members' total, so a
+    downstream weighted merge reproduces the global weighted mean.
+    """
+    wm = jnp.asarray(member_weights, jnp.float32)
+
+    def part(x):
+        xm = x.astype(jnp.float32)
+        wb = wm.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (xm * wb).sum(axis=0) / wm.sum()
+
+    return jax.tree.map(part, member_stacked), wm.sum()
+
+
 def edge_aggregate(stacked, weights: Optional[jnp.ndarray],
-                   topology: Topology):
+                   topology: Topology, *, validated: bool = False):
     """Client-stacked [C, ...] tree -> (edge-stacked [E, ...] tree,
     [E] edge weights).
 
     Each edge's partial average is weighted by its members' ``weights``
     (uniform when None); the returned edge weight is the members' total,
     so a downstream weighted merge reproduces the global weighted mean.
+    ``validated=True`` skips the host-side per-pod degenerate-weight
+    check — pass it when :meth:`Topology.validate_pod_weights` already
+    ran at build time (the round builders hoist it out of the per-call
+    path).
     """
-    from repro.core.fedavg import check_weights
     C = jax.tree.leaves(stacked)[0].shape[0]
     if C != topology.n_clients:
         raise ValueError(
@@ -44,30 +74,18 @@ def edge_aggregate(stacked, weights: Optional[jnp.ndarray],
             f"{topology.n_clients} vehicles")
     w = jnp.ones((C,), jnp.float32) if weights is None \
         else jnp.asarray(weights, jnp.float32)
+    if weights is not None and not validated:
+        topology.validate_pod_weights(w)
 
-    member_idx = [np.asarray(members, np.int32)
-                  for members in topology.edges]
-    for e, idx in enumerate(member_idx):
-        # a pod whose members sum to zero weight would 0/0 its partial
-        # average — the global-sum check upstream cannot see this
-        try:
-            check_weights(w[idx])
-        except ValueError as err:
-            raise ValueError(
-                f"edge pod {e} (vehicles {topology.edges[e]}): {err}"
-            ) from None
+    member_idx = topology.member_indices
+    commits = [edge_commit(jax.tree.map(lambda x: x[idx], stacked), w[idx])
+               for idx in member_idx]
 
-    def per_edge(x):
-        parts = []
-        for idx in member_idx:
-            wm = w[idx]
-            xm = x[idx].astype(jnp.float32)
-            wb = wm.reshape((-1,) + (1,) * (x.ndim - 1))
-            parts.append((xm * wb).sum(axis=0) / wm.sum())
-        return jnp.stack(parts).astype(x.dtype)
-
-    edge_w = jnp.stack([w[idx].sum() for idx in member_idx])
-    return jax.tree.map(per_edge, stacked), edge_w
+    edge_tree = jax.tree.map(
+        lambda leaf, *parts: jnp.stack(parts).astype(leaf.dtype), stacked,
+        *[c[0] for c in commits])
+    edge_w = jnp.stack([c[1] for c in commits])
+    return edge_tree, edge_w
 
 
 def cloud_merge(edge_stacked, edge_weights: jnp.ndarray,
@@ -88,6 +106,28 @@ def cloud_merge(edge_stacked, edge_weights: jnp.ndarray,
                 / w.sum()).astype(x.dtype)
 
     return jax.tree.map(merge, edge_stacked)
+
+
+def cloud_merge_at(global_params, partials, partial_weights,
+                   staleness: Optional[jnp.ndarray] = None):
+    """The clocked half of the split round: merge committed edge
+    partials into the current global params.
+
+    ``partials``: sequence of float32 partial-average trees from
+    :func:`edge_commit`; ``partial_weights``: their scalar weights;
+    ``staleness``: optional [len(partials)] multipliers from the
+    **observed** lag of each commit (1 = landed within the current
+    deadline window). Returns the new global params — the merged delta
+    applied on top of ``global_params``.
+    """
+    edge_tree = jax.tree.map(
+        lambda g, *parts: jnp.stack(parts).astype(g.dtype), global_params,
+        *partials)
+    merged = cloud_merge(edge_tree, jnp.stack(
+        [jnp.asarray(w, jnp.float32) for w in partial_weights]), staleness)
+    return jax.tree.map(
+        lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype),
+        global_params, merged)
 
 
 def hierarchical_mean(stacked, weights, topology: Topology,
@@ -139,6 +179,11 @@ def make_hier_round(cfg, shape, optimizer, topology: Topology,
 
     step = make_train_step(cfg, shape, optimizer, remat=remat)
     w = None if client_weights is None else check_weights(client_weights)
+    if w is not None:
+        # per-pod degenerate-weight check, hoisted to build time: the
+        # weights are static for the round fn's lifetime, so the per-call
+        # path below runs with validated=True
+        topology.validate_pod_weights(w)
     stale = None if staleness is None else \
         jnp.asarray(staleness, jnp.float32)
     local_train = make_local_train(step)
@@ -156,7 +201,8 @@ def make_hier_round(cfg, shape, optimizer, topology: Topology,
             lambda after, g: after.astype(jnp.float32) - g[None], params,
             global_params)
         decoded, residual = roundtrip_stacked(codec, deltas, residual, key)
-        edge_tree, edge_w = edge_aggregate(decoded, w, topology)
+        edge_tree, edge_w = edge_aggregate(decoded, w, topology,
+                                           validated=True)
         merged = cloud_merge(edge_tree, edge_w, stale)
         new_global = jax.tree.map(
             lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype),

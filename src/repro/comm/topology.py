@@ -37,7 +37,15 @@ DEFAULT_BACKHAUL_LATENCY = 0.01
 
 @dataclasses.dataclass(frozen=True)
 class Topology:
-    """Vehicles grouped under edge pods, with link bandwidths."""
+    """Vehicles grouped under edge pods, with link bandwidths.
+
+    Instances are immutable snapshots; the *fleet assignment over time*
+    is mutable through :meth:`reassign`, which returns the successor
+    topology with one vehicle moved between pods (the event engine in
+    :mod:`repro.comm.events` swaps its live topology on every
+    ``PodMigration`` event, so ``client_edge`` and the cached
+    ``member_indices`` are recomputed for the new assignment).
+    """
 
     vehicles: Tuple[Vehicle, ...]
     #: per-edge tuple of indices into ``vehicles``
@@ -55,6 +63,16 @@ class Topology:
             raise ValueError("every edge pod needs at least one vehicle")
         if self.backhaul_bw <= 0:
             raise ValueError("backhaul_bw must be positive")
+        # hoisted out of the aggregation hot path: member index arrays and
+        # the client->edge map are built once per topology, not per round
+        member_idx = tuple(np.asarray(members, np.int32)
+                           for members in self.edges)
+        ce = np.empty(len(self.vehicles), np.int32)
+        for e, idx in enumerate(member_idx):
+            ce[idx] = e
+        ce.setflags(write=False)
+        object.__setattr__(self, "_member_indices", member_idx)
+        object.__setattr__(self, "_client_edge", ce)
 
     # ---- shape -----------------------------------------------------------
     @property
@@ -66,12 +84,60 @@ class Topology:
         return len(self.edges)
 
     @property
+    def member_indices(self) -> Tuple[np.ndarray, ...]:
+        """Per-edge int32 index arrays into the client axis (cached)."""
+        return self._member_indices
+
+    @property
     def client_edge(self) -> np.ndarray:
-        """[C] edge index of each client (client i == vehicles[i])."""
-        out = np.empty(self.n_clients, np.int32)
-        for e, members in enumerate(self.edges):
-            out[list(members)] = e
-        return out
+        """[C] edge index of each client (client i == vehicles[i]);
+        cached and read-only."""
+        return self._client_edge
+
+    # ---- validation ------------------------------------------------------
+    def validate_pod_weights(self, weights) -> None:
+        """Raise if any pod's member weights are degenerate (a pod whose
+        members sum to zero weight would 0/0 its partial average — the
+        global-sum check upstream cannot see this). Host-side numpy; call
+        once at round-build time, not per invocation. Traced weights are
+        skipped — the caller must validate them at build time."""
+        import jax
+
+        from repro.core.fedavg import check_weights
+        try:
+            w = np.asarray(weights)
+        except jax.errors.ConcretizationTypeError:
+            return
+        for e, idx in enumerate(self.member_indices):
+            try:
+                check_weights(w[idx])
+            except ValueError as err:
+                raise ValueError(
+                    f"edge pod {e} (vehicles {self.edges[e]}): {err}"
+                ) from None
+
+    # ---- transitions -----------------------------------------------------
+    def reassign(self, vehicle: int, edge: int) -> "Topology":
+        """The mid-run migration transition: move ``vehicle`` to ``edge``.
+
+        Returns the successor topology (this one is unchanged); the
+        source pod must keep at least one member.
+        """
+        if not 0 <= vehicle < self.n_clients:
+            raise ValueError(f"no vehicle {vehicle} in this topology")
+        if not 0 <= edge < self.n_edges:
+            raise ValueError(f"no edge pod {edge} in this topology")
+        src = int(self.client_edge[vehicle])
+        if src == edge:
+            return self
+        if len(self.edges[src]) == 1:
+            raise ValueError(
+                f"cannot migrate vehicle {vehicle}: it is the last member "
+                f"of edge pod {src}")
+        edges = [tuple(i for i in members if i != vehicle)
+                 for members in self.edges]
+        edges[edge] = edges[edge] + (vehicle,)
+        return dataclasses.replace(self, edges=tuple(edges))
 
     # ---- constructors ----------------------------------------------------
     @classmethod

@@ -155,7 +155,39 @@ def main():
     ap.add_argument("--no-seq-shard", action="store_true")
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--async-clock", type=float, default=None,
+                    help="dry-run the async event schedule (timing only, "
+                         "no tensors): cloud merge period in simulated "
+                         "seconds; 0 = infinite deadline (sync)")
+    ap.add_argument("--migrate-every", type=float, default=None,
+                    help="async schedule dry-run: simulated seconds per "
+                         "DTMC mobility step")
+    ap.add_argument("--compute-jitter", type=float, default=0.0,
+                    help="async schedule dry-run: per-round uniform "
+                         "compute slowdown fraction")
+    ap.add_argument("--topology", default="2@nano*2,agx*2",
+                    help="async schedule dry-run topology spec")
     args = ap.parse_args()
+
+    if args.async_clock is not None:
+        # timing-only event-schedule exploration: no params, no lowering —
+        # the event engine runs with program=None
+        from repro.comm.events import simulate_schedule
+        from repro.comm.topology import parse_topology
+        topo = parse_topology(args.topology)
+        stats = simulate_schedule(
+            topo, clock=args.async_clock or None,
+            jitter=args.compute_jitter,
+            migrate_every=args.migrate_every)
+        print(f"[dryrun] async schedule {args.topology}: "
+              f"{len(stats['merges'])} merges in "
+              f"{stats['sim_time_s']:.3f}s simulated "
+              f"(period {stats['mean_period_s']:.3f}s, mean staleness "
+              f"{stats['mean_staleness']:.3f}, "
+              f"{stats['n_migrations']} migrations, "
+              f"{stats['events']} events)")
+        if not (args.arch or args.all):
+            return
 
     archs = ASSIGNED if (args.all or not args.arch) else [args.arch.replace("-", "_").replace(".", "_")]
     shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]

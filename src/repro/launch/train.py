@@ -19,7 +19,7 @@ def main():
     ap.add_argument("--shape", default=None, help="named shape or 'SEQxBATCH'")
     ap.add_argument("--strategy", default="pipeline",
                     choices=["tensor", "pipeline", "fedavg", "fl_pipeline",
-                             "swift_pipeline", "hier_fl"])
+                             "swift_pipeline", "hier_fl", "async_hier_fl"])
     ap.add_argument("--steps", type=int, default=50,
                     help="train steps (FL strategies: rounds)")
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -37,7 +37,20 @@ def main():
                     help="hier_fl uplink codec (update compression)")
     ap.add_argument("--async-decay", type=float, default=None,
                     help="hier_fl: staleness decay per missed round "
-                         "deadline (enables the async merge)")
+                         "deadline (enables the predicted-staleness "
+                         "merge); async_hier_fl: the observed-staleness "
+                         "decay (default 0.5)")
+    ap.add_argument("--async-clock", type=float, default=None,
+                    help="async_hier_fl: cloud merge period in simulated "
+                         "seconds (default: infinite deadline — the "
+                         "synchronous special case)")
+    ap.add_argument("--migrate-every", type=float, default=None,
+                    help="async_hier_fl: simulated seconds per mobility "
+                         "step; vehicles migrate between edge pods when "
+                         "they leave their pod's comm radius")
+    ap.add_argument("--compute-jitter", type=float, default=0.0,
+                    help="async_hier_fl: per-(vehicle, round) uniform "
+                         "compute slowdown fraction")
     ap.add_argument("--depart", default=None, metavar="STEP:VID",
                     help="swift_pipeline: simulate vehicle VID departing "
                          "after step STEP (live template repartition)")
@@ -54,7 +67,8 @@ def main():
     from repro.recovery.backup import EdgeBackup
 
     options = {}
-    fl = args.strategy in ("fedavg", "fl_pipeline", "hier_fl")
+    fl = args.strategy in ("fedavg", "fl_pipeline", "hier_fl",
+                           "async_hier_fl")
     if fl:
         options["local_steps"] = args.local_steps
     if args.strategy == "swift_pipeline":
@@ -62,6 +76,13 @@ def main():
     if args.strategy == "hier_fl":
         options.update(topology=args.topology, codec=args.codec,
                        async_decay=args.async_decay)
+    if args.strategy == "async_hier_fl":
+        options.update(topology=args.topology, codec=args.codec,
+                       clock=args.async_clock,
+                       migrate_every=args.migrate_every,
+                       compute_jitter=args.compute_jitter)
+        if args.async_decay is not None:
+            options["decay"] = args.async_decay
     session = Session(
         args.arch, full=args.full, shape=args.shape,
         mesh=MeshSpec.parse(args.mesh, devices=args.devices or None),

@@ -2,11 +2,18 @@
 
 ``train_loop`` drives any jitted (params, opt, batch) -> (params, opt,
 metrics) step; ``fl_loop`` drives hierarchical FedAvg rounds over
-per-client datasets (paper Fig. 1 training procedure) using core/fedavg.
+per-client datasets (paper Fig. 1 training procedure) using core/fedavg;
+``async_fl_loop`` drives the discrete-event engine of
+:mod:`repro.comm.events` — the loop pops timestamped events and the
+events drive the jitted compute, inverting ``fl_loop``'s control flow.
 
-Both share a :class:`LoopHooks` struct for logging, periodic edge backup,
+All share a :class:`LoopHooks` struct for logging, periodic edge backup,
 and checkpointing — the single place ``repro.api.Session`` (and any other
 driver) plugs side effects into the hot loop.
+
+History entries keep scalar metrics as floats; non-scalar (per-client)
+metrics are recorded verbatim under a ``per_client/`` prefix instead of
+being silently averaged into misleading scalars.
 """
 from __future__ import annotations
 
@@ -22,6 +29,30 @@ from repro.train.checkpoint import save as _save_checkpoint
 
 def _identity(tree):
     return tree
+
+
+def _split_metrics(metrics: Dict):
+    """(scalars as floats, non-scalars under a ``per_client/`` prefix).
+
+    Arrays are kept whole instead of ``np.mean``-flattened: a per-client
+    loss vector averaged into one float silently hides stragglers and
+    divergent clients."""
+    scalars, arrays = {}, {}
+    for k, v in metrics.items():
+        if np.ndim(v) == 0:
+            scalars[k] = float(v)
+        else:
+            arrays[f"per_client/{k}"] = np.asarray(v)
+    return scalars, arrays
+
+
+def _fmt_metrics(scalars: Dict, arrays: Dict) -> str:
+    """Log-line rendering: scalars verbatim; arrays as explicitly-labeled
+    means so nothing is passed off as a scalar metric."""
+    parts = [f"{k}={v:.4f}" for k, v in scalars.items()]
+    parts += [f"{k.split('/', 1)[1]}[mean]={np.nanmean(v):.4f}"
+              for k, v in arrays.items()]
+    return " ".join(parts)
 
 
 @dataclasses.dataclass
@@ -53,6 +84,10 @@ class LoopHooks:
     #: (``comm_bytes_up``, ``comm_bytes_backhaul``, ``sim_round_s`` from
     #: the topology's link models)
     on_round: Optional[Callable] = None
+    #: event-time callback (event) -> None, fired for every event the
+    #: ``async_fl_loop`` engine pops (LocalStepDone / UplinkArrived /
+    #: BackhaulArrived / CloudDeadline / PodMigration / ...)
+    on_event: Optional[Callable] = None
     #: live dynamic repartitioning hook (paper §4.2 executed in-loop):
     #: (idx, step_fn, params, opt) -> None to keep going, or a replacement
     #: (step_fn, params, opt) after a template switch
@@ -95,12 +130,11 @@ def train_loop(step_fn: Callable, params, opt_state,
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         hooks.after_step(i, params, metrics)
         if hooks.should_log(i):
-            m = {k: float(v) for k, v in metrics.items()
-                 if np.ndim(v) == 0}
-            hist.append(dict(m, step=i + 1))
+            m, per_client = _split_metrics(metrics)
+            hist.append(dict(m, **per_client, step=i + 1))
             rate = (i + 1) / (time.time() - t0)
             hooks.log_fn(f"[train] step {i+1:5d} "
-                         + " ".join(f"{k}={v:.4f}" for k, v in m.items())
+                         + _fmt_metrics(m, per_client)
                          + f" ({rate:.2f} it/s)")
         step_fn, params, opt_state = hooks.maybe_repartition(
             i, step_fn, params, opt_state)
@@ -125,11 +159,74 @@ def fl_loop(fl_round: Callable, client_params, client_opt,
         if hooks.on_round is not None:
             hooks.on_round(r, metrics)
         if hooks.should_log(r):
-            m = {k: float(np.mean(v)) for k, v in metrics.items()}
-            hist.append(dict(m, round=r + 1))
+            m, per_client = _split_metrics(metrics)
+            hist.append(dict(m, **per_client, round=r + 1))
             hooks.log_fn(f"[fl] round {r+1:4d} "
-                         + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
+                         + _fmt_metrics(m, per_client))
         fl_round, client_params, client_opt = hooks.maybe_repartition(
             r, fl_round, client_params, client_opt)
     return {"client_params": client_params, "client_opt": client_opt,
             "history": hist, "step_fn": fl_round}
+
+
+def async_fl_loop(engine, client_params, client_opt,
+                  round_batches_fn: Callable, *, rounds: int,
+                  hooks: Optional[LoopHooks] = None,
+                  until_time: Optional[float] = None,
+                  max_events: int = 2_000_000) -> Dict:
+    """Drive an :class:`repro.comm.events.AsyncHierFLEngine` until
+    ``rounds`` cloud merges (or simulated ``until_time``) have happened.
+
+    This inverts ``fl_loop``'s control flow: the loop pops timestamped
+    events off the engine's priority queue and each event drives the
+    jitted compute it stands for (local steps at ``LocalStepDone``, a
+    pod's partial aggregate at commit, the staleness-weighted merge at
+    ``CloudDeadline``). ``round_batches_fn(wave_idx)`` supplies
+    client-stacked batches exactly like ``fl_loop``'s
+    ``round_batches_fn`` — in the synchronous special case (no merge
+    clock) waves and rounds coincide.
+
+    One history entry per cloud merge; ``hooks.on_event`` sees every
+    event, ``hooks.on_round`` every merge.
+    """
+    hooks = hooks or LoopHooks(log_every=1)
+    engine.reset(client_params, client_opt, round_batches_fn)
+    hist = []
+    merges = 0
+    for _ in range(max_events):
+        if merges >= rounds:
+            break
+        if until_time is not None and engine.queue.peek_t() > until_time:
+            break
+        ev = engine.queue.pop()
+        if ev is None:
+            raise RuntimeError(
+                f"event queue drained after {merges} merges "
+                f"(wanted {rounds}) — the fabric deadlocked; with "
+                f"clock=None every pod must eventually hear from all "
+                f"its members")
+        rec = engine.handle(ev)
+        if hooks.on_event is not None:
+            hooks.on_event(ev)
+        if rec is None:
+            continue
+        hooks.after_step(merges, engine.client_params, rec)
+        if hooks.on_round is not None:
+            hooks.on_round(merges, rec)
+        if hooks.should_log(merges):
+            m, per_client = _split_metrics(rec)
+            hist.append(dict(m, **per_client, round=merges + 1))
+            hooks.log_fn(f"[async-fl] merge {merges+1:4d} "
+                         f"t={engine.now:9.3f}s "
+                         + _fmt_metrics(m, per_client))
+        merges += 1
+    else:
+        raise RuntimeError(
+            f"async_fl_loop exceeded max_events={max_events} before "
+            f"{rounds} merges — runaway event schedule")
+    return {"client_params": engine.client_params,
+            "client_opt": engine.client_opt,
+            "global_params": engine.global_params,
+            "history": hist, "event_log": engine.event_log,
+            "sim_time_s": engine.now, "merges": merges,
+            "step_fn": engine}

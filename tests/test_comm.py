@@ -243,7 +243,13 @@ def test_hier_fl_trains_and_reports_wire_metrics():
     ses = _session(codec="int8")
     out = ses.run(2, hooks=hooks)
     assert len(out["history"]) == 2
-    assert all(np.isfinite(h["loss"]) for h in out["history"])
+    # per-client losses are recorded whole under per_client/, not
+    # np.mean-flattened into a misleading scalar
+    assert all(np.isfinite(h["per_client/loss"]).all()
+               for h in out["history"])
+    assert all(h["per_client/loss"].shape == (TOPO.n_clients,)
+               for h in out["history"])
+    assert all("loss" not in h for h in out["history"])
     assert [r for r, _ in seen] == [0, 1]
     stats = ses.strategy.comm_stats
     for _, m in seen:
