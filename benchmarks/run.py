@@ -10,6 +10,8 @@
                                            (writes BENCH_comm.json)
   §3.1 async event-time engine          -> async_bench
                                            (writes BENCH_async.json)
+  Fig. 2 serving tier (paged KV +       -> serving_bench
+         continuous batching)              (writes BENCH_serving.json)
   Fig. 6(a,b) pipeline execution time   -> pipeline_exec
   Fig. 7(a,b) + Table 2 FHDP            -> fhdp_throughput
   Fig. 8(a) FL accuracy                 -> fl_accuracy
@@ -40,7 +42,8 @@ def main() -> None:
     from benchmarks import (async_bench, attention_bench, comm_bench,
                             distill_quality, fhdp_throughput, fl_accuracy,
                             pipeline_exec, recovery_bench,
-                            repartition_latency, roofline, swift_opt)
+                            repartition_latency, roofline, serving_bench,
+                            swift_opt)
 
     agent_holder = {}
 
@@ -59,6 +62,7 @@ def main() -> None:
         ("attention", lambda: attention_bench.run(quick=args.quick)),
         ("comm", lambda: comm_bench.run(quick=args.quick)),
         ("async", lambda: async_bench.run(quick=args.quick)),
+        ("serving", lambda: serving_bench.run(quick=args.quick)),
         ("fhdp_throughput", lambda: fhdp_throughput.run(quick=args.quick)),
         ("fl_accuracy", lambda: fl_accuracy.run(quick=args.quick)),
         ("distill_quality", lambda: distill_quality.run(quick=args.quick)),

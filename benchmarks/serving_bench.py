@@ -1,0 +1,209 @@
+"""Serving-tier throughput/latency bench (paged KV + continuous batching).
+
+Pre-trains the smoke AD-LLM for a few dozen SGD steps on a structured
+synthetic token stream (so the served model has peaked, deployment-like
+logits rather than flat random-init ones), then pushes the same bimodal
+fleet request trace — short control-style replies with a heavy tail of
+long plans, arrivals delayed by each vehicle's V2X uplink — through three
+serving modes:
+
+  ``continuous_fp32``  paged KV, lanes refilled as requests finish
+  ``rebatch_fp32``     naive static rebatching: waves admitted only when
+                       every lane is empty (the strawman the speedup
+                       gate compares against)
+  ``continuous_int8``  continuous batching over int8-quantized KV pools
+
+plus a teacher-forced int8-vs-fp32 cache replay that isolates the
+per-position greedy flip rate of cache quantization (a scheduler-level
+stream diff would let one early flip cascade).
+
+Writes schema-gated ``BENCH_serving.json`` (fifth perf-trajectory entry;
+``scripts/validate_bench.py`` enforces the >=1.5x warm-throughput win of
+continuous batching over rebatching, identical greedy streams between
+the two policies, and <=2% teacher-forced int8 greedy disagreement).
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+DEFAULT_OUT = "BENCH_serving.json"
+FLEET = "nano*2,agx*2"
+WORKLOAD = dict(max_context=16, max_prompt=8, block_size=8, slots=4,
+                short_new=(6, 10), long_new=(64, 96), long_frac=0.3)
+
+
+def pretrain(cfg, steps: int, *, lr: float = 0.5, batch: int = 8,
+             seq: int = 16, noise: float = 0.1, seed: int = 1):
+    """Short SGD on the affine stream t+1 = (3t + 7) mod V with label
+    noise — enough structure that the served model predicts confidently.
+    Uses the XLA attention path (kernel_backend off) for speed; the flag
+    is restored before returning."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import blocks as B
+    from repro.models import lm
+
+    params = lm.init(jax.random.PRNGKey(seed), cfg)
+
+    def make_batch(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        t0 = jax.random.randint(k1, (batch, 1), 0, cfg.vocab_size)
+        toks = [t0]
+        for _ in range(seq - 1):
+            toks.append((3 * toks[-1] + 7) % cfg.vocab_size)
+        toks = jnp.concatenate(toks, 1)
+        flip = jax.random.bernoulli(k2, noise, toks.shape)
+        rnd = jax.random.randint(k3, toks.shape, 0, cfg.vocab_size)
+        return jnp.where(flip, rnd, toks)
+
+    def loss_fn(p, toks):
+        logits, _, _ = lm.forward(p, cfg, toks[:, :-1],
+                                  positions=jnp.arange(toks.shape[1] - 1))
+        lp = jax.nn.log_softmax(logits, -1)
+        return -jnp.mean(jnp.take_along_axis(lp, toks[:, 1:, None], -1))
+
+    @jax.jit
+    def step(p, toks):
+        l, g = jax.value_and_grad(loss_fn)(p, toks)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g), l
+
+    was_kernel = B.kernel_backend()
+    B.set_kernel_backend(False)
+    try:
+        key = jax.random.PRNGKey(seed + 1)
+        loss = None
+        for _ in range(steps):
+            key, k = jax.random.split(key)
+            params, loss = step(params, make_batch(k))
+    finally:
+        B.set_kernel_backend(was_kernel)
+    return params, float(loss)
+
+
+def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
+    try:
+        from benchmarks.common import emit
+    except ImportError:          # invoked as `python benchmarks/...py`
+        from common import emit
+    from repro.api.serving import serve_requests
+    from repro.configs import get_config
+    from repro.configs.common import reduced
+    from repro.serve import (generate_fleet_requests, int8_cache_fidelity,
+                             serve_continuous)
+
+    num_requests, pre_steps, warm_passes = (12, 40, 2) if quick \
+        else (16, 60, 3)
+    cfg = reduced(get_config("flad_adllm")).replace(param_dtype="float32")
+    params, pre_loss = pretrain(cfg, pre_steps)
+    print(f"serving: pretrained {pre_steps} steps, loss {pre_loss:.3f}")
+
+    opts = dict(params=params, fleet=FLEET, num_requests=num_requests,
+                warm_passes=warm_passes, **WORKLOAD)
+    modes = []
+    results = {}
+    for name, policy, cache in (("continuous_fp32", "continuous", "fp32"),
+                                ("rebatch_fp32", "rebatch", "fp32"),
+                                ("continuous_int8", "continuous", "int8")):
+        rep = serve_continuous(cfg, policy=policy, cache=cache, **opts)
+        results[name] = rep
+        modes.append({
+            "name": name, "policy": policy, "cache": cache,
+            "requests": rep["requests"],
+            "total_new_tokens": rep["total_new_tokens"],
+            "decode_steps": rep["decode_steps"],
+            "prefills": rep["prefills"],
+            "tokens_per_s": rep["tokens_per_s"],
+            "warm_tokens_per_s": rep["warm_tokens_per_s"],
+            "p50_latency_s": rep["p50_latency_s"],
+            "p99_latency_s": rep["p99_latency_s"],
+            "deadline_hit_rate": rep["deadline_hit_rate"],
+        })
+
+    cont, reb = results["continuous_fp32"], results["rebatch_fp32"]
+    streams_match = cont["sequences"] == reb["sequences"]
+
+    requests = generate_fleet_requests(
+        FLEET, num_requests=num_requests,
+        max_prompt=WORKLOAD["max_prompt"],
+        short_new=WORKLOAD["short_new"], long_new=WORKLOAD["long_new"],
+        long_frac=WORKLOAD["long_frac"], seed=0,
+        vocab_size=cfg.vocab_size)
+    fid = int8_cache_fidelity(cfg, params, requests, cont["sequences"],
+                              block_size=WORKLOAD["block_size"],
+                              max_context=WORKLOAD["max_context"])
+
+    legacy = serve_requests(cfg, batch=WORKLOAD["slots"],
+                            context=WORKLOAD["max_context"],
+                            decode_steps=16, requests=3, params=params,
+                            log_fn=None)
+
+    payload = {
+        "bench": "serving_tier",
+        "schema_version": 1,
+        "arch": cfg.name,
+        "quick": bool(quick),
+        "workload": {
+            "fleet": FLEET,
+            "num_requests": num_requests,
+            "pretrain_steps": pre_steps,
+            "pretrain_loss": pre_loss,
+            "warm_passes": warm_passes,
+            "slots": WORKLOAD["slots"],
+            "block_size": WORKLOAD["block_size"],
+            "max_context": WORKLOAD["max_context"],
+            "max_prompt": WORKLOAD["max_prompt"],
+            "short_new": list(WORKLOAD["short_new"]),
+            "long_new": list(WORKLOAD["long_new"]),
+            "long_frac": WORKLOAD["long_frac"],
+        },
+        "modes": modes,
+        "int8": {
+            "teacher_forced_disagreement": fid["disagreement"],
+            "positions": fid["positions"],
+            "max_logit_drift": fid["max_logit_drift"],
+        },
+        "legacy": {
+            "tokens_per_s": legacy["tokens_per_s"],
+            "warm_tokens_per_s": legacy["warm_tokens_per_s"],
+        },
+        "summary": {
+            "continuous_speedup": (cont["warm_tokens_per_s"]
+                                   / reb["warm_tokens_per_s"]),
+            "decode_step_ratio": (reb["decode_steps"]
+                                  / cont["decode_steps"]),
+            "streams_match": bool(streams_match),
+            "int8_disagreement": fid["disagreement"],
+            "int8_warm_tokens_per_s":
+                results["continuous_int8"]["warm_tokens_per_s"],
+            "p50_latency_improvement": (reb["p50_latency_s"]
+                                        / max(cont["p50_latency_s"],
+                                              1e-9)),
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    s = payload["summary"]
+    for m in modes:
+        emit(f"serving/{m['name']}/warm_tokens_per_s",
+             m["warm_tokens_per_s"],
+             f"decode_steps={m['decode_steps']} "
+             f"p50={m['p50_latency_s']:.3f}s p99={m['p99_latency_s']:.3f}s")
+    print(f"serving: continuous x{s['continuous_speedup']:.2f} warm tok/s "
+          f"vs rebatch (step ratio x{s['decode_step_ratio']:.2f}), int8 "
+          f"disagreement {s['int8_disagreement']:.3%} -> {out}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,10 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.serve --devices 2 --batch 2 --context 16 \
       --decode-steps 4 --requests 1
 
+  echo "=== smoke: continuous-batching serve (paged KV tier) ==="
+  python -m repro.launch.serve --devices 2 --scheduler continuous \
+      --slots 2 --context 16 --requests 4 --block-size 8 --cache int8
+
   echo "=== smoke: SWIFT live repartition example (dry run) ==="
   python examples/swift_repartition.py --dry-run
 
@@ -58,11 +62,17 @@ if [[ "${1:-}" != "--fast" ]]; then
       --out /tmp/BENCH_async.quick.json
   python scripts/validate_bench.py /tmp/BENCH_async.quick.json
 
+  echo "=== bench: serving tier (quick, scratch output) ==="
+  python benchmarks/serving_bench.py --quick \
+      --out /tmp/BENCH_serving.quick.json
+  python scripts/validate_bench.py /tmp/BENCH_serving.quick.json
+
   echo "=== validate committed perf-trajectory artifacts ==="
   python scripts/validate_bench.py BENCH_repartition.json
   python scripts/validate_bench.py BENCH_attention.json
   python scripts/validate_bench.py BENCH_comm.json
   python scripts/validate_bench.py BENCH_async.json
+  python scripts/validate_bench.py BENCH_serving.json
 fi
 
 echo "CI OK"

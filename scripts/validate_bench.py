@@ -20,11 +20,18 @@ schemas. Dispatches on the payload's ``bench`` field:
     50%-straggler fleet the clocked async merge reaches the synchronous
     run's held-out target loss >= 1.5x faster in simulated time, with
     <= 2% held-out loss regression (and no regression at 25%).
+  * ``serving_tier`` (BENCH_serving.json) — enforces the serving claims
+    of :mod:`repro.serve`: continuous batching over the paged KV-cache
+    sustains >= 1.5x the warm tokens/s of naive static rebatching on the
+    mixed-length fleet trace with bit-identical greedy streams, and the
+    int8-quantized cache flips <= 2% of greedy tokens under
+    teacher-forced replay.
 
     python scripts/validate_bench.py BENCH_repartition.json
     python scripts/validate_bench.py BENCH_attention.json
     python scripts/validate_bench.py BENCH_comm.json
     python scripts/validate_bench.py BENCH_async.json
+    python scripts/validate_bench.py BENCH_serving.json
 """
 import json
 import math
@@ -87,6 +94,25 @@ ASYNC_ASYNC = {
 MIN_ASYNC_SPEEDUP_50 = 1.5      # the acceptance bar at 50% stragglers
 MIN_ASYNC_SPEEDUP_25 = 1.0      # no regression at mild severity
 MAX_ASYNC_LOSS_DRIFT = 0.02     # held-out loss no worse than sync by >2%
+
+SERVING_TOP = {
+    "bench": str, "schema_version": int, "arch": str, "quick": bool,
+    "workload": dict, "modes": list, "int8": dict, "legacy": dict,
+    "summary": dict,
+}
+SERVING_MODE = {
+    "name": str, "policy": str, "cache": str, "requests": int,
+    "total_new_tokens": int, "decode_steps": int, "prefills": int,
+    "tokens_per_s": (int, float), "warm_tokens_per_s": (int, float),
+    "p50_latency_s": (int, float), "p99_latency_s": (int, float),
+    "deadline_hit_rate": (int, float),
+}
+SERVING_INT8 = {
+    "teacher_forced_disagreement": (int, float), "positions": int,
+    "max_logit_drift": (int, float),
+}
+MIN_CONTINUOUS_SPEEDUP = 1.5        # warm tok/s, continuous vs rebatch
+MAX_INT8_GREEDY_DISAGREEMENT = 0.02  # teacher-forced flip rate
 
 # the kernel VJP's normalized peak may wobble (padding, residual dtype)
 # but must not grow with S; the reference VJP's raw peak is the
@@ -265,11 +291,66 @@ def validate_async(data: dict, path: str) -> None:
           f"x{by_sev[0.25]['speedup']:.1f})")
 
 
+def validate_serving(data: dict, path: str) -> None:
+    check_keys(data, SERVING_TOP, "payload")
+    check_keys(data["int8"], SERVING_INT8, "int8")
+    modes = {m.get("name"): m for m in data["modes"]}
+    for want in ("continuous_fp32", "rebatch_fp32", "continuous_int8"):
+        if want not in modes:
+            fail(f"modes missing {want!r}")
+    for name, m in modes.items():
+        check_keys(m, SERVING_MODE, f"modes[{name!r}]")
+        for key in ("tokens_per_s", "warm_tokens_per_s"):
+            if not (m[key] > 0 and math.isfinite(m[key])):
+                fail(f"modes[{name!r}] {key} not positive-finite")
+        if m["p50_latency_s"] > m["p99_latency_s"]:
+            fail(f"modes[{name!r}] p50 latency exceeds p99")
+        if not 0.0 <= m["deadline_hit_rate"] <= 1.0:
+            fail(f"modes[{name!r}] deadline_hit_rate outside [0, 1]")
+        if m["total_new_tokens"] <= 0 or m["decode_steps"] <= 0:
+            fail(f"modes[{name!r}] emitted no tokens")
+    cont, reb = modes["continuous_fp32"], modes["rebatch_fp32"]
+    for key in ("requests", "total_new_tokens"):
+        if cont[key] != reb[key]:
+            fail(f"continuous and rebatch served different work "
+                 f"({key}: {cont[key]} vs {reb[key]}) — the throughput "
+                 "comparison is not like-for-like")
+    if not data["summary"].get("streams_match"):
+        fail("continuous and rebatch greedy streams differ — the "
+             "scheduler changes model output, not just batching")
+    if cont["decode_steps"] >= reb["decode_steps"]:
+        fail(f"continuous batching ran {cont['decode_steps']} decode "
+             f"steps vs rebatch's {reb['decode_steps']} — lanes are not "
+             "being refilled")
+    speedup = cont["warm_tokens_per_s"] / reb["warm_tokens_per_s"]
+    if speedup < MIN_CONTINUOUS_SPEEDUP:
+        fail(f"continuous batching sustains only x{speedup:.2f} the warm "
+             f"tokens/s of naive rebatching (need >= "
+             f"x{MIN_CONTINUOUS_SPEEDUP}) at mixed-length load — the "
+             "scheduler is not earning its complexity")
+    dis = data["int8"]["teacher_forced_disagreement"]
+    if dis > MAX_INT8_GREEDY_DISAGREEMENT:
+        fail(f"int8 cache flips {dis:.1%} of greedy tokens under "
+             f"teacher-forced replay (bound "
+             f"{MAX_INT8_GREEDY_DISAGREEMENT:.0%}) — cache quantization "
+             "is not quality-matched")
+    if not math.isfinite(data["int8"]["max_logit_drift"]):
+        fail("int8 max_logit_drift not finite")
+    if data["legacy"]["warm_tokens_per_s"] <= 0:
+        fail("legacy warm_tokens_per_s not positive")
+
+    print(f"validate_bench: OK — {path} (continuous x{speedup:.2f} warm "
+          f"tok/s vs rebatch over {cont['requests']} requests, streams "
+          f"identical, int8 disagreement {dis:.2%} over "
+          f"{data['int8']['positions']} positions)")
+
+
 VALIDATORS = {
     "repartition_latency": validate_repartition,
     "attention_fwd_bwd": validate_attention,
     "comm_fabric": validate_comm,
     "async_fabric": validate_async,
+    "serving_tier": validate_serving,
 }
 
 

@@ -264,18 +264,42 @@ class Session:
         return out
 
     def serve(self, *, requests: int = 3, batch: int = 8, context: int = 64,
-              decode_steps: int = 16, params=None, log_fn=print) -> Dict:
+              decode_steps: int = 16, params=None, scheduler: str = "legacy",
+              sampling: str = "greedy", temperature: float = 1.0,
+              log_fn=print, **serve_options) -> Dict:
         """Batched prefill+decode serving (paper Fig. 2); uses the trained
-        session params when available, else a fresh init."""
-        from repro.api.serving import serve_requests
+        session params when available, else a fresh init.
 
+        ``scheduler="legacy"`` is the static-batch driver of
+        :func:`repro.api.serving.serve_requests` (bit-identical to prior
+        builds under greedy sampling). ``scheduler="continuous"`` routes
+        through the paged-KV continuous-batching tier of
+        :mod:`repro.serve` — ``requests`` becomes the trace length,
+        ``batch`` the number of lanes, ``context`` the prefill bucket,
+        and extra ``serve_options`` (``block_size``, ``cache``,
+        ``fleet``, ...) pass straight to
+        :func:`repro.serve.serve_continuous`."""
         self.mesh  # force device setup once, like every other entrypoint
         if params is None and self.state is not None:
             params = self.merged_params()
+        if scheduler == "continuous":
+            from repro.serve import serve_continuous
+            return serve_continuous(self.cfg, params=params,
+                                    seed=self.seed, slots=batch,
+                                    max_context=context,
+                                    num_requests=requests,
+                                    sampling=sampling,
+                                    temperature=temperature,
+                                    log_fn=log_fn, **serve_options)
+        if scheduler != "legacy":
+            raise ValueError(f"unknown scheduler {scheduler!r} "
+                             "(legacy|continuous)")
+        from repro.api.serving import serve_requests
         return serve_requests(self.cfg, batch=batch, context=context,
                               decode_steps=decode_steps, requests=requests,
                               params=params, key=self.prng(2),
-                              log_fn=log_fn)
+                              sampling=sampling, temperature=temperature,
+                              log_fn=log_fn, **serve_options)
 
     def lower(self, **kw):
         """Compile-only dry-run lowering of this session's step (no

@@ -190,6 +190,128 @@ def flash_attention(q, k, v, *, scale: Optional[float] = None,
     return (o, lse) if return_lse else o
 
 
+# --------------------------------------------------------- paged decode ----
+def _paged_decode_kernel(tbl_ref, ctx_ref, q_ref, k_ref, v_ref, *rest,
+                         scale: float, bs: int, quantized: bool):
+    """One decode token per request against a paged KV pool.
+
+    Grid (batch, kv-head, table-slot); the innermost dimension walks the
+    request's block table sequentially while (m, l, acc) persist in VMEM
+    scratch — the same online-softmax recurrence as ``_fwd_kernel``, with
+    the physical KV tile resolved through the scalar-prefetched block
+    table (``tbl_ref[b, i]``) instead of a contiguous index map. Slots at
+    or past the request's context length are dead (their table entries
+    point at the reserved null block) and skip compute entirely, the
+    paged analogue of ``_block_live``.
+    """
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[b]
+
+    @pl.when(i * bs < ctx)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # [g, d]
+        k = k_ref[0, 0].astype(jnp.float32)        # [bs, d]
+        v = v_ref[0, 0].astype(jnp.float32)        # [bs, d]
+        if quantized:
+            k = k * ks_ref[0, 0]                   # per-row absmax scales
+            v = v * vs_ref[0, 0]
+        g = q.shape[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kp = i * bs + jax.lax.broadcasted_iota(jnp.int32, (g, bs), 1)
+        s = jnp.where(kp < ctx, s, NEG_INF)        # partial final block
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                           scale: Optional[float] = None,
+                           k_scales=None, v_scales=None,
+                           interpret: bool = False):
+    """Single-token decode attention over a paged KV cache.
+
+    q: [B, Hq, D] (one query token per request); k_pages/v_pages:
+    [Hkv, NB, bs, D] physical block pools; block_tables: [B, T] int32
+    logical->physical maps (dead slots point at the reserved null block
+    0); ctx_lens: [B] int32 visible KV length per request (requests with
+    ``ctx_lens == 0`` return zeros). With ``k_scales``/``v_scales``
+    ([Hkv, NB, bs, 1] float32) the pools are int8 and dequantized
+    in-kernel. Returns [B, Hq, D].
+    """
+    b, hq, d = q.shape
+    hkv, _, bs, _ = k_pages.shape
+    g = hq // hkv
+    t = block_tables.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    quantized = k_scales is not None
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, bs=bs,
+                               quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b_, h, i, tbl, ctx: (b_, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda b_, h, i, tbl, ctx: (h, tbl[b_, i], 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda b_, h, i, tbl, ctx: (h, tbl[b_, i], 0, 0)),
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, bs, 1),
+                         lambda b_, h, i, tbl, ctx: (h, tbl[b_, i], 0, 0)),
+            pl.BlockSpec((1, 1, bs, 1),
+                         lambda b_, h, i, tbl, ctx: (h, tbl[b_, i], 0, 0)),
+        ]
+        operands += [k_scales, v_scales]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, t),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, h, i, tbl, ctx: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32), *operands)
+    return o.reshape(b, hq, d)
+
+
 # ------------------------------------------------------------ backward ----
 def _bwd_preprocess_kernel(o_ref, do_ref, delta_ref):
     o = o_ref[0, 0].astype(jnp.float32)

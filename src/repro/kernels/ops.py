@@ -97,6 +97,22 @@ def flash_attention_ad(q, k, v, scale=None, causal=True, window=None,
                   int(block_q), int(block_k), _auto_interpret(interpret))
 
 
+# Serving hot path (repro.serve): single-token decode against the paged
+# KV pool. No autodiff — decode never backpropagates.
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                           scale=None, k_scales=None, v_scales=None,
+                           interpret=None):
+    """q: [B, Hq, D] decode queries; k_pages/v_pages: [Hkv, NB, bs, D]
+    block pools; block_tables: [B, T] logical->physical maps; ctx_lens:
+    [B] visible KV lengths. Pass ``k_scales``/``v_scales`` for int8
+    pools (dequantized in-kernel). Returns [B, Hq, D]."""
+    return _fa.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                      ctx_lens, scale=scale,
+                                      k_scales=k_scales, v_scales=v_scales,
+                                      interpret=_auto_interpret(interpret))
+
+
 # Codec hot path (repro.comm): no custom_vjp — encode/decode runs outside
 # the differentiated path, so the pair stays a plain kernel call.
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -41,6 +41,41 @@ def flash_attention_ref(q, k, v, *, scale: Optional[float] = None,
     return o
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
+                               *, scale: Optional[float] = None,
+                               k_scales=None, v_scales=None):
+    """Oracle for the paged single-token decode kernel.
+
+    q: [B, Hq, D]; k_pages/v_pages: [Hkv, NB, bs, D]; block_tables:
+    [B, T] int32; ctx_lens: [B] int32. Gathers each request's logical KV
+    view through its block table, dequantizes when scales are given,
+    masks positions >= ctx_len, and runs dense softmax attention.
+    Requests with ``ctx_lens == 0`` return zeros (matching the kernel's
+    never-initialized accumulator path)."""
+    b, hq, d = q.shape
+    hkv, _, bs, _ = k_pages.shape
+    g = hq // hkv
+    t = block_tables.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+
+    k = k_pages[:, block_tables].astype(jnp.float32)   # [Hkv, B, T, bs, D]
+    v = v_pages[:, block_tables].astype(jnp.float32)
+    if k_scales is not None:
+        k = k * k_scales[:, block_tables]
+        v = v * v_scales[:, block_tables]
+    k = k.transpose(1, 0, 2, 3, 4).reshape(b, hkv, t * bs, d)
+    v = v.transpose(1, 0, 2, 3, 4).reshape(b, hkv, t * bs, d)
+
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k) * scale
+    mask = jnp.arange(t * bs)[None, :] < ctx_lens[:, None]   # [B, T*bs]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v)
+    o = jnp.where(ctx_lens[:, None, None, None] > 0, o, 0.0)
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
 def mlstm_chunked_ref(q, k, v, ig, lf, *, chunk: int = 64, C0=None, n0=None,
                       m0=None):
     """Stabilized mLSTM over the sequence, step-by-step (the exact

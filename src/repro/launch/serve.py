@@ -4,10 +4,14 @@
 Vehicles send vision-encoder features to the edge; the edge AD-LLM
 prefills the feature+instruction context and decodes waypoint tokens /
 regresses waypoints, returned to the vehicle's PID controller. The
-batched prefill/decode driver lives in :mod:`repro.api.serving`.
+batched prefill/decode driver lives in :mod:`repro.api.serving`; the
+paged-KV continuous-batching tier (``--scheduler continuous``) lives in
+:mod:`repro.serve`.
 
   PYTHONPATH=src python -m repro.launch.serve --arch flad-adllm \
       --batch 8 --decode-steps 16
+  PYTHONPATH=src python -m repro.launch.serve --arch flad-adllm \
+      --scheduler continuous --slots 4 --cache int8 --fleet nano*2,agx*2
 """
 import argparse
 
@@ -17,9 +21,25 @@ def main():
     ap.add_argument("--arch", default="flad-adllm")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--context", type=int, default=64)
-    ap.add_argument("--decode-steps", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=16,
+                    help="decode steps per batch (legacy scheduler)")
     ap.add_argument("--requests", type=int, default=3,
-                    help="number of request batches to serve")
+                    help="request batches (legacy) / trace length "
+                         "(continuous)")
+    ap.add_argument("--scheduler", choices=("legacy", "continuous"),
+                    default="legacy")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="continuous-batching lanes (default: --batch)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="KV block size in tokens (continuous)")
+    ap.add_argument("--cache", choices=("fp32", "int8"), default="fp32",
+                    help="paged KV-cache storage mode (continuous)")
+    ap.add_argument("--fleet", default="nano*2,agx*2",
+                    help="vehicle fleet spec for the load generator "
+                         "(continuous)")
+    ap.add_argument("--sampling", choices=("greedy", "temperature"),
+                    default="greedy")
+    ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -31,8 +51,15 @@ def main():
                       seed=args.seed,
                       mesh=MeshSpec((1,), axes=("data",),
                                     devices=args.devices or 0))
-    session.serve(requests=args.requests, batch=args.batch,
-                  context=args.context, decode_steps=args.decode_steps)
+    kw = {}
+    if args.scheduler == "continuous":
+        kw = dict(block_size=args.block_size, cache=args.cache,
+                  fleet=args.fleet)
+    session.serve(requests=args.requests,
+                  batch=args.slots or args.batch,
+                  context=args.context, decode_steps=args.decode_steps,
+                  scheduler=args.scheduler, sampling=args.sampling,
+                  temperature=args.temperature, **kw)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,190 @@
+"""Paged-cache prefill/decode forward for the decoder-only LM family.
+
+Splits :func:`repro.models.lm.forward` at the KV boundary so decode runs
+against the block pools of :mod:`repro.serve.kvcache` instead of a
+per-request contiguous cache:
+
+  * **prefill** reuses the contiguous machinery unchanged — one request
+    at a time, prompt padded to a fixed ``max_context`` bucket (one jit
+    trace), causal masking keeps the padded tail out of every real
+    position's attention — and returns the last true token's logits plus
+    the layer-stacked K/V to scatter into pool blocks;
+  * **decode** re-implements the block walk as a ``lax.scan`` whose xs
+    carry each layer's pool slices: embed -> rms/qkv/rope (positions =
+    per-request context lengths) -> append the token's K/V into its
+    physical block -> the paged Pallas decode kernel
+    (:func:`repro.kernels.ops.paged_decode_attention`) -> wo/ffn. All
+    ``slots`` batch lanes run every step; dead lanes point at the null
+    block and cost one masked tile.
+
+The numerics match the contiguous path op for op (same rope-after-norm
+order, float32 softmax statistics), which is what the paged-vs-contiguous
+equivalence test in ``tests/test_serve.py`` pins down.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import blocks as B
+from repro.models import lm
+from repro.serve import kvcache as KC
+
+_PAGED_FAMILIES = ("dense", "moe")
+
+
+class PagedEngine:
+    """Jitted paged prefill/decode pair for one (cfg, spec, slots)."""
+
+    def __init__(self, cfg: ModelConfig, spec: KC.PagedCacheSpec, *,
+                 max_context: int, slots: int):
+        if cfg.family not in _PAGED_FAMILIES:
+            raise NotImplementedError(
+                f"paged serving covers the LM families {_PAGED_FAMILIES}; "
+                f"{cfg.family!r} keeps the legacy contiguous path")
+        if cfg.window is not None:
+            raise NotImplementedError(
+                "paged serving assumes full causal attention (window=None)")
+        if max_context > spec.max_tokens_per_req:
+            raise ValueError(
+                f"max_context {max_context} exceeds the table capacity "
+                f"{spec.max_tokens_per_req} tokens")
+        self.cfg = cfg
+        self.spec = spec
+        self.max_context = int(max_context)
+        self.slots = int(slots)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+        self._write = jax.jit(functools.partial(KC.write_prefill, spec=spec))
+
+    # ---- pools --------------------------------------------------------
+    def init_pools(self) -> Dict:
+        return KC.init_pools(self.cfg, self.spec)
+
+    # ---- prefill ------------------------------------------------------
+    def _prefill_impl(self, params, tokens, length):
+        """tokens: [1, max_context] int32 (padded); length: scalar int32.
+        Returns (last-token logits [1, V], k [L, Hkv, Smax, D], v)."""
+        cfg = self.cfg
+        caches = lm.init_cache(cfg, 1, self.max_context)
+        x, new_caches, _ = lm.forward(params, cfg, tokens, caches=caches,
+                                      hidden_only=True)
+        h = x[:, length - 1]                       # [1, d], true last token
+        if cfg.tie_embeddings:
+            logits = B.unembed(params["embed"], h[:, None])[:, 0]
+        else:
+            logits = B.linear(params["head"], h).astype(jnp.float32)
+        k = new_caches["k"][:, 0]                  # [L, Hkv, Smax, D]
+        v = new_caches["v"][:, 0]
+        return logits, k, v
+
+    def prefill(self, params, tokens, length) -> Tuple:
+        return self._prefill(params, tokens, length)
+
+    def write_prefill(self, pools, k_layers, v_layers, table_row) -> Dict:
+        return self._write(pools, k_layers=k_layers, v_layers=v_layers,
+                           table_row=table_row)
+
+    # ---- decode -------------------------------------------------------
+    def _decode_impl(self, params, pools, tokens, tables, ctx_lens):
+        """One decode step for all slots.
+
+        tokens: [slots] int32 (the pending token per lane); tables:
+        [slots, T] int32; ctx_lens: [slots] int32 (KV written so far —
+        the pending token's position). Returns (logits [slots, V],
+        updated pools)."""
+        cfg, spec = self.cfg, self.spec
+        nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        slots = tokens.shape[0]
+        scale = hd ** -0.5
+
+        x = B.embed(params["embed"], tokens[:, None])      # [slots, 1, d]
+        positions = ctx_lens[:, None].astype(jnp.int32)    # [slots, 1]
+        blk = (ctx_lens // spec.block_size)[:, None]
+        phys = jnp.take_along_axis(tables, blk, axis=1)[:, 0]   # [slots]
+        off = ctx_lens % spec.block_size
+
+        def body(carry, layer):
+            h_in = carry
+            lp, layer_pools = layer
+            ap = lp["attn"]
+            h = B.rms_norm(lp["ln1"], h_in, cfg.norm_eps)
+            q = h @ ap["wq"]
+            k = h @ ap["wk"]
+            v = h @ ap["wv"]
+            if "bq" in ap:
+                q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+            q = B._split_heads(q, nq, hd)                  # [slots,Hq,1,D]
+            k = B._split_heads(k, nkv, hd)
+            v = B._split_heads(v, nkv, hd)
+            if "q_norm" in ap:
+                q = B._head_rmsnorm(q, ap["q_norm"], cfg.norm_eps)
+                k = B._head_rmsnorm(k, ap["k_norm"], cfg.norm_eps)
+            q = B.rope(q, positions, cfg.rope_theta)
+            k = B.rope(k, positions, cfg.rope_theta)
+
+            k_tok = k[:, :, 0].transpose(1, 0, 2)          # [Hkv,slots,D]
+            v_tok = v[:, :, 0].transpose(1, 0, 2)
+            new_pools = KC.append_token(layer_pools, spec, k_tok, v_tok,
+                                        phys, off)
+            from repro.kernels import ops as kops
+            o = kops.paged_decode_attention(
+                q[:, :, 0], new_pools["k"], new_pools["v"], tables,
+                ctx_lens + 1, scale=scale,
+                k_scales=new_pools.get("k_scale"),
+                v_scales=new_pools.get("v_scale"))         # [slots,Hq,D]
+            h_in = h_in + (o.reshape(slots, 1, nq * hd)
+                           @ ap["wo"]).astype(h_in.dtype)
+            hh = B.rms_norm(lp["ln2"], h_in, cfg.norm_eps)
+            if "moe" in lp:
+                f, _ = B.moe_block(lp["moe"], hh, cfg)
+            else:
+                f = B.mlp(lp["ffn"], hh)
+            return h_in + f, new_pools
+
+        x, new_pools = jax.lax.scan(body, x, (params["blocks"], pools))
+        x = B.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = B.unembed(params["embed"], x)[:, 0]
+        else:
+            logits = B.linear(params["head"], x).astype(jnp.float32)[:, 0]
+        return logits, new_pools
+
+    def decode(self, params, pools, tokens, tables, ctx_lens) -> Tuple:
+        return self._decode(params, pools, tokens, tables, ctx_lens)
+
+    # ---- sampling -----------------------------------------------------
+    def make_sampler(self, sampling: str = "greedy",
+                     temperature: float = 1.0):
+        """Jitted sampler(logits [B, V], key) -> tokens [B] int32."""
+        if sampling == "greedy":
+            @jax.jit
+            def sample(logits, key):
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        elif sampling == "temperature":
+            t = float(temperature)
+
+            @jax.jit
+            def sample(logits, key):
+                return jax.random.categorical(
+                    key, logits / t, axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(
+                f"unknown sampling {sampling!r} (greedy|temperature)")
+        return sample
+
+    def pad_prompt(self, prompt) -> Tuple:
+        """Host helper: right-pad a [s] prompt to the fixed prefill
+        bucket. Returns (tokens [1, max_context] int32, length int32)."""
+        import numpy as np
+        s = len(prompt)
+        if s > self.max_context:
+            raise ValueError(f"prompt length {s} > max_context "
+                             f"{self.max_context}")
+        buf = np.zeros((1, self.max_context), np.int32)
+        buf[0, :s] = np.asarray(prompt, np.int32)
+        return jnp.asarray(buf), jnp.int32(s)

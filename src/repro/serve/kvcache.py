@@ -1,0 +1,211 @@
+"""Paged KV-cache manager: block-table allocation over a fixed pool.
+
+The serving tier's memory model (vLLM-style paging, sized for the edge
+AD-LLM of paper Fig. 2): physical KV storage is a fixed pool of
+``num_blocks`` blocks of ``block_size`` tokens per (layer, kv-head), and
+each in-flight request holds a *logical* view — a row of physical block
+ids — so admission/eviction never copies or compacts KV state. Physical
+block 0 is reserved as the null block: dead table slots point at it, its
+contents are garbage by design, and the paged kernel masks it out via
+``ctx_lens``.
+
+Two cache modes share the layout:
+
+  * ``fp32``/model-dtype pools — K/V stored as written;
+  * int8 pools — every (token, kv-head) row is quantized through the
+    :mod:`repro.kernels.quantize` Pallas pair with a per-row absmax
+    scale, stored alongside as [..., 1] float32. Rows are zero-padded to
+    the kernel's 128-lane layout (padding cannot change a row's absmax)
+    and the random-bits input is pinned to 2**31 — ``floor(x + 0.5)`` —
+    so cache quantization is deterministic round-to-nearest rather than
+    stochastic: a cache entry must read back identically every step.
+
+Host-side allocation (:class:`BlockAllocator`) is deliberately plain
+Python — the scheduler calls it between jitted steps; everything that
+touches tensors (:func:`init_pools`, :func:`write_prefill`,
+:func:`append_token`) is pure and jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops as kops
+from repro.kernels.quantize import LANES
+
+#: pinned random-bits word giving u = 0.5 — deterministic round-to-nearest
+NEAREST_BITS = jnp.uint32(1 << 31)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheSpec:
+    """Pool geometry: ``num_blocks`` physical blocks (block 0 reserved as
+    the null block) of ``block_size`` tokens; request tables are
+    ``max_blocks_per_req`` wide; ``quantized`` selects int8 pools."""
+    num_blocks: int
+    block_size: int
+    max_blocks_per_req: int
+    quantized: bool = False
+
+    def __post_init__(self):
+        if self.num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        if self.block_size < 1 or self.max_blocks_per_req < 1:
+            raise ValueError("block_size/max_blocks_per_req must be >= 1")
+
+    def blocks_needed(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    @property
+    def max_tokens_per_req(self) -> int:
+        return self.max_blocks_per_req * self.block_size
+
+    @classmethod
+    def for_requests(cls, slots: int, max_tokens: int, block_size: int = 16,
+                     quantized: bool = False, headroom: int = 1
+                     ) -> "PagedCacheSpec":
+        """A pool sized so ``slots`` concurrent requests of up to
+        ``max_tokens`` always fit, plus the null block and ``headroom``
+        spare blocks."""
+        per_req = -(-max_tokens // block_size)
+        return cls(num_blocks=1 + slots * per_req + headroom,
+                   block_size=block_size, max_blocks_per_req=per_req,
+                   quantized=quantized)
+
+
+class BlockAllocator:
+    """Free-list allocator over the physical pool (host-side).
+
+    Allocation is all-or-nothing: ``alloc(n)`` returns ``None`` when the
+    pool cannot cover the whole request, so admission never strands a
+    partially-allocated request. Block 0 never enters the free list."""
+
+    def __init__(self, spec: PagedCacheSpec):
+        self.spec = spec
+        self._free: List[int] = list(range(spec.num_blocks - 1, 0, -1))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return (self.spec.num_blocks - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free) or n > self.spec.max_blocks_per_req:
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def release(self, blocks: Sequence[int]) -> None:
+        seen = set(self._free)
+        for b in blocks:
+            if not 0 < b < self.spec.num_blocks:
+                raise ValueError(f"block id {b} outside the pool")
+            if b in seen:
+                raise ValueError(f"double free of block {b}")
+            seen.add(b)
+        self._free.extend(blocks)
+
+
+# ---------------------------------------------------------------- pools ----
+def init_pools(cfg: ModelConfig, spec: PagedCacheSpec) -> Dict:
+    """Layer-stacked physical pools: k/v [L, Hkv, NB, bs, D] (+ float32
+    [..., 1] absmax scales in int8 mode)."""
+    shape = (cfg.num_layers, cfg.num_kv_heads, spec.num_blocks,
+             spec.block_size, cfg.hd)
+    if spec.quantized:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+            "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, cfg.dtype),
+            "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def quantize_rows(x):
+    """Deterministic round-to-nearest int8 quantization of the trailing
+    axis: x [..., D] float -> (q int8 [..., D], scale float32 [..., 1]).
+    Rows are zero-padded to the kernel's 128-lane layout; padding is
+    absmax-neutral so the scales are exactly those of the D-wide rows."""
+    lead, d = x.shape[:-1], x.shape[-1]
+    m = 1
+    for n in lead:
+        m *= n
+    rows = x.reshape(m, d).astype(jnp.float32)
+    if d < LANES:
+        rows = jnp.pad(rows, ((0, 0), (0, LANES - d)))
+    elif d > LANES:
+        raise NotImplementedError(f"head_dim {d} > {LANES} lanes")
+    bits = jnp.full((m, LANES), NEAREST_BITS, jnp.uint32)
+    q, scale = kops.quantize_int8(rows, bits)
+    return q[:, :d].reshape(x.shape), scale.reshape(lead + (1,))
+
+
+def dequantize_rows(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def write_prefill(pools: Dict, spec: PagedCacheSpec, k_layers, v_layers,
+                  table_row) -> Dict:
+    """Scatter one request's contiguous prefill K/V into its pool blocks.
+
+    k_layers/v_layers: [L, Hkv, S, D] (S is the padded prefill buffer —
+    rows past the true context length are garbage and stay masked by
+    ``ctx_lens``); table_row: [T] int32, trailing entries null. Blocks
+    beyond the request's allocation scatter into the null block, which is
+    garbage by contract."""
+    l, hkv, s, d = k_layers.shape
+    bs = spec.block_size
+    pad = (-s) % bs
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k_layers = jnp.pad(k_layers, widths)
+        v_layers = jnp.pad(v_layers, widths)
+    nb = (s + pad) // bs
+    kb = k_layers.reshape(l, hkv, nb, bs, d)
+    vb = v_layers.reshape(l, hkv, nb, bs, d)
+    row = table_row[:nb]
+    out = dict(pools)
+    if spec.quantized:
+        kq, ks = quantize_rows(kb)
+        vq, vs = quantize_rows(vb)
+        out["k"] = pools["k"].at[:, :, row].set(kq)
+        out["v"] = pools["v"].at[:, :, row].set(vq)
+        out["k_scale"] = pools["k_scale"].at[:, :, row].set(ks)
+        out["v_scale"] = pools["v_scale"].at[:, :, row].set(vs)
+    else:
+        out["k"] = pools["k"].at[:, :, row].set(kb.astype(pools["k"].dtype))
+        out["v"] = pools["v"].at[:, :, row].set(vb.astype(pools["v"].dtype))
+    return out
+
+
+def append_token(pools: Dict, spec: PagedCacheSpec, k_tok, v_tok, phys, off
+                 ) -> Dict:
+    """Append one decode token's K/V per request into per-layer pools.
+
+    k_tok/v_tok: [Hkv, B, D] (a single layer's new rows, batch in the
+    middle so the scatter value matches ``pools[:, phys, off]``); pools
+    here are the [Hkv, NB, bs, D] slices of one layer; phys/off: [B]
+    physical block id and in-block offset. Inactive slots point at
+    (null, 0) — duplicate scatters there are harmless."""
+    out = dict(pools)
+    if spec.quantized:
+        kq, ks = quantize_rows(k_tok)
+        vq, vs = quantize_rows(v_tok)
+        out["k"] = pools["k"].at[:, phys, off].set(kq)
+        out["v"] = pools["v"].at[:, phys, off].set(vq)
+        out["k_scale"] = pools["k_scale"].at[:, phys, off].set(ks)
+        out["v_scale"] = pools["v_scale"].at[:, phys, off].set(vs)
+    else:
+        out["k"] = pools["k"].at[:, phys, off].set(
+            k_tok.astype(pools["k"].dtype))
+        out["v"] = pools["v"].at[:, phys, off].set(
+            v_tok.astype(pools["v"].dtype))
+    return out

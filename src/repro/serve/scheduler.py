@@ -1,0 +1,216 @@
+"""Continuous-batching scheduler over the paged engine.
+
+Requests stream in (from :mod:`repro.serve.loadgen` or a plain list) and
+occupy one of ``slots`` fixed batch lanes. Every decode step runs ONE
+fused forward over all lanes; the scheduler's only job is deciding which
+request sits in which lane:
+
+  * ``policy="continuous"`` — a lane is refilled the moment its request
+    finishes (vLLM-style continuous batching). Short requests never hold
+    long ones hostage and the decode batch stays dense.
+  * ``policy="rebatch"`` — the naive baseline: a wave of requests is
+    admitted only when *all* lanes are empty, then decoded until the
+    longest request in the wave finishes. This is the static-batching
+    strawman the serving bench compares against; at mixed decode lengths
+    most lanes idle for most of each wave.
+
+Admission is gated by the :class:`repro.serve.kvcache.BlockAllocator`
+(all-or-nothing block reservation for prompt + max_new_tokens) and by
+``max_inflight_blocks`` so a fleet burst cannot overcommit the pool.
+
+Determinism: greedy decoding makes the token streams a pure function of
+(params, prompts) — per-request streams are bit-identical between the two
+policies for the dense family (each lane's attention only reads its own
+blocks; MoE capacity routing is cross-token and would break this, which
+the equivalence test therefore pins to dense). Temperature sampling draws
+from a per-step key folded from a base key and the step index, so a run
+is reproducible given its seed.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import kvcache as KC
+from repro.serve.engine import PagedEngine
+
+_POLICIES = ("continuous", "rebatch")
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One generation request flowing through the scheduler."""
+    rid: int
+    prompt: np.ndarray                 # [s] int32
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    deadline_s: float = math.inf
+    # filled by the scheduler:
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    t_admit: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done is None:
+            return None
+        return self.t_done - self.arrival_s
+
+    @property
+    def met_deadline(self) -> bool:
+        return self.t_done is not None and self.t_done <= self.deadline_s
+
+
+class ContinuousScheduler:
+    """Admit/decode/retire requests against a :class:`PagedEngine`."""
+
+    def __init__(self, engine: PagedEngine, params, *,
+                 policy: str = "continuous",
+                 max_inflight_blocks: Optional[int] = None,
+                 sampling: str = "greedy", temperature: float = 1.0,
+                 seed: int = 0):
+        if policy not in _POLICIES:
+            raise ValueError(f"unknown policy {policy!r} ({_POLICIES})")
+        self.engine = engine
+        self.params = params
+        self.policy = policy
+        self.spec = engine.spec
+        self.slots = engine.slots
+        self.max_inflight_blocks = (max_inflight_blocks
+                                    if max_inflight_blocks is not None
+                                    else self.spec.num_blocks - 1)
+        self.allocator = KC.BlockAllocator(self.spec)
+        self.sampler = engine.make_sampler(sampling, temperature)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._sample_step = 0
+
+        self.pools = engine.init_pools()
+        self.tables = np.zeros((self.slots, self.spec.max_blocks_per_req),
+                               np.int32)
+        self.ctx = np.zeros(self.slots, np.int32)
+        self.pending_tok = np.zeros(self.slots, np.int32)
+        self.active: List[Optional[ServeRequest]] = [None] * self.slots
+        self.blocks: List[Optional[List[int]]] = [None] * self.slots
+        self.waiting: Deque[ServeRequest] = collections.deque()
+        self.finished: List[ServeRequest] = []
+        # counters for the bench report
+        self.decode_steps_run = 0
+        self.prefills_run = 0
+        self.total_new_tokens = 0
+
+    # ---- bookkeeping --------------------------------------------------
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    @property
+    def idle(self) -> bool:
+        return self.num_active == 0 and not self.waiting
+
+    def submit(self, req: ServeRequest) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.engine.spec.max_tokens_per_req:
+            raise ValueError(f"request {req.rid} needs "
+                             f"{len(req.prompt) + req.max_new_tokens} tokens "
+                             f"> table capacity")
+        if len(req.prompt) > self.engine.max_context:
+            raise ValueError(f"request {req.rid} prompt exceeds max_context")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self.waiting.append(req)
+
+    def _next_key(self):
+        k = jax.random.fold_in(self._base_key, self._sample_step)
+        self._sample_step += 1
+        return k
+
+    def _retire(self, slot: int, t: float) -> None:
+        req = self.active[slot]
+        req.t_done = t
+        self.finished.append(req)
+        self.allocator.release(self.blocks[slot])
+        self.active[slot] = None
+        self.blocks[slot] = None
+        self.tables[slot] = 0
+        self.ctx[slot] = 0
+        self.pending_tok[slot] = 0
+
+    # ---- admission ----------------------------------------------------
+    def _admit(self, t: float) -> None:
+        if self.policy == "rebatch" and self.num_active > 0:
+            return                      # wave semantics: drain first
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting[0]
+            need = self.spec.blocks_needed(len(req.prompt)
+                                           + req.max_new_tokens)
+            inflight = self.allocator.in_use
+            if inflight + need > self.max_inflight_blocks:
+                break                   # FIFO: don't starve the head
+            blocks = self.allocator.alloc(need)
+            if blocks is None:
+                break
+            self.waiting.popleft()
+            req.t_admit = t
+            self.active[slot] = req
+            self.blocks[slot] = blocks
+            self.tables[slot] = 0
+            self.tables[slot, :need] = blocks
+            toks, length = self.engine.pad_prompt(req.prompt)
+            logits, k, v = self.engine.prefill(self.params, toks, length)
+            self.pools = self.engine.write_prefill(
+                self.pools, k, v, jnp.asarray(self.tables[slot]))
+            self.prefills_run += 1
+            first = int(self.sampler(logits, self._next_key())[0])
+            req.tokens.append(first)
+            self.total_new_tokens += 1
+            self.ctx[slot] = len(req.prompt)
+            self.pending_tok[slot] = first
+            if req.max_new_tokens == 1:
+                self._retire(slot, t)
+
+    # ---- one step -----------------------------------------------------
+    def step(self, t: float = 0.0) -> int:
+        """Admit what fits, then run one fused decode step across all
+        lanes. Returns the number of tokens emitted this step."""
+        self._admit(t)
+        live = [i for i in range(self.slots) if self.active[i] is not None]
+        if not live:
+            return 0
+        logits, self.pools = self.engine.decode(
+            self.params, self.pools, jnp.asarray(self.pending_tok),
+            jnp.asarray(self.tables), jnp.asarray(self.ctx))
+        self.decode_steps_run += 1
+        nxt = np.asarray(self.sampler(logits, self._next_key()), np.int32)
+        emitted = 0
+        for slot in live:
+            req = self.active[slot]
+            self.ctx[slot] += 1
+            tok = int(nxt[slot])
+            req.tokens.append(tok)
+            self.pending_tok[slot] = tok
+            self.total_new_tokens += 1
+            emitted += 1
+            if len(req.tokens) >= req.max_new_tokens:
+                self._retire(slot, t)
+        return emitted
+
+    def run_to_completion(self, requests: Sequence[ServeRequest],
+                          max_steps: int = 100_000) -> List[ServeRequest]:
+        """Convenience driver: submit everything at t=0 and step until
+        drained (the loadgen drives arrivals through real event time)."""
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while not self.idle:
+            self.step(float(steps))
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("scheduler failed to drain")
+        return self.finished

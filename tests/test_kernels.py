@@ -217,3 +217,96 @@ def test_quantize_int8_stochastic_rounding_unbiased():
     mean_err = float(jnp.abs(acc / n - x)[:, 1:].max())
     step = 5.0 / 127.0
     assert mean_err < 0.25 * step, (mean_err, step)
+
+
+def _paged_setup(k, b, hkv, nb, bs, d, ctx_list):
+    """Random pools + a valid block table for the given context lengths."""
+    import numpy as np
+    ks = jax.random.split(k, 3)
+    kp = jax.random.normal(ks[0], (hkv, nb, bs, d), jnp.float32)
+    vp = jax.random.normal(ks[1], (hkv, nb, bs, d), jnp.float32)
+    t = max(-(-c // bs) for c in ctx_list) + 1
+    tbl = np.zeros((b, t), np.int32)
+    free = list(range(1, nb))
+    for i, c in enumerate(ctx_list):
+        for j in range(-(-c // bs)):
+            tbl[i, j] = free.pop()
+    return kp, vp, jnp.asarray(tbl), jnp.asarray(ctx_list, jnp.int32)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,d,bs,ctx_list",
+    [
+        (4, 4, 2, 32, 8, [13, 1, 0, 48]),   # GQA, partial/dead/full blocks
+        (2, 8, 8, 64, 16, [16, 31]),        # MHA, exact and off-by-one
+        (3, 2, 1, 128, 4, [4, 9, 2]),       # MQA, tiny blocks
+    ])
+def test_paged_decode_attention(b, hq, hkv, d, bs, ctx_list):
+    """Paged single-token decode kernel vs the dense gather oracle,
+    including dead lanes (ctx=0 -> exact zeros) and partial last blocks."""
+    nb = 1 + sum(-(-c // bs) for c in ctx_list) + 2
+    kp, vp, tbl, ctx = _paged_setup(KEY, b, hkv, nb, bs, d, ctx_list)
+    q = jax.random.normal(jax.random.fold_in(KEY, 7), (b, hq, d),
+                          jnp.float32)
+    got = ops.paged_decode_attention(q, kp, vp, tbl, ctx, interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, tbl, ctx)
+    assert float(jnp.max(jnp.abs(got - want))) < 5e-6
+    for i, c in enumerate(ctx_list):
+        if c == 0:
+            assert float(jnp.abs(got[i]).max()) == 0.0
+
+
+def test_paged_decode_attention_int8():
+    """int8 pools dequantize in-kernel through per-row scales."""
+    b, hq, hkv, d, bs = 3, 4, 2, 32, 8
+    ctx_list = [5, 17, 24]
+    nb = 1 + sum(-(-c // bs) for c in ctx_list) + 1
+    kp, vp, tbl, ctx = _paged_setup(KEY, b, hkv, nb, bs, d, ctx_list)
+    ks = jax.random.split(jax.random.fold_in(KEY, 11), 5)
+    kq = jax.random.randint(ks[0], kp.shape, -127, 128,
+                            jnp.int32).astype(jnp.int8)
+    vq = jax.random.randint(ks[1], vp.shape, -127, 128,
+                            jnp.int32).astype(jnp.int8)
+    ksc = jax.random.uniform(ks[2], kp.shape[:-1] + (1,), jnp.float32,
+                             1e-3, 2e-2)
+    vsc = jax.random.uniform(ks[3], vp.shape[:-1] + (1,), jnp.float32,
+                             1e-3, 2e-2)
+    q = jax.random.normal(ks[4], (b, hq, d), jnp.float32)
+    got = ops.paged_decode_attention(q, kq, vq, tbl, ctx, k_scales=ksc,
+                                     v_scales=vsc, interpret=True)
+    want = ref.paged_decode_attention_ref(q, kq, vq, tbl, ctx,
+                                          k_scales=ksc, v_scales=vsc)
+    assert float(jnp.max(jnp.abs(got - want))) < 5e-6
+
+
+def test_paged_decode_matches_contiguous_attention():
+    """Scattering a contiguous K/V stream into shuffled physical blocks
+    must not change attention output vs the flash kernel on the same
+    stream (single query at the last position)."""
+    import numpy as np
+    b, hq, hkv, d, bs, s = 2, 4, 2, 32, 8, 21
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32)
+    dense = ref.flash_attention_ref(q, k, v, causal=True, q_offset=s - 1)
+
+    t = -(-s // bs)
+    nb = 1 + b * t
+    pad = t * bs - s
+    kb = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vb = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    rng = np.random.default_rng(3)
+    phys = rng.permutation(np.arange(1, nb)).reshape(b, t)
+    kp = jnp.zeros((hkv, nb, bs, d), jnp.float32)
+    vp = jnp.zeros((hkv, nb, bs, d), jnp.float32)
+    for i in range(b):
+        kp = kp.at[:, phys[i]].set(
+            kb[i].reshape(hkv, t, bs, d))
+        vp = vp.at[:, phys[i]].set(
+            vb[i].reshape(hkv, t, bs, d))
+    ctx = jnp.full((b,), s, jnp.int32)
+    got = ops.paged_decode_attention(q[:, :, 0], kp, vp,
+                                     jnp.asarray(phys, jnp.int32), ctx,
+                                     interpret=True)
+    assert float(jnp.max(jnp.abs(got - dense[:, :, 0]))) < 5e-6
