@@ -1,0 +1,146 @@
+"""Adapter-only uplinks and per-edge personalization of ``distill_fl``.
+
+Runs the federated personalized distillation strategy end to end through
+:class:`repro.api.Session` — cloud AD-LLM warmup, frozen teacher, per-pod
+LoRA students on non-IID town partitions, int8 adapter deltas over the
+vehicle->edge->cloud fabric — and accounts for the two claims the
+strategy makes:
+
+  * **wire**: an (A, B) adapter delta is >= 20x smaller on the vehicle
+    uplink than the full-delta payload a ``hier_fl`` round moves for the
+    same arch / topology / codec;
+  * **personalization**: each pod's student (base + pod adapter) beats
+    the global model (base + cloud-merged adapter) on its own pod's
+    held-out partition, measured as waypoint L1.
+
+Settings mirror the acceptance test in ``tests/test_distill_fl.py`` —
+the round schedule is part of the claim, so ``--quick`` shrinks nothing
+(it is recorded in the payload for provenance only). Writes schema-gated
+``BENCH_distill.json`` (sixth perf-trajectory entry;
+``scripts/validate_bench.py`` enforces the >= 20x uplink reduction and a
+non-negative personalization delta on every pod).
+
+    PYTHONPATH=src python benchmarks/distill_fl_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+DEFAULT_OUT = "BENCH_distill.json"
+TOPOLOGY = "2@nano*2"               # 2 edge pods x 1 vehicle each
+ROUNDS = 8
+
+
+def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
+    try:
+        from benchmarks.common import bench_session, emit
+    except ImportError:          # invoked as `python benchmarks/...py`
+        from common import bench_session, emit
+
+    from repro.api import LoopHooks
+    from repro.api.strategies import get_strategy
+    from repro.distill.federated import waypoint_eval
+
+    quiet = LoopHooks(log_every=10 ** 9, log_fn=lambda *a, **k: None)
+    ses = bench_session("flad-adllm", mesh=(2,), shape="16x8",
+                        strategy="distill_fl", learning_rate=3e-2,
+                        hooks=quiet, topology=TOPOLOGY, codec="int8",
+                        local_steps=2, lora_rank=4, kd_weight=0.1,
+                        mix=0.25, warmup_steps=30, beta=0.05,
+                        samples_per_vehicle=128, heldout=64)
+    outp = ses.run(ROUNDS)
+
+    st = ses.strategy
+    acfg = st.adllm_cfg(ses.cfg)
+    cs = st.comm_stats
+    adapter = {
+        "rank": st.lora_cfg.rank,
+        "bytes_per_client": cs["bytes_per_client"],
+        "uplink_bytes_per_round": cs["uplink_bytes"],
+        "backhaul_bytes_per_round": cs["backhaul_bytes"],
+        "sim_round_s": cs["round_time_s"],
+    }
+    # the full-delta comparison: a hier_fl round on the same arch,
+    # topology, and codec ships the whole parameter delta per vehicle
+    hs = get_strategy("hier_fl", topology=TOPOLOGY,
+                      codec="int8")._round_stats(ses.cfg)
+    full_delta = {
+        "bytes_per_client": hs["bytes_per_client"],
+        "uplink_bytes_per_round": hs["uplink_bytes"],
+        "backhaul_bytes_per_round": hs["backhaul_bytes"],
+        "sim_round_s": hs["round_time_s"],
+    }
+
+    _, held, _ = st.datasets(ses.cfg, ses.shape)
+    global_model = ses.merged_params()
+    pods = []
+    for e in range(len(held)):
+        g = waypoint_eval(global_model, acfg, held[e])
+        p = waypoint_eval(st.pod_params(ses.state, e), acfg, held[e])
+        pods.append({"pod": e, "global_l1": g, "pod_l1": p,
+                     "delta": g - p})
+
+    topo = st.topology
+    deltas = [p["delta"] for p in pods]
+    payload = {
+        "bench": "distill_fl",
+        "schema_version": 1,
+        "arch": ses.cfg.name,
+        "quick": bool(quick),
+        "rounds": ROUNDS,
+        "local_steps": st.local_steps,
+        "topology": {
+            "spec": TOPOLOGY,
+            "edges": topo.n_edges,
+            "vehicles": topo.n_clients,
+        },
+        "distill": {
+            "kd_weight": st.kd_weight,
+            "kd_temp": st.kd_temp,
+            "mix": st.mix,
+            "warmup_steps": st.warmup_steps,
+            "warmup_loss_first": float(st.warmup_history[0]),
+            "warmup_loss_last": float(st.warmup_history[-1]),
+        },
+        "adapter": adapter,
+        "full_delta": full_delta,
+        "pods": pods,
+        "summary": {
+            "uplink_reduction": (full_delta["uplink_bytes_per_round"]
+                                 / adapter["uplink_bytes_per_round"]),
+            "payload_reduction": (full_delta["bytes_per_client"]
+                                  / adapter["bytes_per_client"]),
+            "mean_personalization_delta": sum(deltas) / len(deltas),
+            "min_personalization_delta": min(deltas),
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    s = payload["summary"]
+    emit("distill/adapter/uplink_bytes",
+         adapter["uplink_bytes_per_round"],
+         f"full_delta={full_delta['uplink_bytes_per_round']}")
+    for p in pods:
+        emit(f"distill/pod{p['pod']}/waypoint_l1", p["pod_l1"],
+             f"global={p['global_l1']:.4f} delta={p['delta']:+.4f}")
+    print(f"distill_fl: x{s['uplink_reduction']:.1f} fewer uplink bytes "
+          f"than full-delta hier_fl, min pod delta "
+          f"{s['min_personalization_delta']:+.4f} -> {out}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

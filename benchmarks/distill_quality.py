@@ -1,121 +1,80 @@
-"""Paper Fig. 10 (direction): waypoint quality across LLM configurations —
-warmed teacher AD-LLM, distilled student ADM, from-scratch student, and
-LoRA-personalized teacher. Claim reproduced: distillation transfers most
-of the teacher's waypoint skill into the compact ADM; LoRA closes the
-regional gap at ~1-5% of parameters."""
+"""Paper Fig. 10 (direction): waypoint quality across the federated
+distillation stack — warmed cloud teacher, cloud-merged global student,
+and per-pod personalized students — all through the ``distill_fl``
+Session strategy (the same code path as the launcher and tests; the
+offline ``make_distill_step`` pipeline is no longer driven here).
+
+Claims reproduced in direction: the KD term transfers teacher skill into
+the adapters (the same schedule with ``kd_weight=0`` is emitted as the
+ablation), and per-pod LoRA personalization closes the regional gap at
+~1-5% of parameters."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
-from repro.configs import get_config
-from repro.configs.common import reduced
-from repro.data.synthetic import DrivingDataConfig, TownWorld, make_tokens
-from repro.distill.celladapt import (adllm_config, adllm_waypoints,
-                                     init_adllm, make_distill_step,
-                                     make_finetune_step, waypoint_l1)
-from repro.train.optimizer import Adam
+from benchmarks.common import bench_session, emit
 
 
-def _batch(world, dcfg, cfg, town, n, seed):
-    rng = np.random.default_rng(seed)
-    s = world.sample(town, n, rng)
-    return {"features": jnp.asarray(s["rgb"][:, :cfg.prefix_tokens]),
-            "tokens": jnp.asarray(make_tokens(s["light"], town, 32,
-                                              cfg.vocab_size, rng)),
-            "waypoints": jnp.asarray(s["waypoints"])}
+def _session(rounds, kd_weight):
+    from repro.api import LoopHooks
+    quiet = LoopHooks(log_every=10 ** 9, log_fn=lambda *a, **k: None)
+    ses = bench_session("flad-adllm", mesh=(2,), shape="16x8",
+                        strategy="distill_fl", learning_rate=3e-2,
+                        hooks=quiet, topology="2@nano*2", codec="int8",
+                        local_steps=2, lora_rank=4, kd_weight=kd_weight,
+                        mix=0.25, warmup_steps=30, beta=0.05,
+                        samples_per_vehicle=128, heldout=64)
+    ses.run(rounds)
+    return ses
 
 
 def run(quick: bool = False):
-    steps = 30 if quick else 80
-    base = reduced(get_config("flad_adllm"))
-    tcfg = adllm_config(base, feature_dim=64, feature_tokens=16,
-                        num_waypoints=10)
-    scfg = tcfg.replace(num_layers=1, d_ff=128)
-    dcfg = DrivingDataConfig(feature_dim=64, patches=16, num_waypoints=10)
-    world = TownWorld(dcfg)
-    key = jax.random.PRNGKey(0)
+    from repro.distill.federated import waypoint_eval
+    from repro.distill.lora import lora_param_count
 
-    teacher = init_adllm(key, tcfg)
-    opt = Adam(lr=2e-3)
-    ost = opt.init(teacher)
+    rounds = 4 if quick else 8
+    ses = _session(rounds, kd_weight=0.1)
+    st = ses.strategy
+    acfg = st.adllm_cfg(ses.cfg)
+    _, held, _ = st.datasets(ses.cfg, ses.shape)
+    base = ses.state[0]["base"]
+    global_model = ses.merged_params()
 
-    @jax.jit
-    def sup_step(p, st, batch, cfg_id):
-        del cfg_id
-        def loss(p):
-            wp = adllm_waypoints(p, tcfg, batch["features"],
-                                 batch["tokens"])
-            return waypoint_l1(wp, batch["waypoints"])
-        l, g = jax.value_and_grad(loss)(p)
-        p, st = opt.update(g, st, p)
-        return p, st, l
+    # the frozen teacher (cloud AD-LLM after supervised warmup)
+    t_l1 = float(np.mean([waypoint_eval(base, acfg, h) for h in held]))
+    emit("distill/teacher_L1", f"{t_l1:.4f}",
+         f"warmup {st.warmup_history[0]:.4f}->"
+         f"{st.warmup_history[-1]:.4f}")
 
-    for i in range(steps):
-        teacher, ost, tl = sup_step(teacher, ost,
-                                    _batch(world, dcfg, tcfg, i % 2, 16, i),
-                                    0)
-    eval_b = _batch(world, dcfg, tcfg, 0, 128, 999)
-    t_l1 = float(waypoint_l1(adllm_waypoints(
-        teacher, tcfg, eval_b["features"], eval_b["tokens"]),
-        eval_b["waypoints"]))
-    emit("distill/teacher_L1", f"{t_l1:.4f}")
+    # cloud-merged global student vs per-pod personalized students
+    g_l1 = float(np.mean([waypoint_eval(global_model, acfg, h)
+                          for h in held]))
+    emit("distill/global_L1", f"{g_l1:.4f}",
+         f"teacher better by {g_l1 - t_l1:+.4f}" if g_l1 > t_l1
+         else f"beats teacher by {t_l1 - g_l1:.4f}")
+    for e in range(len(held)):
+        g = waypoint_eval(global_model, acfg, held[e])
+        p = waypoint_eval(st.pod_params(ses.state, e), acfg, held[e])
+        emit(f"distill/pod{e}_personalized_L1", f"{p:.4f}",
+             f"global {g:.4f}, regional gain {g - p:+.4f}")
 
-    # distilled student
-    student = init_adllm(jax.random.PRNGKey(1), scfg)
-    dstep, dopt = make_distill_step(tcfg, scfg, lr=2e-3)
-    dst = dopt.init(student)
-    for i in range(steps):
-        student, dst, _ = dstep(student, dst, teacher,
-                                _batch(world, dcfg, tcfg, i % 2, 16,
-                                       500 + i))
-    s_l1 = float(waypoint_l1(adllm_waypoints(
-        student, scfg, eval_b["features"], eval_b["tokens"]),
-        eval_b["waypoints"]))
-    emit("distill/student_distilled_L1", f"{s_l1:.4f}")
+    # adapter footprint: what personalization actually trains
+    factors0 = jax.tree.map(lambda x: x[0], ses.state[0]["factors"])
+    n_lora = lora_param_count(factors0)
+    n_full = sum(x.size for x in jax.tree.leaves(base))
+    emit("distill/lora_param_frac", f"{n_lora / n_full:.4f}",
+         f"{n_lora}/{n_full} params")
 
-    # from-scratch student (no teacher)
-    scr = init_adllm(jax.random.PRNGKey(2), scfg)
-    sopt = Adam(lr=2e-3)
-    sst = sopt.init(scr)
-
-    @jax.jit
-    def scr_step(p, st, batch):
-        def loss(p):
-            wp = adllm_waypoints(p, scfg, batch["features"],
-                                 batch["tokens"])
-            return waypoint_l1(wp, batch["waypoints"])
-        l, g = jax.value_and_grad(loss)(p)
-        p, st = sopt.update(g, st, p)
-        return p, st, l
-
-    # the paper's setting: labeled local data is scarce at the edge (the
-    # teacher's skill came from the cloud corpus) — the from-scratch
-    # student sees only a handful of labeled batches
-    for i in range(max(steps // 8, 5)):
-        scr, sst, _ = scr_step(scr, sst,
-                               _batch(world, dcfg, tcfg, i % 2, 16,
-                                      900 + i % 3))
-    scr_l1 = float(waypoint_l1(adllm_waypoints(
-        scr, scfg, eval_b["features"], eval_b["tokens"]),
-        eval_b["waypoints"]))
-    emit("distill/student_scratch_L1", f"{scr_l1:.4f}",
-         f"distilled better by {scr_l1 - s_l1:.4f}")
-
-    # LoRA personalization to an unseen town
-    fstep, lora, fopt = make_finetune_step(tcfg, teacher, lr=5e-3)
-    fst = fopt.init(lora)
-    b3 = _batch(world, dcfg, tcfg, 3, 128, 777)
-    pre = float(waypoint_l1(adllm_waypoints(
-        teacher, tcfg, b3["features"], b3["tokens"]), b3["waypoints"]))
-    for i in range(steps):
-        lora, fst, _ = fstep(lora, fst,
-                             _batch(world, dcfg, tcfg, 3, 16, 1500 + i))
-    from repro.distill.lora import LoRAConfig, merge_lora
-    merged = merge_lora(teacher, lora, LoRAConfig())
-    post = float(waypoint_l1(adllm_waypoints(
-        merged, tcfg, b3["features"], b3["tokens"]), b3["waypoints"]))
-    emit("distill/lora_region_L1", f"{pre:.4f}->{post:.4f}",
-         "personalization gain")
+    # KD ablation: same schedule, students cut off from the teacher
+    ses0 = _session(rounds, kd_weight=0.0)
+    st0 = ses0.strategy
+    _, held0, _ = st0.datasets(ses0.cfg, ses0.shape)
+    a_l1 = float(np.mean([waypoint_eval(st0.pod_params(ses0.state, e),
+                                        acfg, held0[e])
+                          for e in range(len(held0))]))
+    p_l1 = float(np.mean([waypoint_eval(st.pod_params(ses.state, e),
+                                        acfg, held[e])
+                          for e in range(len(held))]))
+    emit("distill/no_kd_personalized_L1", f"{a_l1:.4f}",
+         f"with KD {p_l1:.4f}, KD contributes {a_l1 - p_l1:+.4f}")

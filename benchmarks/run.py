@@ -12,6 +12,8 @@
                                            (writes BENCH_async.json)
   Fig. 2 serving tier (paged KV +       -> serving_bench
          continuous batching)              (writes BENCH_serving.json)
+  §3.2 personalized distillation        -> distill_fl_bench
+        (adapter uplinks, per-pod wins)    (writes BENCH_distill.json)
   Fig. 6(a,b) pipeline execution time   -> pipeline_exec
   Fig. 7(a,b) + Table 2 FHDP            -> fhdp_throughput
   Fig. 8(a) FL accuracy                 -> fl_accuracy
@@ -40,10 +42,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (async_bench, attention_bench, comm_bench,
-                            distill_quality, fhdp_throughput, fl_accuracy,
-                            pipeline_exec, recovery_bench,
-                            repartition_latency, roofline, serving_bench,
-                            swift_opt)
+                            distill_fl_bench, distill_quality,
+                            fhdp_throughput, fl_accuracy, pipeline_exec,
+                            recovery_bench, repartition_latency, roofline,
+                            serving_bench, swift_opt)
 
     agent_holder = {}
 
@@ -63,6 +65,7 @@ def main() -> None:
         ("comm", lambda: comm_bench.run(quick=args.quick)),
         ("async", lambda: async_bench.run(quick=args.quick)),
         ("serving", lambda: serving_bench.run(quick=args.quick)),
+        ("distill_fl", lambda: distill_fl_bench.run(quick=args.quick)),
         ("fhdp_throughput", lambda: fhdp_throughput.run(quick=args.quick)),
         ("fl_accuracy", lambda: fl_accuracy.run(quick=args.quick)),
         ("distill_quality", lambda: distill_quality.run(quick=args.quick)),

@@ -1,6 +1,14 @@
-"""CELLAdapt demo (paper §5.2 / Fig. 10): distill the edge AD-LLM teacher
-into a compact ADM student on waypoint outputs, then LoRA-personalize the
-teacher to one region's data. Device setup goes through repro.api.
+"""CELLAdapt demo (paper §3.3/§5.2, Fig. 10): federated personalized
+distillation through the ``distill_fl`` Session strategy — the same code
+path the launcher, tests, and benchmarks run.
+
+One Session stands up the whole loop: supervised warmup of the cloud
+AD-LLM (which then freezes as the teacher), per-pod LoRA students
+trained with the KD loss on their pod's non-IID town partition, and
+int8-compressed (A, B) adapter deltas riding the vehicle->edge->cloud
+fabric. Afterwards the demo compares each pod's personalized model
+against the cloud-merged global model on that pod's held-out split, and
+prints what a round actually put on the wire.
 
     PYTHONPATH=src python examples/celladapt_distill.py
 """
@@ -8,97 +16,61 @@ import argparse
 
 from repro.api import ensure_host_devices
 
-ensure_host_devices(1)
+ensure_host_devices(2)
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_config
-from repro.configs.common import reduced
-from repro.data.synthetic import DrivingDataConfig, TownWorld, make_tokens
-from repro.distill.celladapt import (adllm_config, adllm_waypoints,
-                                     init_adllm, make_distill_step,
-                                     make_finetune_step, waypoint_l1)
+from repro.api import LoopHooks, Session
+from repro.api.strategies import get_strategy
+from repro.distill.federated import waypoint_eval
 from repro.distill.lora import lora_param_count
-
-
-def make_batch(world, dcfg, cfg, town, n, seed):
-    rng = np.random.default_rng(seed)
-    s = world.sample(town, n, rng)
-    feats = s["rgb"][:, :cfg.prefix_tokens, :]
-    toks = make_tokens(s["light"], town, 32, cfg.vocab_size, rng)
-    return {"features": jnp.asarray(feats), "tokens": jnp.asarray(toks),
-            "waypoints": jnp.asarray(s["waypoints"])}
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--mix", type=float, default=0.25,
+                    help="blend toward the cloud merge (1 = global "
+                         "FedAvg-of-adapters, 0 = fully local)")
     args = ap.parse_args()
 
-    base = reduced(get_config("flad-adllm"))
-    tcfg = adllm_config(base, feature_dim=64, feature_tokens=16,
-                        num_waypoints=10)
-    scfg = tcfg.replace(num_layers=1, d_ff=128)   # the compact ADM
-    dcfg = DrivingDataConfig(feature_dim=64, patches=16, num_waypoints=10)
-    world = TownWorld(dcfg)
+    sess = Session("flad-adllm", shape="16x8", mesh=(2,),
+                   strategy="distill_fl", learning_rate=3e-2, seed=0,
+                   hooks=LoopHooks(log_every=2), topology="2@nano*2",
+                   codec="int8", local_steps=2, lora_rank=4,
+                   kd_weight=0.1, mix=args.mix, warmup_steps=30,
+                   beta=0.05, samples_per_vehicle=128, heldout=64)
+    sess.run(args.rounds)
+    st = sess.strategy
 
-    key = jax.random.PRNGKey(0)
-    teacher = init_adllm(key, tcfg)
-    student = init_adllm(jax.random.PRNGKey(1), scfg)
+    wh = st.warmup_history
+    print(f"\nteacher warmup: supervised waypoint L1 "
+          f"{wh[0]:.4f} -> {wh[-1]:.4f} over {len(wh)} steps (frozen)")
 
-    # give the teacher some waypoint skill first (supervised warmup)
-    from repro.train.optimizer import Adam
-    topt = Adam(lr=2e-3)
-    tstate = topt.init(teacher)
+    # adapter size: what each vehicle trains and uplinks vs the full model
+    factors0 = jax.tree.map(lambda x: x[0], sess.state[0]["factors"])
+    n_lora = lora_param_count(factors0)
+    n_full = sum(x.size for x in jax.tree.leaves(sess.state[0]["base"]))
+    cs = st.comm_stats
+    full = get_strategy("hier_fl", topology="2@nano*2",
+                        codec="int8")._round_stats(sess.cfg)
+    print(f"adapter: {n_lora}/{n_full} params "
+          f"({100 * n_lora / n_full:.2f}%), uplink "
+          f"{cs['uplink_bytes']} B/round vs {full['uplink_bytes']} B "
+          f"full-delta (x{full['uplink_bytes'] / cs['uplink_bytes']:.1f} "
+          f"smaller)")
 
-    @jax.jit
-    def tstep(tp, st, batch):
-        def loss(tp):
-            wp = adllm_waypoints(tp, tcfg, batch["features"],
-                                 batch["tokens"])
-            return waypoint_l1(wp, batch["waypoints"])
-        l, g = jax.value_and_grad(loss)(tp)
-        tp, st = topt.update(g, st, tp)
-        return tp, st, l
-
-    for i in range(args.steps):
-        b = make_batch(world, dcfg, tcfg, town=i % 2, n=16, seed=i)
-        teacher, tstate, tl = tstep(teacher, tstate, b)
-    print(f"teacher waypoint L1 after warmup: {float(tl):.4f}")
-
-    # 1) edge distillation: teacher -> student on waypoint outputs
-    dstep, dopt = make_distill_step(tcfg, scfg, lr=2e-3)
-    dstate = dopt.init(student)
-    for i in range(args.steps):
-        b = make_batch(world, dcfg, tcfg, town=i % 2, n=16, seed=1000 + i)
-        student, dstate, dl = dstep(student, dstate, teacher, b)
-    print(f"student/teacher waypoint L1 after distillation: {float(dl):.4f}")
-
-    # student quality vs ground truth
-    b = make_batch(world, dcfg, tcfg, town=0, n=64, seed=7)
-    s_wp = adllm_waypoints(student, scfg, b["features"], b["tokens"])
-    print(f"student ground-truth L1: "
-          f"{float(waypoint_l1(s_wp, b['waypoints'])):.4f}")
-
-    # 2) LoRA personalization of the teacher to town 3 (unseen region)
-    fstep, lora, fopt = make_finetune_step(tcfg, teacher, lr=5e-3)
-    fstate = fopt.init(lora)
-    b3 = make_batch(world, dcfg, tcfg, town=3, n=64, seed=11)
-    wp_pre = adllm_waypoints(teacher, tcfg, b3["features"], b3["tokens"])
-    pre = float(waypoint_l1(wp_pre, b3["waypoints"]))
-    for i in range(args.steps):
-        bt = make_batch(world, dcfg, tcfg, town=3, n=16, seed=2000 + i)
-        lora, fstate, fl = fstep(lora, fstate, bt)
-    from repro.distill.lora import LoRAConfig, merge_lora
-    merged = merge_lora(teacher, lora, LoRAConfig())
-    wp_post = adllm_waypoints(merged, tcfg, b3["features"], b3["tokens"])
-    post = float(waypoint_l1(wp_post, b3["waypoints"]))
-    n_lora = lora_param_count(lora)
-    n_full = sum(x.size for x in jax.tree.leaves(teacher))
-    print(f"LoRA personalization (town 3): L1 {pre:.4f} -> {post:.4f} "
-          f"training {n_lora}/{n_full} = {100*n_lora/n_full:.2f}% of params")
+    # personalization: pod student vs cloud-merged global, per pod
+    acfg = st.adllm_cfg(sess.cfg)
+    _, held, mixtures = st.datasets(sess.cfg, sess.shape)
+    global_model = sess.merged_params()
+    for e in range(len(held)):
+        g = waypoint_eval(global_model, acfg, held[e])
+        p = waypoint_eval(st.pod_params(sess.state, e), acfg, held[e])
+        towns = ", ".join(f"{m:.2f}" for m in mixtures[e])
+        print(f"pod {e} (town mix [{towns}]): waypoint L1 "
+              f"global {g:.4f} -> personalized {p:.4f} "
+              f"({'+' if g >= p else ''}{g - p:.4f})")
 
 
 if __name__ == "__main__":

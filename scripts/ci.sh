@@ -28,6 +28,11 @@ if [[ "${1:-}" != "--fast" ]]; then
       --mesh 2 --topology "2@nano*2,agx*2" --codec int8 \
       --async-clock 0.3 --migrate-every 0.5 --compute-jitter 0.2 --steps 2
 
+  echo "=== smoke: federated personalized distillation (LoRA uplinks) ==="
+  python -m repro.launch.train --strategy distill_fl --arch flad-adllm \
+      --shape 16x8 --devices 2 --mesh 2 --topology "2@nano*2,agx*2" \
+      --codec int8 --steps 2 --distill-warmup 4
+
   echo "=== smoke: async FL migration example ==="
   python examples/async_fl_migration.py --rounds 3
 
@@ -67,12 +72,18 @@ if [[ "${1:-}" != "--fast" ]]; then
       --out /tmp/BENCH_serving.quick.json
   python scripts/validate_bench.py /tmp/BENCH_serving.quick.json
 
+  echo "=== bench: personalized distillation (quick, scratch output) ==="
+  python benchmarks/distill_fl_bench.py --quick \
+      --out /tmp/BENCH_distill.quick.json
+  python scripts/validate_bench.py /tmp/BENCH_distill.quick.json
+
   echo "=== validate committed perf-trajectory artifacts ==="
   python scripts/validate_bench.py BENCH_repartition.json
   python scripts/validate_bench.py BENCH_attention.json
   python scripts/validate_bench.py BENCH_comm.json
   python scripts/validate_bench.py BENCH_async.json
   python scripts/validate_bench.py BENCH_serving.json
+  python scripts/validate_bench.py BENCH_distill.json
 fi
 
 echo "CI OK"

@@ -26,12 +26,20 @@ schemas. Dispatches on the payload's ``bench`` field:
     mixed-length fleet trace with bit-identical greedy streams, and the
     int8-quantized cache flips <= 2% of greedy tokens under
     teacher-forced replay.
+  * ``distill_fl`` (BENCH_distill.json) — enforces the two claims of the
+    federated personalized distillation strategy: the (A, B) adapter
+    uplink moves >= 20x fewer bytes per round than full-delta ``hier_fl``
+    on the same arch/topology/codec, and every edge pod's student (base +
+    pod adapter) is no worse than the global model on its own held-out
+    partition (non-negative waypoint-L1 delta, strictly positive on
+    average).
 
     python scripts/validate_bench.py BENCH_repartition.json
     python scripts/validate_bench.py BENCH_attention.json
     python scripts/validate_bench.py BENCH_comm.json
     python scripts/validate_bench.py BENCH_async.json
     python scripts/validate_bench.py BENCH_serving.json
+    python scripts/validate_bench.py BENCH_distill.json
 """
 import json
 import math
@@ -113,6 +121,22 @@ SERVING_INT8 = {
 }
 MIN_CONTINUOUS_SPEEDUP = 1.5        # warm tok/s, continuous vs rebatch
 MAX_INT8_GREEDY_DISAGREEMENT = 0.02  # teacher-forced flip rate
+
+DISTILL_TOP = {
+    "bench": str, "schema_version": int, "arch": str, "quick": bool,
+    "rounds": int, "local_steps": int, "topology": dict, "distill": dict,
+    "adapter": dict, "full_delta": dict, "pods": list, "summary": dict,
+}
+DISTILL_WIRE = {
+    "bytes_per_client": int, "uplink_bytes_per_round": int,
+    "backhaul_bytes_per_round": int, "sim_round_s": (int, float),
+}
+DISTILL_POD = {
+    "pod": int, "global_l1": (int, float), "pod_l1": (int, float),
+    "delta": (int, float),
+}
+MIN_ADAPTER_UP_REDUCTION = 20.0  # adapter uplink vs full-delta hier_fl
+MIN_POD_DELTA = 0.0              # no pod may lose to the global model
 
 # the kernel VJP's normalized peak may wobble (padding, residual dtype)
 # but must not grow with S; the reference VJP's raw peak is the
@@ -345,12 +369,66 @@ def validate_serving(data: dict, path: str) -> None:
           f"{data['int8']['positions']} positions)")
 
 
+def validate_distill(data: dict, path: str) -> None:
+    check_keys(data, DISTILL_TOP, "payload")
+    adapter, full = data["adapter"], data["full_delta"]
+    check_keys(adapter, DISTILL_WIRE, "adapter")
+    check_keys(full, DISTILL_WIRE, "full_delta")
+    if adapter.get("rank", 0) <= 0:
+        fail("adapter rank not positive")
+    for side, d in (("adapter", adapter), ("full_delta", full)):
+        for key in ("bytes_per_client", "uplink_bytes_per_round",
+                    "backhaul_bytes_per_round"):
+            if d[key] <= 0:
+                fail(f"{side}[{key!r}] not positive")
+        if d["sim_round_s"] <= 0:
+            fail(f"{side} sim_round_s not positive")
+    reduction = (full["uplink_bytes_per_round"]
+                 / adapter["uplink_bytes_per_round"])
+    if reduction < MIN_ADAPTER_UP_REDUCTION:
+        fail(f"adapter uplink moves only x{reduction:.1f} fewer bytes "
+             f"than full-delta hier_fl (need >= "
+             f"x{MIN_ADAPTER_UP_REDUCTION:.0f}) — the uplink is not "
+             "adapter-only")
+    dist = data["distill"]
+    for key in ("warmup_loss_first", "warmup_loss_last"):
+        if key not in dist or not math.isfinite(dist[key]):
+            fail(f"distill[{key!r}] missing or not finite")
+    if dist["warmup_loss_last"] >= dist["warmup_loss_first"]:
+        fail("cloud teacher warmup did not reduce the supervised loss — "
+             "students are distilling from an untrained teacher")
+    pods = data["pods"]
+    if len(pods) != data["topology"].get("edges"):
+        fail(f"{len(pods)} pod entries for "
+             f"{data['topology'].get('edges')} edges")
+    for p in pods:
+        check_keys(p, DISTILL_POD, f"pods[{p.get('pod')}]")
+        for key in ("global_l1", "pod_l1"):
+            if not (p[key] > 0 and math.isfinite(p[key])):
+                fail(f"pods[{p['pod']}] {key} not positive-finite")
+        if abs(p["delta"] - (p["global_l1"] - p["pod_l1"])) > 1e-9:
+            fail(f"pods[{p['pod']}] delta inconsistent with its losses")
+        if p["delta"] < MIN_POD_DELTA:
+            fail(f"pod {p['pod']}'s student loses to the global model on "
+                 f"its own held-out partition (delta {p['delta']:+.4f}) "
+                 "— personalization is not happening")
+    mean_delta = data["summary"].get("mean_personalization_delta")
+    if not (mean_delta is not None and mean_delta > 0):
+        fail("mean personalization delta not positive — the per-pod "
+             "adapters are indistinguishable from the cloud merge")
+
+    print(f"validate_bench: OK — {path} (adapter uplink x{reduction:.1f} "
+          f"smaller than full-delta, {len(pods)} pods all >= global, "
+          f"mean delta {mean_delta:+.4f})")
+
+
 VALIDATORS = {
     "repartition_latency": validate_repartition,
     "attention_fwd_bwd": validate_attention,
     "comm_fabric": validate_comm,
     "async_fabric": validate_async,
     "serving_tier": validate_serving,
+    "distill_fl": validate_distill,
 }
 
 

@@ -217,7 +217,8 @@ class Session:
             init_state = state
         hooks = hooks or self.hooks or (
             LoopHooks(log_every=1) if self.strategy.loop in ("round",
-                                                             "async")
+                                                             "async",
+                                                             "distill")
             else LoopHooks())
         if hooks.backup is not None and hooks.backup_view is None:
             # default the edge snapshot to the merged flat model, the form
@@ -231,7 +232,7 @@ class Session:
             hooks = dataclasses.replace(
                 hooks, checkpoint_meta=self._checkpoint_meta)
         params, opt = init_state
-        if self.strategy.loop in ("round", "async"):
+        if self.strategy.loop in ("round", "async", "distill"):
             if batches is None:
                 it = self.default_batches()
                 round_fn = lambda r: next(it)          # noqa: E731
@@ -249,8 +250,19 @@ class Session:
                 round_fn = lambda r, _it=iter(batches): next(_it)  # noqa: E731
             loop = async_fl_loop if self.strategy.loop == "async" \
                 else fl_loop
-            out = loop(step, params, opt, round_fn, rounds=steps,
-                       hooks=hooks)
+            loop_kw = {}
+            client_like = params
+            if self.strategy.loop == "distill":
+                # student/teacher split: the loop carries only the
+                # trainable adapters; the frozen base rides along as the
+                # per-round teacher and rejoins the state afterwards
+                loop_kw["teacher"] = params["base"]
+                client_like = params["factors"]
+            out = loop(step, client_like, opt, round_fn, rounds=steps,
+                       hooks=hooks, **loop_kw)
+            if self.strategy.loop == "distill":
+                out["client_params"] = {"base": params["base"],
+                                        "factors": out["client_params"]}
             self.state = (out["client_params"], out["client_opt"])
         else:
             it = iter(batches) if batches is not None \
@@ -266,7 +278,8 @@ class Session:
     def serve(self, *, requests: int = 3, batch: int = 8, context: int = 64,
               decode_steps: int = 16, params=None, scheduler: str = "legacy",
               sampling: str = "greedy", temperature: float = 1.0,
-              log_fn=print, **serve_options) -> Dict:
+              pod: Optional[int] = None, log_fn=print,
+              **serve_options) -> Dict:
         """Batched prefill+decode serving (paper Fig. 2); uses the trained
         session params when available, else a fresh init.
 
@@ -278,8 +291,24 @@ class Session:
         ``batch`` the number of lanes, ``context`` the prefill bucket,
         and extra ``serve_options`` (``block_size``, ``cache``,
         ``fleet``, ...) pass straight to
-        :func:`repro.serve.serve_continuous`."""
+        :func:`repro.serve.serve_continuous`.
+
+        ``pod``: serve edge pod ``pod``'s **personalized** model — the
+        strategy's ``pod_params`` view (``distill_fl``: base weights with
+        that pod's LoRA adapter folded in via ``merge_lora``) instead of
+        the global merge."""
         self.mesh  # force device setup once, like every other entrypoint
+        if pod is not None:
+            if params is not None:
+                raise ValueError("pass either params or pod, not both")
+            if not hasattr(self.strategy, "pod_params"):
+                raise ValueError(
+                    f"strategy {self.strategy.name!r} has no per-pod "
+                    f"personalized view (pod= needs distill_fl)")
+            if self.state is None:
+                raise RuntimeError("no state yet; run() before serving "
+                                   "a personalized pod model")
+            params = self.strategy.pod_params(self.state, pod)
         if params is None and self.state is not None:
             params = self.merged_params()
         if scheduler == "continuous":

@@ -34,6 +34,11 @@ Registered strategies:
                       and vehicles migrate between edge pods mid-run; with
                       an infinite deadline, zero jitter, and no migrations
                       it reproduces ``hier_fl`` bit for bit
+  ``distill_fl``      federated personalized distillation (paper
+                      §3.3/§5.2): a frozen cloud AD-LLM teaches per-pod
+                      LoRA students on non-IID pod partitions, and only
+                      (A, B) adapter deltas ride the ``hier_fl`` fabric —
+                      orders of magnitude fewer uplink bytes per round
 
 New execution modes plug in via :func:`register_strategy` instead of
 another bespoke launcher.
@@ -469,11 +474,16 @@ class HierFLStrategy(FedAvgStrategy):
         self._residual = None
         self._key = None
 
+    def _wire_tree(self, cfg):
+        """The abstract tree whose bytes ride the uplink (full params
+        here; ``distill_fl`` overrides with the LoRA factor tree)."""
+        return _abstract_init(cfg)
+
     def _round_stats(self, cfg) -> Dict:
         """Static per-round wire accounting from the link models."""
         from repro.comm.codecs import tree_edge_nbytes, tree_nbytes
         from repro.comm.hierarchy import staleness_weights
-        ptree = _abstract_init(cfg)
+        ptree = self._wire_tree(cfg)
         per_client = tree_nbytes(self.codec, ptree)
         per_edge = [tree_edge_nbytes(self.codec, ptree, len(members))
                     for members in self.topology.edges]
@@ -629,6 +639,241 @@ class AsyncHierFLStrategy(HierFLStrategy):
         if self.engine is not None and self.engine.version > 0:
             return self.engine.global_params
         return super().merge_params(state, cfg)
+
+
+@register_strategy("distill_fl")
+class DistillFLStrategy(HierFLStrategy):
+    """Federated personalized distillation (paper §3.3/§5.2): the cloud
+    AD-LLM teaches per-pod LoRA students and **only adapter deltas ride
+    the fabric**.
+
+    ``init`` warms the AD-LLM on public (IID) driving data
+    (``warmup_steps`` supervised waypoint steps), freezes it as the
+    teacher/backbone, and hands every vehicle the same zero-initialized
+    (A, B) factor tree. Each round (see
+    :func:`repro.distill.federated.make_distill_round`) the vmapped
+    students take ``local_steps`` KD steps on their pod's non-IID
+    partition — the fused base+low-rank kernel, never merged weights —
+    then factor deltas go through the codec (error feedback and all),
+    pods partially average, and the cloud merge is **blended** back per
+    pod: ``mix=1`` is global FedAvg-of-adapters, ``mix=0`` fully local,
+    in between pods keep a personalized adapter while sharing global
+    structure.
+
+    State is ``({"base": frozen params, "factors": [C, ...] factor
+    tree}, client opt)``; ``merge_params`` gives the global view (base +
+    cloud-merged adapter) and :meth:`pod_params` the per-pod
+    personalized model that ``Session.serve(pod=e)`` hands to the
+    serving tier.
+    """
+
+    loop = "distill"
+
+    def __init__(self, *, learning_rate: float = 1e-2,
+                 local_steps: int = 1, topology="2@nano*2,agx*2",
+                 codec: str = "int8",
+                 codec_options: Optional[Dict] = None,
+                 client_weights: Optional[Any] = None,
+                 async_decay: Optional[float] = None,
+                 async_deadline: Optional[float] = None, seed: int = 0,
+                 lora_rank: int = 4, lora_alpha: Optional[float] = None,
+                 lora_targets: Optional[Tuple[str, ...]] = None,
+                 kd_weight: float = 0.3, kd_temp: float = 2.0,
+                 logit_weight: float = 0.1, mix: float = 0.5,
+                 warmup_steps: int = 20, warmup_lr: float = 1e-3,
+                 feature_dim: int = 32, feature_tokens: int = 8,
+                 num_waypoints: int = 6, n_towns: int = 4,
+                 samples_per_vehicle: int = 256, heldout: int = 64,
+                 beta: float = 0.1, data_seed: int = 0):
+        from repro.distill.lora import DEFAULT_TARGETS, LoRAConfig
+        super().__init__(learning_rate=learning_rate,
+                         local_steps=local_steps, topology=topology,
+                         codec=codec, codec_options=codec_options,
+                         client_weights=client_weights,
+                         async_decay=async_decay,
+                         async_deadline=async_deadline, seed=seed)
+        self.lora_cfg = LoRAConfig(
+            rank=lora_rank,
+            alpha=float(lora_alpha if lora_alpha is not None
+                        else 2 * lora_rank),
+            targets=tuple(lora_targets or DEFAULT_TARGETS))
+        self.kd_weight = kd_weight
+        self.kd_temp = kd_temp
+        self.logit_weight = logit_weight
+        self.mix = mix
+        self.warmup_steps = warmup_steps
+        self.warmup_lr = warmup_lr
+        self.feature_dim = feature_dim
+        self.feature_tokens = feature_tokens
+        self.num_waypoints = num_waypoints
+        self.n_towns = n_towns
+        self.samples_per_vehicle = samples_per_vehicle
+        self.heldout = heldout
+        self.beta = beta
+        self.data_seed = data_seed
+        self.warmup_history: Optional[list] = None
+        self._base = None
+        self._data = None
+        self._round_ctr = 0
+
+    # ---- configs / data ---------------------------------------------------
+    def adllm_cfg(self, cfg):
+        """The AD-LLM view of the session config (prefix features +
+        waypoint head); the base ``cfg`` still drives serving."""
+        from repro.distill.celladapt import adllm_config
+        if cfg.family != "dense":
+            raise ValueError(
+                f"distill_fl needs a dense AD-LLM config, got family "
+                f"{cfg.family!r}")
+        return adllm_config(cfg, feature_dim=self.feature_dim,
+                            feature_tokens=self.feature_tokens,
+                            num_waypoints=self.num_waypoints)
+
+    def _driving_cfg(self):
+        from repro.data.synthetic import DrivingDataConfig
+        return DrivingDataConfig(n_towns=self.n_towns,
+                                 patches=self.feature_tokens,
+                                 feature_dim=self.feature_dim,
+                                 num_waypoints=self.num_waypoints,
+                                 seed=self.data_seed)
+
+    def datasets(self, cfg, shape):
+        """(per-vehicle train sets, per-pod held-out sets, pod
+        mixtures) — built once per strategy lifetime."""
+        if self._data is None:
+            from repro.data.partition import pod_datasets
+            acfg = self.adllm_cfg(cfg)
+            self._data = pod_datasets(
+                self._driving_cfg(), self.topology.member_indices,
+                self.samples_per_vehicle, seq_len=shape.seq_len,
+                vocab=acfg.vocab_size, beta=self.beta,
+                seed=self.data_seed, heldout=self.heldout)
+        return self._data
+
+    # ---- wire accounting: only the factor tree rides the uplink -----------
+    def _wire_tree(self, cfg):
+        from repro.distill.celladapt import init_adllm
+        from repro.distill.lora import init_lora
+        acfg = self.adllm_cfg(cfg)
+        params = jax.eval_shape(lambda k: init_adllm(k, acfg),
+                                jax.random.PRNGKey(0))
+        return jax.eval_shape(
+            lambda k: init_lora(k, params, self.lora_cfg),
+            jax.random.PRNGKey(0))
+
+    # ---- strategy protocol ------------------------------------------------
+    def init(self, cfg, shape, mesh, key):
+        from repro.core.fedavg import stack_clients
+        from repro.data.partition import adllm_public_dataset
+        from repro.data.pipeline import batches as data_batches
+        from repro.distill.celladapt import init_adllm
+        from repro.distill.federated import warmup_base
+        from repro.distill.lora import init_lora
+        acfg = self.adllm_cfg(cfg)
+        kb, kl = jax.random.split(key)
+        base = init_adllm(kb, acfg)
+        if self.warmup_steps:
+            pub = adllm_public_dataset(
+                self._driving_cfg(),
+                max(self.warmup_steps * shape.global_batch,
+                    shape.global_batch),
+                seq_len=shape.seq_len, vocab=acfg.vocab_size,
+                seed=self.data_seed + 31)
+            it = data_batches(pub, shape.global_batch, seed=self.data_seed,
+                              epochs=self.warmup_steps)
+            warm = [{k: jnp.asarray(v) for k, v in b.items()}
+                    for _, b in zip(range(self.warmup_steps), it)]
+            base, self.warmup_history = warmup_base(base, acfg, warm,
+                                                    lr=self.warmup_lr)
+        factors = init_lora(kl, base, self.lora_cfg)
+        cf = stack_clients(factors, self.topology.n_clients)
+        client_opt = jax.vmap(self._optimizer().init)(cf)
+        self._base = base
+        self._residual = None
+        self._key = jax.random.fold_in(key, 1)
+        self._round_ctr = 0
+        return ({"base": base, "factors": cf}, client_opt)
+
+    def make_step(self, cfg, shape, mesh):
+        from repro.comm.codecs import zero_residual
+        from repro.distill.federated import make_distill_round
+
+        stats = self._round_stats(cfg)
+        self.comm_stats = stats
+        distill_round = jax.jit(make_distill_round(
+            self.adllm_cfg(cfg), self._optimizer(), self.topology,
+            self.codec, lora_cfg=self.lora_cfg,
+            local_steps=self.local_steps, kd_weight=self.kd_weight,
+            kd_temp=self.kd_temp, logit_weight=self.logit_weight,
+            mix=self.mix, client_weights=self.client_weights,
+            staleness=stats["staleness"]))
+        wire_metrics = {
+            "comm_bytes_up": float(stats["uplink_bytes"]),
+            "comm_bytes_backhaul": float(stats["backhaul_bytes"]),
+            "sim_round_s": float(stats["round_time_s"]),
+        }
+
+        def round_fn(client_factors, client_opt, batches, base):
+            if self._key is None:
+                self._key = jax.random.PRNGKey(self.seed)
+            if self._residual is None:
+                self._residual = zero_residual(client_factors)
+            self._key, sub = jax.random.split(self._key)
+            client_factors, client_opt, metrics, self._residual = \
+                distill_round(client_factors, client_opt, batches, base,
+                              self._residual, sub)
+            return client_factors, client_opt, dict(metrics,
+                                                    **wire_metrics)
+
+        return round_fn
+
+    def param_specs(self, cfg, mesh):
+        raise NotImplementedError(
+            "distill_fl state is host-driven (frozen base + "
+            "client-stacked adapters); it has no mesh sharding specs")
+
+    def _unpack(self, params_like):
+        if isinstance(params_like, dict) and "base" in params_like \
+                and "factors" in params_like:
+            return params_like["base"], params_like["factors"]
+        if self._base is None:
+            raise RuntimeError(
+                "distill_fl has no frozen base yet; init the session "
+                "(build/run) before asking for a merged view")
+        return self._base, params_like
+
+    def merge_params(self, state, cfg=None):
+        """Global view: base + cloud-merged (hierarchical-mean) adapter."""
+        from repro.comm.hierarchy import hierarchical_mean
+        from repro.distill.lora import merge_lora
+        base, factors = self._unpack(state[0])
+        w = None if self.client_weights is None else \
+            jnp.asarray(self.client_weights, jnp.float32)
+        gf = hierarchical_mean(factors, w, self.topology)
+        return merge_lora(base, gf, self.lora_cfg)
+
+    def pod_params(self, state, pod: int):
+        """Pod ``pod``'s personalized model: base + that pod's adapter
+        folded in (the serving handoff)."""
+        from repro.distill.lora import merge_lora
+        base, factors = self._unpack(state[0])
+        members = self.topology.member_indices
+        if not 0 <= pod < len(members):
+            raise ValueError(
+                f"pod {pod} out of range for {len(members)} edge pods")
+        idx = np.asarray(members[pod])
+        pf = jax.tree.map(
+            lambda x: x[idx].astype(jnp.float32).mean(axis=0), factors)
+        return merge_lora(base, pf, self.lora_cfg)
+
+    def default_batch(self, cfg, shape, mesh, key):
+        from repro.data.pipeline import client_round_batches
+        train, _, _ = self.datasets(cfg, shape)
+        b = client_round_batches(train, self.local_steps,
+                                 shape.global_batch,
+                                 round_idx=self._round_ctr)
+        self._round_ctr += 1
+        return {k: jnp.asarray(v) for k, v in b.items()}
 
 
 @register_strategy("fl_pipeline")

@@ -130,6 +130,26 @@ def cloud_merge_at(global_params, partials, partial_weights,
         global_params, merged)
 
 
+def pod_slice(stacked, topology: Topology):
+    """Client-stacked [C, ...] tree -> edge-stacked [E, ...] tree taking
+    each pod's first member.
+
+    Valid whenever pod members hold identical state — the invariant the
+    pod-broadcast rounds maintain (every member starts a round from its
+    pod's shared adapter/params)."""
+    idx = np.asarray([members[0] for members in topology.member_indices])
+    return jax.tree.map(lambda x: x[idx], stacked)
+
+
+def pod_broadcast(edge_stacked, topology: Topology):
+    """Edge-stacked [E, ...] tree -> client-stacked [C, ...] tree: every
+    vehicle receives its own pod's state (the personalized counterpart
+    of ``core.fedavg.broadcast_round``, which sends one global tree to
+    all)."""
+    ce = np.asarray(topology.client_edge)
+    return jax.tree.map(lambda x: x[ce], edge_stacked)
+
+
 def hierarchical_mean(stacked, weights, topology: Topology,
                       staleness: Optional[jnp.ndarray] = None):
     """Explicit two-tier (edge, then cloud) weighted mean of a

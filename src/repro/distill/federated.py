@@ -1,0 +1,202 @@
+"""Federated personalized distillation (paper §3.3/§5.2 as a strategy).
+
+The cloud AD-LLM is warmed once on public (IID) driving data and then
+frozen as the **teacher**; each vehicle trains a LoRA **student** — the
+same base weights plus per-pod (A, B) factors — on its pod's non-IID
+partition. The student loss combines the task term with the CELLAdapt
+distillation terms:
+
+    L = L1(student_wp, ground truth)
+      + kd_weight * ( L1(student_wp, teacher_wp)
+                      + logit_weight * KL(teacher || student) @ kd_temp )
+
+The student forward never materializes merged weights: every adapted
+projection routes through the fused base+low-rank kernel
+(``ops.lora_matmul_ad``) via ``lm.forward(lora=...)``, and only the
+factor deltas ride the comm fabric — codec roundtrips with error
+feedback, per-pod edge partial averages, and a staleness-aware cloud
+merge, exactly the ``hier_fl`` fabric but orders of magnitude fewer
+bytes per round.
+
+Aggregation keeps personalization: pods do NOT collapse to one global
+adapter. Each round ends with
+
+    pod_adapter' = (1 - mix) * (pod_adapter + pod_delta)
+                 + mix * cloud_merge(all pods)
+
+so ``mix=1`` recovers fully-global FedAvg-of-adapters and ``mix=0`` is
+fully-local per-pod training; in between the cloud shares structure
+while each region keeps its own head start (the per-edge personalization
+win measured in BENCH_distill.json).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.codecs import Codec, roundtrip_stacked
+from repro.comm.hierarchy import (cloud_merge, edge_aggregate, pod_broadcast,
+                                  pod_slice)
+from repro.comm.topology import Topology
+from repro.config import ModelConfig
+from repro.distill.celladapt import waypoint_l1
+from repro.distill.lora import LoRAConfig
+from repro.models import blocks as B
+from repro.models import lm
+from repro.train.optimizer import Adam
+
+
+def _hidden(params, cfg: ModelConfig, batch, *, lora=None,
+            lora_scale: float = 1.0):
+    h, _, _ = lm.forward(params, cfg, batch["tokens"],
+                         prefix_embeds=batch["features"], hidden_only=True,
+                         lora=lora, lora_scale=lora_scale)
+    return h
+
+
+def _waypoints(params, cfg: ModelConfig, h):
+    wp = B.linear(params["wp_head"], h[:, -1]).astype(jnp.float32)
+    return wp.reshape(h.shape[0], cfg.num_waypoints, 2)
+
+
+def _logits(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        return B.unembed(params["embed"], h).astype(jnp.float32)
+    return B.linear(params["head"], h).astype(jnp.float32)
+
+
+def make_student_loss(acfg: ModelConfig, lora_cfg: LoRAConfig, *,
+                      kd_weight: float = 0.3, kd_temp: float = 2.0,
+                      logit_weight: float = 0.1):
+    """loss(factors, base, batch) -> (loss, metrics) for one LoRA student.
+
+    Only ``factors`` is differentiated; ``base`` is both the student's
+    frozen backbone and — run without the adapter — the teacher."""
+
+    def loss_fn(factors, base, batch):
+        h = _hidden(base, acfg, batch, lora=factors,
+                    lora_scale=lora_cfg.scale)
+        s_wp = _waypoints(base, acfg, h)
+        task = waypoint_l1(s_wp, batch["waypoints"])
+        th = jax.lax.stop_gradient(_hidden(base, acfg, batch))
+        t_wp = _waypoints(base, acfg, th)
+        align = waypoint_l1(s_wp, t_wp)
+        gt = jax.nn.log_softmax(_logits(base, acfg, th) / kd_temp, axis=-1)
+        at = jax.nn.log_softmax(_logits(base, acfg, h) / kd_temp, axis=-1)
+        kl = (jnp.exp(gt) * (gt - at)).sum(-1).mean() * kd_temp * kd_temp
+        loss = task + kd_weight * (align + logit_weight * kl)
+        return loss, {"loss": loss, "task_l1": task, "kd_l1": align,
+                      "kd_kl": kl}
+
+    return loss_fn
+
+
+def make_distill_round(acfg: ModelConfig, optimizer: Adam,
+                       topology: Topology, codec: Codec, *,
+                       lora_cfg: LoRAConfig, local_steps: int = 1,
+                       kd_weight: float = 0.3, kd_temp: float = 2.0,
+                       logit_weight: float = 0.1, mix: float = 0.5,
+                       client_weights=None,
+                       staleness: Optional[np.ndarray] = None):
+    """One federated-distillation round over client-stacked LoRA factors.
+
+    distill_round(client_factors, client_opt, batches, base, residual,
+    key) -> (client_factors', client_opt', metrics, residual').
+
+    ``batches`` carry [C, E, B, ...] leaves; ``base`` is the frozen
+    teacher/backbone (shared by all students — vmapped with
+    ``in_axes=None``); ``residual`` is the codec's per-client
+    error-feedback state over the **factor** tree. Pod members start each
+    round from their pod's shared adapter, so client deltas are w.r.t.
+    their own pod — ``pod_slice``/``pod_broadcast`` carry the per-pod
+    state across the round while ``cloud_merge`` supplies the ``mix``
+    share of global structure.
+    """
+    from repro.core.fedavg import check_weights
+
+    loss_fn = make_student_loss(acfg, lora_cfg, kd_weight=kd_weight,
+                                kd_temp=kd_temp, logit_weight=logit_weight)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def local_train(factors, opt_state, batches, base):
+        def body(carry, batch):
+            f, o = carry
+            (_, metrics), grads = grad_fn(f, base, batch)
+            f, o = optimizer.update(grads, o, f)
+            return (f, o), metrics
+
+        (factors, opt_state), ms = jax.lax.scan(
+            body, (factors, opt_state), batches)
+        return factors, opt_state, jax.tree.map(lambda m: m[-1], ms)
+
+    w = None if client_weights is None else check_weights(client_weights)
+    if w is not None:
+        topology.validate_pod_weights(w)
+    stale = None if staleness is None else jnp.asarray(staleness,
+                                                       jnp.float32)
+    if not 0.0 <= mix <= 1.0:
+        raise ValueError(f"mix must be in [0, 1], got {mix}")
+
+    def distill_round(client_factors, client_opt, batches, base,
+                      residual, key):
+        start = client_factors
+        factors, opts, metrics = jax.vmap(
+            local_train, in_axes=(0, 0, 0, None))(client_factors,
+                                                  client_opt, batches, base)
+        # adapter-only uplink: factor deltas w.r.t. the round's pod state
+        deltas = jax.tree.map(
+            lambda a, s: a.astype(jnp.float32) - s.astype(jnp.float32),
+            factors, start)
+        decoded, residual = roundtrip_stacked(codec, deltas, residual, key)
+        edge_delta, edge_w = edge_aggregate(decoded, w, topology,
+                                            validated=True)
+        pod_start = pod_slice(start, topology)
+        pod_partial = jax.tree.map(
+            lambda s, d: s.astype(jnp.float32) + d, pod_start, edge_delta)
+        global_f = cloud_merge(pod_partial, edge_w, stale)
+        pod_new = jax.tree.map(
+            lambda p, g: (1.0 - mix) * p + mix * g[None],
+            pod_partial, global_f)
+        new_clients = pod_broadcast(pod_new, topology)
+        return new_clients, opts, metrics, residual
+
+    return distill_round
+
+
+def warmup_base(params, acfg: ModelConfig, batches, *, lr: float = 1e-3):
+    """Supervised waypoint warmup of the full AD-LLM on pooled public
+    data — the cloud stage that trains ``wp_head`` (and settles the
+    backbone) before it freezes as the distillation teacher. Returns
+    (params, per-step losses)."""
+    opt = Adam(lr=lr)
+
+    def loss_fn(p, batch):
+        wp = _waypoints(p, acfg, _hidden(p, acfg, batch))
+        return waypoint_l1(wp, batch["waypoints"])
+
+    @jax.jit
+    def step(p, o, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        p, o = opt.update(grads, o, p)
+        return p, o, loss
+
+    o = opt.init(params)
+    losses = []
+    for b in batches:
+        params, o, loss = step(params, o, b)
+        losses.append(float(loss))
+    return params, losses
+
+
+def waypoint_eval(base, acfg: ModelConfig, data, *, lora=None,
+                  lora_scale: float = 1.0) -> float:
+    """Mean waypoint L1 of (base [+ adapter]) over a held-out dataset."""
+    batch = {"features": jnp.asarray(data["features"]),
+             "tokens": jnp.asarray(data["tokens"]),
+             "waypoints": jnp.asarray(data["waypoints"])}
+    h = _hidden(base, acfg, batch, lora=lora, lora_scale=lora_scale)
+    wp = _waypoints(base, acfg, h)
+    return float(waypoint_l1(wp, batch["waypoints"]))

@@ -41,7 +41,11 @@ class LoRAConfig:
 
 def init_lora(key, params, cfg: LoRAConfig):
     """Factor pytree with the same structure as ``params``; non-target
-    leaves hold None."""
+    leaves hold None.
+
+    Raises ``ValueError`` when no leaf matches ``cfg.targets`` — an
+    all-None factor tree would make fine-tuning a silent no-op (zero
+    trainable parameters, zero gradients, unchanged model)."""
     leaves = jax.tree_util.tree_leaves_with_path(params)
     keys = jax.random.split(key, max(len(leaves), 1))
 
@@ -58,6 +62,13 @@ def init_lora(key, params, cfg: LoRAConfig):
     out = []
     for i, (path, leaf) in enumerate(leaves):
         out.append(make(i, path, leaf))
+    if all(f is None for f in out):
+        adaptable = sorted({_leaf_name(path) for path, leaf in leaves
+                            if hasattr(leaf, "ndim") and leaf.ndim >= 2})
+        raise ValueError(
+            f"LoRA targets {tuple(cfg.targets)} match no parameter leaf — "
+            f"fine-tuning would be a no-op (zero trainable factors); "
+            f"adaptable 2-D leaf names in this tree: {adaptable}")
     treedef = jax.tree_util.tree_structure(params)
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -76,21 +87,29 @@ def merge_lora(params, lora, cfg: LoRAConfig):
                         or (isinstance(x, dict) and "A" in x))
 
 
-def apply_lora(x, w, factors, cfg: LoRAConfig, *, interpret=None):
+def lora_linear(x, w, factors, scale: float, *, interpret=None):
     """Adapted linear ``x @ w + scale * (x @ A) @ B`` through the fused
     Pallas kernel — differentiable (closed-form custom_vjp), so LoRA
     fine-tuning can run the fused path instead of merging, and only the
     factors' cotangents are nonzero where the optimizer masks the base.
 
-    x: [..., K]; w: [K, N]; factors: {"A": [K, r], "B": [r, N]}.
+    x: [..., K]; w: [K, N]; factors: {"A": [K, r], "B": [r, N]}. This is
+    the hot path the adapted model forward (``lm.forward(lora=...)``)
+    routes every target projection through; ``apply_lora`` is the
+    LoRAConfig-taking wrapper.
     """
     from repro.kernels import ops
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y = ops.lora_matmul_ad(x2, w, factors["A"].astype(w.dtype),
                            factors["B"].astype(w.dtype),
-                           scale=cfg.scale, interpret=interpret)
+                           scale=scale, interpret=interpret)
     return y.reshape(lead + (w.shape[-1],))
+
+
+def apply_lora(x, w, factors, cfg: LoRAConfig, *, interpret=None):
+    """``lora_linear`` with the scale taken from a :class:`LoRAConfig`."""
+    return lora_linear(x, w, factors, cfg.scale, interpret=interpret)
 
 
 def lora_param_count(lora) -> int:

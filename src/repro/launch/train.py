@@ -19,7 +19,8 @@ def main():
     ap.add_argument("--shape", default=None, help="named shape or 'SEQxBATCH'")
     ap.add_argument("--strategy", default="pipeline",
                     choices=["tensor", "pipeline", "fedavg", "fl_pipeline",
-                             "swift_pipeline", "hier_fl", "async_hier_fl"])
+                             "swift_pipeline", "hier_fl", "async_hier_fl",
+                             "distill_fl"])
     ap.add_argument("--steps", type=int, default=50,
                     help="train steps (FL strategies: rounds)")
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -51,6 +52,18 @@ def main():
     ap.add_argument("--compute-jitter", type=float, default=0.0,
                     help="async_hier_fl: per-(vehicle, round) uniform "
                          "compute slowdown fraction")
+    ap.add_argument("--lora-rank", type=int, default=4,
+                    help="distill_fl: LoRA rank of the per-pod adapters")
+    ap.add_argument("--kd-weight", type=float, default=0.3,
+                    help="distill_fl: weight of the teacher-distillation "
+                         "terms in the student loss")
+    ap.add_argument("--mix", type=float, default=0.5,
+                    help="distill_fl: per-round blend toward the cloud "
+                         "merge (1 = global FedAvg-of-adapters, 0 = "
+                         "fully local per-pod adapters)")
+    ap.add_argument("--distill-warmup", type=int, default=20,
+                    help="distill_fl: supervised warmup steps for the "
+                         "cloud AD-LLM before it freezes as the teacher")
     ap.add_argument("--depart", default=None, metavar="STEP:VID",
                     help="swift_pipeline: simulate vehicle VID departing "
                          "after step STEP (live template repartition)")
@@ -68,7 +81,7 @@ def main():
 
     options = {}
     fl = args.strategy in ("fedavg", "fl_pipeline", "hier_fl",
-                           "async_hier_fl")
+                           "async_hier_fl", "distill_fl")
     if fl:
         options["local_steps"] = args.local_steps
     if args.strategy == "swift_pipeline":
@@ -83,6 +96,12 @@ def main():
                        compute_jitter=args.compute_jitter)
         if args.async_decay is not None:
             options["decay"] = args.async_decay
+    if args.strategy == "distill_fl":
+        options.update(topology=args.topology, codec=args.codec,
+                       async_decay=args.async_decay,
+                       lora_rank=args.lora_rank,
+                       kd_weight=args.kd_weight, mix=args.mix,
+                       warmup_steps=args.distill_warmup)
     session = Session(
         args.arch, full=args.full, shape=args.shape,
         mesh=MeshSpec.parse(args.mesh, devices=args.devices or None),

@@ -189,6 +189,18 @@ def chunked_mha(q, k, v, *, scale, q_pos, kv_pos, causal, window,
     return out.reshape(b, nq, sq, d).astype(q.dtype)
 
 
+def _adapted_matmul(p: dict, name: str, x, lora, lora_scale: float):
+    """``x @ p[name]`` with the leaf's LoRA factors fused in when the
+    factor subtree carries them (None = unadapted). Routes through the
+    fused base+low-rank Pallas matmul so the merged weight is never
+    materialized on the fine-tuning hot path."""
+    f = None if lora is None else lora.get(name)
+    if f is None:
+        return x @ p[name]
+    from repro.distill.lora import lora_linear
+    return lora_linear(x, p[name], f, lora_scale)
+
+
 def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
               positions: jnp.ndarray,
               cache: Optional[dict] = None,
@@ -199,7 +211,9 @@ def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
               use_chunked: Optional[bool] = None,
               block_q: Optional[int] = None,
               block_k: Optional[int] = None,
-              positions_contiguous: Optional[bool] = None):
+              positions_contiguous: Optional[bool] = None,
+              lora: Optional[dict] = None,
+              lora_scale: float = 1.0):
     """Unified attention: self (train/prefill/decode w/ cache) or cross.
 
     ``block_q``/``block_k`` override the Pallas kernel tile sizes
@@ -212,11 +226,15 @@ def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
     themselves; when None, concrete position arrays are value-checked
     and traced ones conservatively take the XLA paths.
 
+    ``lora``: optional factor subtree matching this block's attention
+    params ({"wq": {"A", "B"} | None, ...}); adapted projections run the
+    fused base+low-rank kernel with ``lora_scale`` (= alpha/rank).
+
     Returns (output, new_cache).
     """
     b, s, _ = x.shape
     nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
-    q = x @ p["wq"]
+    q = _adapted_matmul(p, "wq", x, lora, lora_scale)
     if "bq" in p:
         q = q + p["bq"]
     q = _split_heads(q, nq, hd)
@@ -229,8 +247,8 @@ def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
         new_cache = cache
         q = q  # no rope on cross-attention queries (enc-dec convention)
     else:
-        k = x @ p["wk"]
-        vv = x @ p["wv"]
+        k = _adapted_matmul(p, "wk", x, lora, lora_scale)
+        vv = _adapted_matmul(p, "wv", x, lora, lora_scale)
         if "bk" in p:
             k, vv = k + p["bk"], vv + p["bv"]
         k = _split_heads(k, nkv, hd)
@@ -260,7 +278,8 @@ def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
                                     block_q=block_q or cfg.attn_block_q,
                                     block_k=block_k or cfg.attn_block_k)
         o = o.transpose(0, 2, 1, 3).reshape(b, s, nq * hd)
-        return (o @ p["wo"]).astype(x.dtype), new_cache
+        return (_adapted_matmul(p, "wo", o, lora,
+                                lora_scale)).astype(x.dtype), new_cache
     if use_chunked is None:
         use_chunked = (s > 1024) and cross_kv is None
     if use_chunked:
@@ -271,7 +290,8 @@ def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
         o = dense_mha(q, k, v, scale=scale, q_pos=q_pos1, kv_pos=kv_pos,
                       causal=causal, window=window)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, nq * hd)
-    return (o @ p["wo"]).astype(x.dtype), new_cache
+    return (_adapted_matmul(p, "wo", o, lora,
+                            lora_scale)).astype(x.dtype), new_cache
 
 
 # ------------------------------------------------------------- kv cache ----
@@ -317,8 +337,11 @@ def init_mlp(key, cfg: ModelConfig) -> dict:
     }
 
 
-def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
-    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+def mlp(p: dict, x: jnp.ndarray, lora: Optional[dict] = None,
+        lora_scale: float = 1.0) -> jnp.ndarray:
+    h = jax.nn.silu(_adapted_matmul(p, "wg", x, lora, lora_scale)) \
+        * _adapted_matmul(p, "wi", x, lora, lora_scale)
+    return _adapted_matmul(p, "wo", h, lora, lora_scale)
 
 
 # ----------------------------------------------------------------- moe -----

@@ -29,15 +29,34 @@ def init_block(key, cfg: ModelConfig) -> dict:
     return p
 
 
+def _factors_present(sub) -> bool:
+    """True iff a LoRA factor subtree carries any actual {"A", "B"}
+    factors (None everywhere = unadapted)."""
+    if sub is None:
+        return False
+    leaves = jax.tree_util.tree_leaves(
+        sub, is_leaf=lambda v: isinstance(v, dict) and "A" in v)
+    return any(isinstance(leaf, dict) for leaf in leaves)
+
+
 def apply_block(p: dict, x, cfg: ModelConfig, *, positions, cache=None,
-                window=None, use_chunked=None, positions_contiguous=None):
+                window=None, use_chunked=None, positions_contiguous=None,
+                lora=None, lora_scale: float = 1.0):
+    attn_lora = None if lora is None else lora.get("attn")
+    ffn_lora = None if lora is None else lora.get("ffn")
     a, new_cache = B.attention(p["attn"], B.rms_norm(p["ln1"], x, cfg.norm_eps),
                                cfg, positions=positions, cache=cache,
                                window=window, use_chunked=use_chunked,
-                               positions_contiguous=positions_contiguous)
+                               positions_contiguous=positions_contiguous,
+                               lora=attn_lora, lora_scale=lora_scale)
     x = x + a
     h = B.rms_norm(p["ln2"], x, cfg.norm_eps)
     if "moe" in p:
+        if _factors_present(None if lora is None else lora.get("moe")):
+            raise NotImplementedError(
+                "LoRA factors on MoE expert weights are not supported by "
+                "the fused adapted forward; restrict LoRAConfig.targets "
+                "to the attention/MLP projections")
         from repro.core import act_sharding
         r = act_sharding.current()
         if r is not None and r.mesh is not None \
@@ -48,7 +67,8 @@ def apply_block(p: dict, x, cfg: ModelConfig, *, positions, cache=None,
         else:
             f, aux = B.moe_block(p["moe"], h, cfg)
     else:
-        f, aux = B.mlp(p["ffn"], h), jnp.zeros((), jnp.float32)
+        f, aux = B.mlp(p["ffn"], h, lora=ffn_lora, lora_scale=lora_scale), \
+            jnp.zeros((), jnp.float32)
     return x + f, new_cache, aux
 
 
@@ -71,30 +91,55 @@ def init(key, cfg: ModelConfig) -> dict:
 
 def _scan_blocks(params, x, cfg: ModelConfig, *, positions, caches=None,
                  window=None, remat=False, use_chunked=None,
-                 positions_contiguous=None):
-    """Run the stacked block pytree over x. caches: stacked kv cache or None."""
+                 positions_contiguous=None, lora=None, lora_scale=1.0):
+    """Run the stacked block pytree over x. caches: stacked kv cache or None.
+
+    ``lora`` is the layer-stacked factor subtree for ``params["blocks"]``
+    (or None): scan slices the leading layer axis of each (A, B) factor
+    exactly like the block weights, and None (unadapted) leaves are empty
+    pytree nodes that cost nothing.
+    """
     from repro.core.act_sharding import constrain
 
     def body(carry, layer):
         h = carry
-        lp, lc = layer
+        lp, lc, lf = layer
         out, new_cache, aux = apply_block(
             lp, h, cfg, positions=positions, cache=lc, window=window,
             use_chunked=use_chunked,
-            positions_contiguous=positions_contiguous)
+            positions_contiguous=positions_contiguous,
+            lora=lf, lora_scale=lora_scale)
         return constrain(out), (new_cache, aux)
 
     fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
         if remat else body
-    xs = (params["blocks"], caches)
+    xs = (params["blocks"], caches, lora)
     x, (new_caches, auxs) = jax.lax.scan(fn, x, xs)
     return x, new_caches, auxs.sum()
 
 
 def forward(params, cfg: ModelConfig, tokens, *, positions=None, caches=None,
             prefix_embeds=None, window=None, remat=False, use_chunked=None,
-            logits_slice: Optional[int] = None, hidden_only: bool = False):
-    """tokens: [B, S] int32. Returns (logits [B, S(, V)], new_caches, aux)."""
+            logits_slice: Optional[int] = None, hidden_only: bool = False,
+            lora=None, lora_scale: float = 1.0):
+    """tokens: [B, S] int32. Returns (logits [B, S(, V)], new_caches, aux).
+
+    ``lora``: optional factor pytree from ``distill.lora.init_lora`` (same
+    structure as ``params``). Factors on the block stack run through the
+    fused base+low-rank kernel without materializing merged weights; the
+    base stays frozen, so grads w.r.t. ``lora`` are the adapter-only
+    update federated distillation ships upstream.
+    """
+    lora_blocks = None
+    if lora is not None:
+        extra = {k: v for k, v in lora.items() if k != "blocks"}
+        if _factors_present(extra):
+            bad = sorted(k for k, v in extra.items() if _factors_present(v))
+            raise NotImplementedError(
+                f"LoRA factors outside the block stack are not supported "
+                f"by the fused forward (got factors under {bad}); adapt "
+                f"only block projections or fold with merge_lora instead")
+        lora_blocks = lora.get("blocks")
     x = B.embed(params["embed"], tokens)
     npfx = 0
     if prefix_embeds is not None:
@@ -107,7 +152,8 @@ def forward(params, cfg: ModelConfig, tokens, *, positions=None, caches=None,
     x, new_caches, aux = _scan_blocks(params, x, cfg, positions=positions,
                                       caches=caches, window=window,
                                       remat=remat, use_chunked=use_chunked,
-                                      positions_contiguous=pos_contig)
+                                      positions_contiguous=pos_contig,
+                                      lora=lora_blocks, lora_scale=lora_scale)
     x = B.rms_norm(params["ln_f"], x, cfg.norm_eps)
     if npfx:
         x = x[:, npfx:]

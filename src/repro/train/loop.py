@@ -144,17 +144,25 @@ def train_loop(step_fn: Callable, params, opt_state,
 
 def fl_loop(fl_round: Callable, client_params, client_opt,
             round_batches_fn: Callable, *, rounds: int,
-            hooks: Optional[LoopHooks] = None) -> Dict:
+            hooks: Optional[LoopHooks] = None, teacher=None) -> Dict:
     """round_batches_fn(round_idx) -> client-stacked batches [C, E, B, ...].
 
     Rounds are few and each is expensive, so the default cadence logs
-    every round."""
+    every round.
+
+    ``teacher``: the student/teacher split of federated distillation —
+    optional frozen params handed to every round as
+    ``fl_round(client_params, client_opt, batches, teacher)``. The loop
+    only carries (and hands to hooks) the trainable student side, so
+    edge backups snapshot adapters, not the immutable backbone."""
     hooks = hooks or LoopHooks(log_every=1)
+    extra = () if teacher is None else (teacher,)
     hist = []
     for r in range(rounds):
         batches = round_batches_fn(r)
         client_params, client_opt, metrics = fl_round(client_params,
-                                                      client_opt, batches)
+                                                      client_opt, batches,
+                                                      *extra)
         hooks.after_step(r, client_params, metrics)
         if hooks.on_round is not None:
             hooks.on_round(r, metrics)

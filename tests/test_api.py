@@ -53,7 +53,8 @@ def test_session_runs_every_strategy(mesh22, strategy, options):
 def test_registry_lists_strategies():
     names = available_strategies()
     for expected in ("tensor", "pipeline", "fedavg", "fl_pipeline",
-                     "swift_pipeline", "hier_fl"):
+                     "swift_pipeline", "hier_fl", "async_hier_fl",
+                     "distill_fl"):
         assert expected in names
 
 
