@@ -1,0 +1,206 @@
+"""Chunked-prefill + prefix-cache bench for the serving tier.
+
+Pre-trains the smoke AD-LLM (same pretrain as the serving bench, so the
+served model has peaked logits), then measures the two prefill claims of
+the serving tier:
+
+  1. **TTFT** — the same mixed short/long fleet trace is served twice,
+     once through the monolithic bucketed prefill (every prompt padded to
+     ``max_context``, one synchronous prefill per admission) and once
+     through chunked paged prefill (one fixed-size chunk per scheduler
+     step, interleaved with decode). Time-to-first-token percentiles come
+     from the loadgen's *simulated* clock under a
+     :class:`repro.serve.PrefillCostModel` that charges each step for the
+     prefill compute it actually issued — padded prompt tokens (linear
+     work) plus attention score MACs. Wall-clock on this CPU container
+     runs interpret-mode Pallas and says nothing about accelerator cost;
+     the padded-token and MAC counts are the honest FLOP proxy, and both
+     raw totals are reported alongside the sim-time percentiles.
+  2. **Prefix sharing** — a pod-templated trace (shared template prefix +
+     unique per-vehicle suffix) is served with the prefix cache on and
+     off. The cache must produce identical greedy streams while mapping
+     template blocks instead of recomputing them (nonzero hit rate,
+     measured pool-block savings).
+
+Greedy streams must be identical across all of it — chunked vs
+monolithic on the mixed trace, cache on vs off on the pod trace.
+
+Writes schema-gated ``BENCH_prefill.json`` (seventh perf-trajectory
+entry; ``scripts/validate_bench.py`` enforces TTFT p50 >= 1.5x better
+than monolithic, matching streams, nonzero prefix hit rate and block
+savings).
+
+    PYTHONPATH=src python benchmarks/prefill_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+DEFAULT_OUT = "BENCH_prefill.json"
+FLEET = "nano*2,agx*2"
+# dt_step prices the fused decode step the same way PrefillCostModel
+# prices prefill work: slots lanes x one token x s_per_token — so the
+# chunked path's extra steps are charged consistently, not punitively.
+WORKLOAD = dict(max_context=64, max_prompt=24, block_size=8, slots=4,
+                prefill_chunk=16, short_new=(6, 10), long_new=(24, 40),
+                long_frac=0.3, dt_step=2e-4)
+POD = dict(pods=2, template_len=32, max_suffix=8)
+
+
+def _mode_row(name: str, rep: dict) -> dict:
+    return {
+        "name": name,
+        "requests": rep["requests"],
+        "total_new_tokens": rep["total_new_tokens"],
+        "decode_steps": rep["decode_steps"],
+        "prefills": rep["prefills"],
+        "prefill_chunks": rep["prefill_chunks"],
+        "prefill_padded_tokens": rep["prefill_padded_tokens"],
+        "prefill_attn_mac": rep["prefill_attn_mac"],
+        "p50_ttft_s": rep["p50_ttft_s"],
+        "p99_ttft_s": rep["p99_ttft_s"],
+        "p50_queue_wait_s": rep["p50_queue_wait_s"],
+        "p99_queue_wait_s": rep["p99_queue_wait_s"],
+        "p50_latency_s": rep["p50_latency_s"],
+        "p99_latency_s": rep["p99_latency_s"],
+        "sim_time_s": rep["sim_time_s"],
+    }
+
+
+def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
+    try:
+        from benchmarks.common import emit
+        from benchmarks.serving_bench import pretrain
+    except ImportError:          # invoked as `python benchmarks/...py`
+        from common import emit
+        from serving_bench import pretrain
+    from repro.configs import get_config
+    from repro.configs.common import reduced
+    from repro.serve import (PrefillCostModel, generate_fleet_requests,
+                             generate_pod_requests, serve_continuous)
+
+    num_requests, pre_steps = (12, 40) if quick else (16, 60)
+    cfg = reduced(get_config("flad_adllm")).replace(param_dtype="float32")
+    params, pre_loss = pretrain(cfg, pre_steps)
+    print(f"prefill: pretrained {pre_steps} steps, loss {pre_loss:.3f}")
+
+    cost = PrefillCostModel()
+    mixed = generate_fleet_requests(
+        FLEET, num_requests=num_requests,
+        max_prompt=WORKLOAD["max_prompt"],
+        short_new=WORKLOAD["short_new"], long_new=WORKLOAD["long_new"],
+        long_frac=WORKLOAD["long_frac"], seed=0,
+        vocab_size=cfg.vocab_size)
+    base = dict(params=params, slots=WORKLOAD["slots"],
+                block_size=WORKLOAD["block_size"],
+                max_context=WORKLOAD["max_context"],
+                prefill_chunk=WORKLOAD["prefill_chunk"],
+                dt_step=WORKLOAD["dt_step"], prefill_cost=cost,
+                warm_passes=1, log_fn=None)
+
+    results = {}
+    for name, prefill in (("monolithic", "monolithic"),
+                          ("chunked", "chunked")):
+        results[name] = serve_continuous(cfg, prefill=prefill,
+                                         requests=mixed, **base)
+    mono, chunk = results["monolithic"], results["chunked"]
+    streams_match_mixed = mono["sequences"] == chunk["sequences"]
+
+    pod_requests = generate_pod_requests(
+        FLEET, num_requests=num_requests, seed=0,
+        vocab_size=cfg.vocab_size, short_new=WORKLOAD["short_new"],
+        long_new=WORKLOAD["long_new"], long_frac=WORKLOAD["long_frac"],
+        **POD)
+    pod = {}
+    for name, share in (("off", False), ("on", True)):
+        pod[name] = serve_continuous(cfg, prefill="chunked",
+                                     prefix_cache=share,
+                                     requests=pod_requests, **base)
+    streams_match_pod = pod["on"]["sequences"] == pod["off"]["sequences"]
+
+    ttft_p50_speedup = mono["p50_ttft_s"] / max(chunk["p50_ttft_s"], 1e-12)
+    ttft_p99_speedup = mono["p99_ttft_s"] / max(chunk["p99_ttft_s"], 1e-12)
+    payload = {
+        "bench": "prefill_tier",
+        "schema_version": 1,
+        "arch": cfg.name,
+        "quick": bool(quick),
+        "workload": {
+            "fleet": FLEET,
+            "num_requests": num_requests,
+            "pretrain_steps": pre_steps,
+            "pretrain_loss": pre_loss,
+            "slots": WORKLOAD["slots"],
+            "block_size": WORKLOAD["block_size"],
+            "max_context": WORKLOAD["max_context"],
+            "max_prompt": WORKLOAD["max_prompt"],
+            "prefill_chunk": WORKLOAD["prefill_chunk"],
+            "short_new": list(WORKLOAD["short_new"]),
+            "long_new": list(WORKLOAD["long_new"]),
+            "long_frac": WORKLOAD["long_frac"],
+            "dt_step": WORKLOAD["dt_step"],
+            "cost_s_per_token": cost.s_per_token,
+            "cost_s_per_mac": cost.s_per_mac,
+            "pod": dict(POD),
+        },
+        "modes": [_mode_row("monolithic", mono),
+                  _mode_row("chunked", chunk)],
+        "pod": {
+            "requests": pod["on"]["requests"],
+            "prefix_hits": pod["on"]["prefix_hits"],
+            "prefix_misses": pod["on"]["prefix_misses"],
+            "prefix_hit_rate": pod["on"]["prefix_hit_rate"],
+            "prefix_cached_tokens": pod["on"]["prefix_cached_tokens"],
+            "prefix_blocks_saved": pod["on"]["prefix_blocks_saved"],
+            "p50_ttft_s_shared": pod["on"]["p50_ttft_s"],
+            "p50_ttft_s_unshared": pod["off"]["p50_ttft_s"],
+            "prefill_padded_tokens_shared":
+                pod["on"]["prefill_padded_tokens"],
+            "prefill_padded_tokens_unshared":
+                pod["off"]["prefill_padded_tokens"],
+            "streams_match": bool(streams_match_pod),
+        },
+        "summary": {
+            "ttft_p50_speedup": ttft_p50_speedup,
+            "ttft_p99_speedup": ttft_p99_speedup,
+            "padded_token_ratio": (mono["prefill_padded_tokens"]
+                                   / max(1, chunk["prefill_padded_tokens"])),
+            "attn_mac_ratio": (mono["prefill_attn_mac"]
+                               / max(1, chunk["prefill_attn_mac"])),
+            "streams_match": bool(streams_match_mixed),
+            "prefix_hit_rate": pod["on"]["prefix_hit_rate"],
+            "prefix_blocks_saved": pod["on"]["prefix_blocks_saved"],
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    s = payload["summary"]
+    emit("prefill/ttft_p50_speedup", s["ttft_p50_speedup"],
+         f"mono={mono['p50_ttft_s'] * 1e3:.2f}ms "
+         f"chunked={chunk['p50_ttft_s'] * 1e3:.2f}ms sim")
+    emit("prefill/padded_token_ratio", s["padded_token_ratio"],
+         f"mono={mono['prefill_padded_tokens']} "
+         f"chunked={chunk['prefill_padded_tokens']} padded tokens")
+    emit("prefill/prefix_hit_rate", s["prefix_hit_rate"],
+         f"hits={pod['on']['prefix_hits']} "
+         f"blocks_saved={s['prefix_blocks_saved']} "
+         f"cached_tokens={pod['on']['prefix_cached_tokens']}")
+    print(f"prefill: TTFT p50 x{s['ttft_p50_speedup']:.2f} "
+          f"(p99 x{s['ttft_p99_speedup']:.2f}) vs monolithic, padded "
+          f"tokens x{s['padded_token_ratio']:.1f} fewer, prefix hit rate "
+          f"{s['prefix_hit_rate']:.0%} saving "
+          f"{s['prefix_blocks_saved']} pool blocks -> {out}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,8 @@
                                            (writes BENCH_async.json)
   Fig. 2 serving tier (paged KV +       -> serving_bench
          continuous batching)              (writes BENCH_serving.json)
+  Fig. 2 chunked prefill + prefix cache -> prefill_bench
+         (TTFT, pod block sharing)         (writes BENCH_prefill.json)
   §3.2 personalized distillation        -> distill_fl_bench
         (adapter uplinks, per-pod wins)    (writes BENCH_distill.json)
   Fig. 6(a,b) pipeline execution time   -> pipeline_exec
@@ -44,8 +46,9 @@ def main() -> None:
     from benchmarks import (async_bench, attention_bench, comm_bench,
                             distill_fl_bench, distill_quality,
                             fhdp_throughput, fl_accuracy, pipeline_exec,
-                            recovery_bench, repartition_latency, roofline,
-                            serving_bench, swift_opt)
+                            prefill_bench, recovery_bench,
+                            repartition_latency, roofline, serving_bench,
+                            swift_opt)
 
     agent_holder = {}
 
@@ -65,6 +68,7 @@ def main() -> None:
         ("comm", lambda: comm_bench.run(quick=args.quick)),
         ("async", lambda: async_bench.run(quick=args.quick)),
         ("serving", lambda: serving_bench.run(quick=args.quick)),
+        ("prefill", lambda: prefill_bench.run(quick=args.quick)),
         ("distill_fl", lambda: distill_fl_bench.run(quick=args.quick)),
         ("fhdp_throughput", lambda: fhdp_throughput.run(quick=args.quick)),
         ("fl_accuracy", lambda: fl_accuracy.run(quick=args.quick)),

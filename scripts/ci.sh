@@ -44,6 +44,11 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.serve --devices 2 --scheduler continuous \
       --slots 2 --context 16 --requests 4 --block-size 8 --cache int8
 
+  echo "=== smoke: chunked prefill + prefix cache (serve launcher) ==="
+  python -m repro.launch.serve --devices 2 --scheduler continuous \
+      --slots 2 --context 16 --requests 4 --block-size 8 \
+      --prefill chunked --prefill-chunk 8 --prefix-cache
+
   echo "=== smoke: SWIFT live repartition example (dry run) ==="
   python examples/swift_repartition.py --dry-run
 
@@ -72,6 +77,11 @@ if [[ "${1:-}" != "--fast" ]]; then
       --out /tmp/BENCH_serving.quick.json
   python scripts/validate_bench.py /tmp/BENCH_serving.quick.json
 
+  echo "=== bench: chunked prefill + prefix cache (quick, scratch) ==="
+  python benchmarks/prefill_bench.py --quick \
+      --out /tmp/BENCH_prefill.quick.json
+  python scripts/validate_bench.py /tmp/BENCH_prefill.quick.json
+
   echo "=== bench: personalized distillation (quick, scratch output) ==="
   python benchmarks/distill_fl_bench.py --quick \
       --out /tmp/BENCH_distill.quick.json
@@ -83,6 +93,7 @@ if [[ "${1:-}" != "--fast" ]]; then
   python scripts/validate_bench.py BENCH_comm.json
   python scripts/validate_bench.py BENCH_async.json
   python scripts/validate_bench.py BENCH_serving.json
+  python scripts/validate_bench.py BENCH_prefill.json
   python scripts/validate_bench.py BENCH_distill.json
 fi
 

@@ -26,6 +26,13 @@ schemas. Dispatches on the payload's ``bench`` field:
     mixed-length fleet trace with bit-identical greedy streams, and the
     int8-quantized cache flips <= 2% of greedy tokens under
     teacher-forced replay.
+  * ``prefill_tier`` (BENCH_prefill.json) — enforces the chunked-prefill
+    claims of :mod:`repro.serve`: chunked paged prefill reaches first
+    token >= 1.5x faster (sim-time p50, FLOP-proxy cost model) than the
+    monolithic ``max_context``-padded baseline on a mixed short/long
+    trace with bit-identical greedy streams, and the pod prefix cache
+    shares template KV blocks (nonzero hit rate and pool-block savings)
+    without changing a single token.
   * ``distill_fl`` (BENCH_distill.json) — enforces the two claims of the
     federated personalized distillation strategy: the (A, B) adapter
     uplink moves >= 20x fewer bytes per round than full-delta ``hier_fl``
@@ -39,6 +46,7 @@ schemas. Dispatches on the payload's ``bench`` field:
     python scripts/validate_bench.py BENCH_comm.json
     python scripts/validate_bench.py BENCH_async.json
     python scripts/validate_bench.py BENCH_serving.json
+    python scripts/validate_bench.py BENCH_prefill.json
     python scripts/validate_bench.py BENCH_distill.json
 """
 import json
@@ -121,6 +129,29 @@ SERVING_INT8 = {
 }
 MIN_CONTINUOUS_SPEEDUP = 1.5        # warm tok/s, continuous vs rebatch
 MAX_INT8_GREEDY_DISAGREEMENT = 0.02  # teacher-forced flip rate
+
+PREFILL_TOP = {
+    "bench": str, "schema_version": int, "arch": str, "quick": bool,
+    "workload": dict, "modes": list, "pod": dict, "summary": dict,
+}
+PREFILL_MODE = {
+    "name": str, "requests": int, "total_new_tokens": int,
+    "decode_steps": int, "prefills": int, "prefill_chunks": int,
+    "prefill_padded_tokens": int, "prefill_attn_mac": int,
+    "p50_ttft_s": (int, float), "p99_ttft_s": (int, float),
+    "p50_queue_wait_s": (int, float), "p99_queue_wait_s": (int, float),
+    "p50_latency_s": (int, float), "p99_latency_s": (int, float),
+    "sim_time_s": (int, float),
+}
+PREFILL_POD = {
+    "requests": int, "prefix_hits": int, "prefix_misses": int,
+    "prefix_hit_rate": (int, float), "prefix_cached_tokens": int,
+    "prefix_blocks_saved": int, "p50_ttft_s_shared": (int, float),
+    "p50_ttft_s_unshared": (int, float),
+    "prefill_padded_tokens_shared": int,
+    "prefill_padded_tokens_unshared": int, "streams_match": bool,
+}
+MIN_TTFT_SPEEDUP = 1.5          # chunked vs monolithic, sim-time p50
 
 DISTILL_TOP = {
     "bench": str, "schema_version": int, "arch": str, "quick": bool,
@@ -369,6 +400,68 @@ def validate_serving(data: dict, path: str) -> None:
           f"{data['int8']['positions']} positions)")
 
 
+def validate_prefill(data: dict, path: str) -> None:
+    check_keys(data, PREFILL_TOP, "payload")
+    modes = {m.get("name"): m for m in data["modes"]}
+    for want in ("monolithic", "chunked"):
+        if want not in modes:
+            fail(f"modes missing {want!r}")
+    for name, m in modes.items():
+        check_keys(m, PREFILL_MODE, f"modes[{name!r}]")
+        for key in ("p50_ttft_s", "p99_ttft_s", "sim_time_s"):
+            if not (m[key] > 0 and math.isfinite(m[key])):
+                fail(f"modes[{name!r}] {key} not positive-finite")
+        if m["p50_ttft_s"] > m["p99_ttft_s"]:
+            fail(f"modes[{name!r}] p50 TTFT exceeds p99")
+        if m["total_new_tokens"] <= 0 or m["decode_steps"] <= 0:
+            fail(f"modes[{name!r}] emitted no tokens")
+    mono, chunk = modes["monolithic"], modes["chunked"]
+    for key in ("requests", "total_new_tokens"):
+        if mono[key] != chunk[key]:
+            fail(f"monolithic and chunked served different work "
+                 f"({key}: {mono[key]} vs {chunk[key]}) — the TTFT "
+                 "comparison is not like-for-like")
+    if mono["prefills"] <= 0 or mono["prefill_chunks"] != 0:
+        fail("monolithic mode did not run monolithic prefills")
+    if chunk["prefills"] != 0 or chunk["prefill_chunks"] <= 0:
+        fail("chunked mode did not run chunked prefills")
+    if not data["summary"].get("streams_match"):
+        fail("chunked and monolithic greedy streams differ — chunked "
+             "prefill changes model output, not just scheduling")
+    if chunk["prefill_padded_tokens"] >= mono["prefill_padded_tokens"]:
+        fail("chunked prefill pushed no fewer padded tokens than the "
+             "monolithic bucket — the max_context padding is still there")
+    if chunk["prefill_attn_mac"] >= mono["prefill_attn_mac"]:
+        fail("chunked prefill issued no fewer attention MACs than "
+             "monolithic — the block-table walk is not paying off")
+    speedup = data["summary"].get("ttft_p50_speedup", 0.0)
+    if abs(speedup - mono["p50_ttft_s"] / chunk["p50_ttft_s"]) > 1e-6:
+        fail("summary ttft_p50_speedup inconsistent with mode TTFTs")
+    if speedup < MIN_TTFT_SPEEDUP:
+        fail(f"chunked prefill reaches first token only x{speedup:.2f} "
+             f"faster than monolithic (need >= x{MIN_TTFT_SPEEDUP}) — "
+             "chunking is not earning its complexity")
+    pod = data["pod"]
+    check_keys(pod, PREFILL_POD, "pod")
+    if not pod["streams_match"]:
+        fail("prefix sharing changed the pod trace's greedy streams — "
+             "shared blocks are not bitwise the recomputed KV")
+    if not 0.0 < pod["prefix_hit_rate"] <= 1.0:
+        fail(f"prefix hit rate {pod['prefix_hit_rate']} not in (0, 1] on "
+             "the pod-templated trace — the cache never matched")
+    if pod["prefix_hits"] <= 0 or pod["prefix_blocks_saved"] <= 0:
+        fail("prefix cache saved no pool blocks on the pod trace")
+    if pod["prefill_padded_tokens_shared"] >= \
+            pod["prefill_padded_tokens_unshared"]:
+        fail("prefix sharing did not reduce prefill work on the pod "
+             "trace — cached tokens are being recomputed")
+
+    print(f"validate_bench: OK — {path} (TTFT p50 x{speedup:.2f} vs "
+          f"monolithic over {mono['requests']} requests, streams "
+          f"identical; pod prefix hit rate {pod['prefix_hit_rate']:.0%}, "
+          f"{pod['prefix_blocks_saved']} pool blocks saved)")
+
+
 def validate_distill(data: dict, path: str) -> None:
     check_keys(data, DISTILL_TOP, "payload")
     adapter, full = data["adapter"], data["full_delta"]
@@ -428,6 +521,7 @@ VALIDATORS = {
     "comm_fabric": validate_comm,
     "async_fabric": validate_async,
     "serving_tier": validate_serving,
+    "prefill_tier": validate_prefill,
     "distill_fl": validate_distill,
 }
 

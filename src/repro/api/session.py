@@ -288,10 +288,12 @@ class Session:
         builds under greedy sampling). ``scheduler="continuous"`` routes
         through the paged-KV continuous-batching tier of
         :mod:`repro.serve` — ``requests`` becomes the trace length,
-        ``batch`` the number of lanes, ``context`` the prefill bucket,
-        and extra ``serve_options`` (``block_size``, ``cache``,
-        ``fleet``, ...) pass straight to
-        :func:`repro.serve.serve_continuous`.
+        ``batch`` the number of lanes, ``context`` the monolithic prefill
+        bucket, and extra ``serve_options`` (``block_size``, ``cache``,
+        ``fleet``, ``prefill``/``prefill_chunk`` for chunked paged
+        prefill (the default) vs the monolithic baseline,
+        ``prefix_cache`` for pod prefix-block sharing, ...) pass straight
+        to :func:`repro.serve.serve_continuous`.
 
         ``pod``: serve edge pod ``pod``'s **personalized** model — the
         strategy's ``pod_params`` view (``distill_fl``: base weights with

@@ -312,6 +312,144 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     return o.reshape(b, hq, d)
 
 
+# --------------------------------------------------------- paged prefill ---
+def _paged_prefill_kernel(tbl_ref, meta_ref, q_ref, k_ref, v_ref, *rest,
+                          scale: float, bs: int, chunk: int,
+                          quantized: bool):
+    """One prompt chunk of a single request against a paged KV pool.
+
+    Grid (kv-head, table-slot); the innermost dimension walks the
+    request's block table sequentially while (m, l, acc) persist in VMEM
+    scratch — the chunked-prefill analogue of ``_paged_decode_kernel``.
+    The query chunk is laid out [Hkv, G*C, D] (GQA group-major), so row
+    ``r`` is chunk offset ``r % C`` at absolute position ``q_offset +
+    r % C``; the causal mask is applied from those absolute positions
+    against the block's absolute KV positions. The chunk's OWN K/V rows
+    have already been scattered into their pool blocks before this kernel
+    runs, so "prior context plus itself" is one uniform table walk —
+    there is no contiguous [Smax] staging buffer anywhere. Blocks at or
+    past ``ctx = q_offset + chunk_len`` are dead (their table entries
+    point at the reserved null block) and skip compute entirely; rows of
+    the chunk past ``chunk_len`` (last-chunk padding) are garbage by
+    contract and masked down to a nonempty-but-meaningless context so
+    they stay finite.
+    """
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_offset = meta_ref[0]
+    ctx = meta_ref[1]
+
+    @pl.when(i * bs < ctx)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # [gc, d]
+        k = k_ref[0, 0].astype(jnp.float32)        # [bs, d]
+        v = v_ref[0, 0].astype(jnp.float32)        # [bs, d]
+        if quantized:
+            k = k * ks_ref[0, 0]                   # per-row absmax scales
+            v = v * vs_ref[0, 0]
+        gc = q.shape[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        r = jax.lax.broadcasted_iota(jnp.int32, (gc, bs), 0)
+        qp = q_offset + r % chunk                  # absolute q position
+        kp = i * bs + jax.lax.broadcasted_iota(jnp.int32, (gc, bs), 1)
+        s = jnp.where((kp <= qp) & (kp < ctx), s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_table, q_offset,
+                            ctx_len, *, scale: Optional[float] = None,
+                            k_scales=None, v_scales=None,
+                            interpret: bool = False):
+    """Chunked-prefill attention for one request over a paged KV cache.
+
+    q: [Hq, C, D] (a fixed-size query chunk whose row ``c`` sits at
+    absolute position ``q_offset + c``); k_pages/v_pages: [Hkv, NB, bs,
+    D] physical block pools ALREADY holding the chunk's own K/V rows;
+    block_table: [T] int32 logical->physical map (dead slots point at the
+    reserved null block 0); q_offset/ctx_len: traced int32 scalars —
+    ``ctx_len = q_offset + chunk_len`` is the visible KV length, so the
+    same jitted call serves every chunk of every prompt length. With
+    ``k_scales``/``v_scales`` ([Hkv, NB, bs, 1] float32) the pools are
+    int8 and dequantized in-kernel. Rows past ``chunk_len`` are padding
+    and return garbage (finite) values. Returns [Hq, C, D].
+    """
+    hq, c, d = q.shape
+    hkv, _, bs, _ = k_pages.shape
+    g = hq // hkv
+    t = block_table.shape[0]
+    scale = scale if scale is not None else d ** -0.5
+    quantized = k_scales is not None
+    # group-major rows: [Hq, C, D] -> [Hkv, G, C, D] -> [Hkv, G*C, D]
+    qg = q.reshape(hkv, g, c, d).reshape(hkv, g * c, d)
+    meta = jnp.stack([jnp.asarray(q_offset, jnp.int32),
+                      jnp.asarray(ctx_len, jnp.int32)])
+
+    kernel = functools.partial(_paged_prefill_kernel, scale=scale, bs=bs,
+                               chunk=c, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, g * c, d), lambda h, i, tbl, meta_: (h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda h, i, tbl, meta_: (h, tbl[i], 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda h, i, tbl, meta_: (h, tbl[i], 0, 0)),
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, bs, 1),
+                         lambda h, i, tbl, meta_: (h, tbl[i], 0, 0)),
+            pl.BlockSpec((1, 1, bs, 1),
+                         lambda h, i, tbl, meta_: (h, tbl[i], 0, 0)),
+        ]
+        operands += [k_scales, v_scales]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(hkv, t),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, g * c, d),
+                               lambda h, i, tbl, meta_: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g * c,), jnp.float32),
+            pltpu.VMEM((g * c,), jnp.float32),
+            pltpu.VMEM((g * c, d), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((hkv, g * c, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), meta, *operands)
+    return o.reshape(hkv, g, c, d).reshape(hq, c, d)
+
+
 # ------------------------------------------------------------ backward ----
 def _bwd_preprocess_kernel(o_ref, do_ref, delta_ref):
     o = o_ref[0, 0].astype(jnp.float32)

@@ -113,6 +113,27 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                                       interpret=_auto_interpret(interpret))
 
 
+# Serving hot path (repro.serve): one prompt chunk against the paged KV
+# pool. q_offset/ctx_len stay traced so every chunk of every prompt
+# length shares one compiled call. No autodiff — prefill never
+# backpropagates.
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_prefill_attention(q, k_pages, v_pages, block_table, q_offset,
+                            ctx_len, *, scale=None, k_scales=None,
+                            v_scales=None, interpret=None):
+    """q: [Hq, C, D] query chunk (row c at position q_offset + c);
+    k_pages/v_pages: [Hkv, NB, bs, D] block pools already holding the
+    chunk's own K/V rows; block_table: [T] logical->physical map;
+    q_offset/ctx_len: int32 scalars (ctx_len = q_offset + chunk_len).
+    Pass ``k_scales``/``v_scales`` for int8 pools (dequantized
+    in-kernel). Returns [Hq, C, D]; rows past chunk_len are garbage."""
+    return _fa.paged_prefill_attention(q, k_pages, v_pages, block_table,
+                                       q_offset, ctx_len, scale=scale,
+                                       k_scales=k_scales,
+                                       v_scales=v_scales,
+                                       interpret=_auto_interpret(interpret))
+
+
 # Codec hot path (repro.comm): no custom_vjp — encode/decode runs outside
 # the differentiated path, so the pair stays a plain kernel call.
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

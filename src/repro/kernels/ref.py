@@ -76,6 +76,45 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
     return o.reshape(b, hq, d).astype(q.dtype)
 
 
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, q_offset,
+                                ctx_len, *, scale: Optional[float] = None,
+                                k_scales=None, v_scales=None):
+    """Oracle for the chunked paged-prefill kernel.
+
+    q: [Hq, C, D] (row ``c`` at absolute position ``q_offset + c``);
+    k_pages/v_pages: [Hkv, NB, bs, D] pools already holding the chunk's
+    own K/V; block_table: [T] int32. Gathers the request's logical KV
+    view through its table, dequantizes when scales are given, masks
+    causally from absolute positions (``kp <= q_offset + c`` and ``kp <
+    ctx_len``), and runs dense softmax attention. Rows past ``chunk_len
+    = ctx_len - q_offset`` are padding and return garbage values the
+    caller discards — the comparison against the kernel slices them off.
+    """
+    hq, c, d = q.shape
+    hkv, _, bs, _ = k_pages.shape
+    g = hq // hkv
+    t = block_table.shape[0]
+    scale = scale if scale is not None else d ** -0.5
+
+    k = k_pages[:, block_table].astype(jnp.float32)    # [Hkv, T, bs, D]
+    v = v_pages[:, block_table].astype(jnp.float32)
+    if k_scales is not None:
+        k = k * k_scales[:, block_table]
+        v = v * v_scales[:, block_table]
+    k = k.reshape(hkv, t * bs, d)
+    v = v.reshape(hkv, t * bs, d)
+
+    qg = q.reshape(hkv, g, c, d).astype(jnp.float32)
+    s = jnp.einsum("hgcd,hkd->hgck", qg, k) * scale
+    qp = q_offset + jnp.arange(c)
+    kp = jnp.arange(t * bs)
+    mask = (kp[None, :] <= qp[:, None]) & (kp[None, :] < ctx_len)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hgck,hkd->hgcd", p, v)
+    return o.reshape(hq, c, d).astype(q.dtype)
+
+
 def mlstm_chunked_ref(q, k, v, ig, lf, *, chunk: int = 64, C0=None, n0=None,
                       m0=None):
     """Stabilized mLSTM over the sequence, step-by-step (the exact

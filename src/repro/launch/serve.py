@@ -34,6 +34,16 @@ def main():
                     help="KV block size in tokens (continuous)")
     ap.add_argument("--cache", choices=("fp32", "int8"), default="fp32",
                     help="paged KV-cache storage mode (continuous)")
+    ap.add_argument("--prefill", choices=("chunked", "monolithic"),
+                    default="chunked",
+                    help="prompt prefill path: paged chunks interleaved "
+                         "with decode, or the bucketed monolithic "
+                         "baseline (continuous)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="tokens per prefill chunk (continuous, chunked)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share pod prompt-prefix KV blocks across "
+                         "requests (continuous, chunked prefill only)")
     ap.add_argument("--fleet", default="nano*2,agx*2",
                     help="vehicle fleet spec for the load generator "
                          "(continuous)")
@@ -54,7 +64,9 @@ def main():
     kw = {}
     if args.scheduler == "continuous":
         kw = dict(block_size=args.block_size, cache=args.cache,
-                  fleet=args.fleet)
+                  fleet=args.fleet, prefill=args.prefill,
+                  prefill_chunk=args.prefill_chunk,
+                  prefix_cache=args.prefix_cache)
     session.serve(requests=args.requests,
                   batch=args.slots or args.batch,
                   context=args.context, decode_steps=args.decode_steps,

@@ -16,18 +16,23 @@ import jax
 
 from repro.config import ModelConfig
 from repro.serve.engine import PagedEngine
-from repro.serve.kvcache import BlockAllocator, PagedCacheSpec
-from repro.serve.loadgen import drive, generate_fleet_requests
+from repro.serve.kvcache import (BlockAllocator, PagedCacheSpec,
+                                 PrefixCache)
+from repro.serve.loadgen import (PrefillCostModel, drive,
+                                 generate_fleet_requests,
+                                 generate_pod_requests)
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
 
 __all__ = ["BlockAllocator", "ContinuousScheduler", "PagedCacheSpec",
-           "PagedEngine", "ServeRequest", "drive",
-           "generate_fleet_requests", "int8_cache_fidelity",
+           "PagedEngine", "PrefillCostModel", "PrefixCache",
+           "ServeRequest", "drive", "generate_fleet_requests",
+           "generate_pod_requests", "int8_cache_fidelity",
            "serve_continuous"]
 
 
 def int8_cache_fidelity(cfg: ModelConfig, params, requests, streams: Dict,
-                        *, block_size: int = 8, max_context: int = 32
+                        *, block_size: int = 8, max_context: int = 32,
+                        prefill: str = "monolithic", prefill_chunk: int = 8
                         ) -> Dict:
     """Teacher-forced int8-vs-fp32 cache comparison.
 
@@ -36,11 +41,16 @@ def int8_cache_fidelity(cfg: ModelConfig, params, requests, streams: Dict,
     token at every step regardless of what either engine would sample —
     so a single early flip cannot cascade, and the reported disagreement
     is the per-position rate at which cache quantization alone changes
-    the greedy token. Returns ``{"disagreement", "positions",
-    "max_logit_drift"}``.
+    the greedy token. ``prefill`` selects the monolithic bucketed path
+    or the chunked paged path (``prefill_chunk`` tokens per chunk) for
+    the prompt — the drift contract must hold through either. Returns
+    ``{"disagreement", "positions", "max_logit_drift"}``.
     """
     import numpy as np
 
+    if prefill not in ("monolithic", "chunked"):
+        raise ValueError(f"prefill must be monolithic|chunked, "
+                         f"got {prefill!r}")
     engines = {}
     for name, quant in (("fp32", False), ("int8", True)):
         cap = max(len(r.prompt) + len(streams[r.rid]) for r in requests)
@@ -60,9 +70,22 @@ def int8_cache_fidelity(cfg: ModelConfig, params, requests, streams: Dict,
             tbl = np.zeros((1, eng.spec.max_blocks_per_req), np.int32)
             tbl[0, :len(blocks)] = blocks
             pools = eng.init_pools()
-            toks, length = eng.pad_prompt(r.prompt)
-            logits, k, v = eng.prefill(params, toks, length)
-            pools = eng.write_prefill(pools, k, v, jax.numpy.asarray(tbl[0]))
+            if prefill == "chunked":
+                pos, plen = 0, len(r.prompt)
+                while pos < plen:
+                    clen = min(prefill_chunk, plen - pos)
+                    buf = np.zeros(prefill_chunk, np.int32)
+                    buf[:clen] = np.asarray(r.prompt[pos:pos + clen],
+                                            np.int32)
+                    logits, pools = eng.prefill_chunk(
+                        params, pools, jax.numpy.asarray(buf),
+                        jax.numpy.asarray(tbl[0]), pos, clen)
+                    pos += clen
+            else:
+                toks, length = eng.pad_prompt(r.prompt)
+                logits, k, v = eng.prefill(params, toks, length)
+                pools = eng.write_prefill(pools, k, v,
+                                          jax.numpy.asarray(tbl[0]))
             state[name] = [pools, tbl, logits]
         for i in range(len(stream)):
             l32, l8 = state["fp32"][2], state["int8"][2]
@@ -86,13 +109,18 @@ def int8_cache_fidelity(cfg: ModelConfig, params, requests, streams: Dict,
 def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
                      slots: int = 4, block_size: int = 8,
                      max_context: int = 32, cache: str = "fp32",
-                     policy: str = "continuous", sampling: str = "greedy",
+                     policy: str = "continuous",
+                     prefill: str = "chunked", prefill_chunk: int = 16,
+                     prefix_cache: bool = False,
+                     sampling: str = "greedy",
                      temperature: float = 1.0,
                      fleet: str = "nano*2,agx*2", num_requests: int = 12,
                      max_prompt: Optional[int] = None,
                      deadline_s: float = 4.0,
                      short_new: tuple = (4, 8), long_new: tuple = (32, 48),
                      long_frac: float = 0.2, warm_passes: int = 1,
+                     requests=None, dt_step: float = 0.01,
+                     prefill_cost=None,
                      log_fn: Optional[Callable] = print) -> Dict:
     """Serve a fleet request trace through the paged engine.
 
@@ -101,24 +129,41 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
     then ``warm_passes`` passes on fresh schedulers whose best wall time
     defines the steady-state throughput the serving bench gates on
     (best-of-N damps scheduler-exterior noise on shared CI hosts).
+    ``prefill`` selects chunked paged prefill (the default — one
+    ``prefill_chunk``-token chunk per step, interleaved with decode) or
+    the monolithic bucketed baseline; ``prefix_cache`` turns on pod
+    prefix-block sharing (chunked only). Pass ``requests`` (a list of
+    :class:`ServeRequest` factories is not needed — a plain list is
+    re-instantiated per pass) to serve a custom trace, e.g. from
+    :func:`generate_pod_requests`, instead of the built-in fleet trace;
+    ``dt_step``/``prefill_cost`` feed the loadgen's simulated clock.
     Returns the loadgen report plus both throughputs and the per-request
     token streams (greedy streams are deterministic — the equivalence
-    tests compare them across policies and cache modes).
+    tests compare them across policies, prefill modes and cache modes).
     """
     if cache not in ("fp32", "int8"):
         raise ValueError(f"cache must be fp32|int8, got {cache!r}")
+    import copy
+
     from repro.models import lm
 
     if params is None:
         params = lm.init(jax.random.PRNGKey(seed), cfg)
     max_prompt = max_prompt if max_prompt is not None else max_context // 2
     max_new_cap = max(short_new[1], long_new[1])
-    spec = PagedCacheSpec.for_requests(slots, max_prompt + max_new_cap,
+    if requests is not None:
+        cap_tokens = max(len(r.prompt) + r.max_new_tokens
+                         for r in requests)
+    else:
+        cap_tokens = max_prompt + max_new_cap
+    spec = PagedCacheSpec.for_requests(slots, cap_tokens,
                                        block_size=block_size,
                                        quantized=(cache == "int8"))
     engine = PagedEngine(cfg, spec, max_context=max_context, slots=slots)
 
     def fresh_requests():
+        if requests is not None:
+            return copy.deepcopy(requests)
         return generate_fleet_requests(
             fleet, num_requests=num_requests, max_prompt=max_prompt,
             seed=seed, deadline_s=deadline_s, short_new=short_new,
@@ -127,12 +172,16 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
 
     def fresh_scheduler():
         return ContinuousScheduler(engine, params, policy=policy,
+                                   prefill=prefill,
+                                   prefill_chunk=prefill_chunk,
+                                   prefix_cache=prefix_cache,
                                    sampling=sampling,
                                    temperature=temperature, seed=seed)
 
     t0 = time.time()
     sched = fresh_scheduler()
-    drive(sched, fresh_requests())
+    drive(sched, fresh_requests(), dt_step=dt_step,
+          prefill_cost=prefill_cost)
     cold_s = time.time() - t0
     cold_toks = sched.total_new_tokens
 
@@ -140,11 +189,13 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
     for _ in range(max(1, warm_passes)):
         t0 = time.time()
         sched = fresh_scheduler()
-        report = drive(sched, fresh_requests())
+        report = drive(sched, fresh_requests(), dt_step=dt_step,
+                       prefill_cost=prefill_cost)
         warm_s = min(warm_s, time.time() - t0)
 
     report.update({
         "policy": policy,
+        "prefill": prefill,
         "cache": cache,
         "slots": slots,
         "block_size": block_size,

@@ -58,8 +58,10 @@ class PagedEngine:
         self.max_context = int(max_context)
         self.slots = int(slots)
         self._prefill = jax.jit(self._prefill_impl)
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
         self._decode = jax.jit(self._decode_impl)
         self._write = jax.jit(functools.partial(KC.write_prefill, spec=spec))
+        self._copy_block = jax.jit(self._copy_block_impl)
 
     # ---- pools --------------------------------------------------------
     def init_pools(self) -> Dict:
@@ -88,6 +90,93 @@ class PagedEngine:
     def write_prefill(self, pools, k_layers, v_layers, table_row) -> Dict:
         return self._write(pools, k_layers=k_layers, v_layers=v_layers,
                            table_row=table_row)
+
+    # ---- chunked prefill ---------------------------------------------
+    def _prefill_chunk_impl(self, params, pools, tokens, table, q_offset,
+                            chunk_len):
+        """One prompt chunk of ONE request straight into its pool blocks.
+
+        tokens: [C] int32 (rows past ``chunk_len`` are padding); table:
+        [T] int32 logical->physical; q_offset/chunk_len: scalar int32
+        (chunk covers absolute positions [q_offset, q_offset +
+        chunk_len)). No ``[L, Hkv, Smax, D]`` staging buffer and no
+        max_context padding: each layer scatters the chunk's K/V into the
+        pool (padding rows target the null block) and attends to the
+        prior context *plus itself* through the block table via the
+        chunked-prefill Pallas kernel. Returns (logits [1, V] of the
+        chunk's last true row — only meaningful on the final chunk — and
+        the updated pools). Mirrors ``_decode_impl`` op for op so chunked
+        and monolithic prefill agree bit-for-bit in greedy streams."""
+        cfg, spec = self.cfg, self.spec
+        nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        c = tokens.shape[0]
+        scale = hd ** -0.5
+
+        x = B.embed(params["embed"], tokens[None])         # [1, C, d]
+        pos = q_offset + jnp.arange(c, dtype=jnp.int32)    # absolute
+        positions = pos[None]                              # [1, C]
+        rows = jnp.arange(c, dtype=jnp.int32)
+        blk = pos // spec.block_size
+        phys = jnp.where(rows < chunk_len, table[blk], 0)  # [C]
+        off = pos % spec.block_size
+
+        def body(carry, layer):
+            h_in = carry
+            lp, layer_pools = layer
+            ap = lp["attn"]
+            h = B.rms_norm(lp["ln1"], h_in, cfg.norm_eps)
+            q = h @ ap["wq"]
+            k = h @ ap["wk"]
+            v = h @ ap["wv"]
+            if "bq" in ap:
+                q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+            q = B._split_heads(q, nq, hd)                  # [1, Hq, C, D]
+            k = B._split_heads(k, nkv, hd)
+            v = B._split_heads(v, nkv, hd)
+            if "q_norm" in ap:
+                q = B._head_rmsnorm(q, ap["q_norm"], cfg.norm_eps)
+                k = B._head_rmsnorm(k, ap["k_norm"], cfg.norm_eps)
+            q = B.rope(q, positions, cfg.rope_theta)
+            k = B.rope(k, positions, cfg.rope_theta)
+
+            new_pools = KC.append_token(layer_pools, spec, k[0], v[0],
+                                        phys, off)
+            from repro.kernels import ops as kops
+            o = kops.paged_prefill_attention(
+                q[0], new_pools["k"], new_pools["v"], table,
+                q_offset, q_offset + chunk_len, scale=scale,
+                k_scales=new_pools.get("k_scale"),
+                v_scales=new_pools.get("v_scale"))         # [Hq, C, D]
+            h_in = h_in + (o.transpose(1, 0, 2).reshape(1, c, nq * hd)
+                           @ ap["wo"]).astype(h_in.dtype)
+            hh = B.rms_norm(lp["ln2"], h_in, cfg.norm_eps)
+            if "moe" in lp:
+                f, _ = B.moe_block(lp["moe"], hh, cfg)
+            else:
+                f = B.mlp(lp["ffn"], hh)
+            return h_in + f, new_pools
+
+        x, new_pools = jax.lax.scan(body, x, (params["blocks"], pools))
+        h = B.rms_norm(params["ln_f"], x[:, chunk_len - 1], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = B.unembed(params["embed"], h[:, None])[:, 0]
+        else:
+            logits = B.linear(params["head"], h).astype(jnp.float32)
+        return logits, new_pools
+
+    def prefill_chunk(self, params, pools, tokens, table, q_offset,
+                      chunk_len) -> Tuple:
+        return self._prefill_chunk(params, pools, tokens, table,
+                                   jnp.int32(q_offset), jnp.int32(chunk_len))
+
+    def _copy_block_impl(self, pools, src, dst):
+        """Copy-on-write helper: clone physical block ``src`` into ``dst``
+        across every pool tensor (block axis 2 of [L, Hkv, NB, bs, D])."""
+        return {k: p.at[:, :, dst].set(p[:, :, src])
+                for k, p in pools.items()}
+
+    def copy_block(self, pools, src, dst) -> Dict:
+        return self._copy_block(pools, jnp.int32(src), jnp.int32(dst))
 
     # ---- decode -------------------------------------------------------
     def _decode_impl(self, params, pools, tokens, tables, ctx_lens):

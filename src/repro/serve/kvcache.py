@@ -28,6 +28,7 @@ touches tensors (:func:`init_pools`, :func:`write_prefill`,
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
@@ -77,15 +78,27 @@ class PagedCacheSpec:
 
 
 class BlockAllocator:
-    """Free-list allocator over the physical pool (host-side).
+    """Refcounted free-list allocator over the physical pool (host-side).
 
     Allocation is all-or-nothing: ``alloc(n)`` returns ``None`` when the
     pool cannot cover the whole request, so admission never strands a
-    partially-allocated request. Block 0 never enters the free list."""
+    partially-allocated request. Block 0 never enters the free list.
+
+    Every live block carries a reference count: ``alloc`` hands blocks
+    out at refcount 1, ``share`` increments (prefix-cache sharing — a
+    second request mapping the same physical template blocks), and
+    ``release`` decrements, returning a block to the free list only when
+    its count reaches zero. Releasing a block more times than it is
+    currently held (in one call or across calls) raises — the double-free
+    safety net predates refcounting and survives it. Shared blocks are
+    read-only by contract; a writer must drop its share and copy first
+    (copy-on-write, orchestrated by the scheduler via
+    ``PagedEngine.copy_block``)."""
 
     def __init__(self, spec: PagedCacheSpec):
         self.spec = spec
         self._free: List[int] = list(range(spec.num_blocks - 1, 0, -1))
+        self._refs: Dict[int, int] = {}
 
     @property
     def free_blocks(self) -> int:
@@ -95,21 +108,151 @@ class BlockAllocator:
     def in_use(self) -> int:
         return (self.spec.num_blocks - 1) - len(self._free)
 
+    def refcount(self, block: int) -> int:
+        """Current reference count of ``block`` (0 when free)."""
+        return self._refs.get(block, 0)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n > len(self._free) or n > self.spec.max_blocks_per_req:
             return None
         out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self._refs[b] = 1
         return out
 
-    def release(self, blocks: Sequence[int]) -> None:
-        seen = set(self._free)
+    def share(self, blocks: Sequence[int]) -> None:
+        """Increment the refcount of already-live blocks (all-or-nothing:
+        validates every id before touching any count)."""
         for b in blocks:
             if not 0 < b < self.spec.num_blocks:
                 raise ValueError(f"block id {b} outside the pool")
-            if b in seen:
+            if self._refs.get(b, 0) < 1:
+                raise ValueError(f"share of free block {b}")
+        for b in blocks:
+            self._refs[b] += 1
+
+    def release(self, blocks: Sequence[int]) -> None:
+        counts: Dict[int, int] = {}
+        for b in blocks:
+            if not 0 < b < self.spec.num_blocks:
+                raise ValueError(f"block id {b} outside the pool")
+            counts[b] = counts.get(b, 0) + 1
+        for b, n in counts.items():
+            if n > self._refs.get(b, 0):
                 raise ValueError(f"double free of block {b}")
-            seen.add(b)
-        self._free.extend(blocks)
+        for b, n in counts.items():
+            self._refs[b] -= n
+            if self._refs[b] == 0:
+                del self._refs[b]
+                self._free.append(b)
+
+
+class PrefixCache:
+    """Pod prefix registry: full-block token chains -> physical blocks.
+
+    Fleet prompts are templated per pod (shared prefix + unique suffix),
+    so the KV state of the template blocks is identical across a pod's
+    requests — K/V rows are a pure function of the token prefix. The
+    registry maps each *full* block of a finished prompt, keyed by the
+    entire token prefix up to that block boundary (a collision-free
+    realization of token-hash chaining: matching key m+1 implies key m
+    matched), to the physical block holding its K/V. A later request
+    walks its own prompt's chain, maps every hit via
+    ``BlockAllocator.share`` instead of recomputing, and resumes chunked
+    prefill at the first uncached token.
+
+    Only blocks whose ``block_size`` tokens are all prompt tokens are
+    ever registered — decode appends land at position >= len(prompt),
+    i.e. in later blocks — so registered blocks are immutable for the
+    lifetime of the registration. When a prompt is covered end-to-end by
+    cached blocks the model still owes the last token's logits; the last
+    matched block is returned as ``cow_src`` for the scheduler to
+    copy-on-write (copy to a private block, drop the share) so the
+    recompute of that final token never writes into a shared block.
+
+    Entries are LRU-ordered; :meth:`evict` frees registry-only blocks
+    (refcount 1) from the cold end when admission runs out of pool."""
+
+    def __init__(self, allocator: BlockAllocator):
+        self.allocator = allocator
+        self._map: "OrderedDict[tuple, int]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.cached_tokens = 0
+        self.shared_blocks = 0     # pool blocks a request mapped vs computed
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def _chain_keys(self, prompt: Sequence[int]):
+        bs = self.allocator.spec.block_size
+        for m in range(len(prompt) // bs):
+            yield tuple(prompt[:(m + 1) * bs])
+
+    def match(self, prompt: Sequence[int]):
+        """Longest registered full-block prefix of ``prompt``.
+
+        Returns ``(shared, cow_src, resume_pos)``: ``shared`` are the
+        physical blocks to map read-only into the request's table (each
+        already incref'd here), ``cow_src`` is the incref'd block the
+        scheduler must copy-on-write when the whole prompt was covered
+        (else None), and ``resume_pos`` is the first prompt position
+        chunked prefill still has to compute."""
+        blocks = []
+        for key in self._chain_keys(prompt):
+            b = self._map.get(key)
+            if b is None:
+                break
+            blocks.append(b)
+            self._map.move_to_end(key)
+        if not blocks:
+            self.misses += 1
+            return [], None, 0
+        cow_src = None
+        bs = self.allocator.spec.block_size
+        resume = len(blocks) * bs
+        if resume == len(prompt):
+            # Whole prompt cached; recompute only the final token for its
+            # logits, through a private copy of its block.
+            cow_src = blocks.pop()
+            resume = len(prompt) - 1
+        self.allocator.share(blocks + ([cow_src] if cow_src is not None
+                                       else []))
+        self.hits += 1
+        self.cached_tokens += resume
+        self.shared_blocks += len(blocks)   # the CoW copy is not a saving
+        return blocks, cow_src, resume
+
+    def insert(self, prompt: Sequence[int], table: Sequence[int]) -> None:
+        """Register ``prompt``'s full blocks out of a finished prefill's
+        ``table`` (logical order). Already-registered chains keep their
+        existing block; new registrations hold one registry ref."""
+        for m, key in enumerate(self._chain_keys(prompt)):
+            if key in self._map:
+                self._map.move_to_end(key)
+                continue
+            b = int(table[m])
+            self.allocator.share([b])
+            self._map[key] = b
+
+    def evict(self, want_blocks: int) -> int:
+        """Drop cold registry-only entries (refcount 1 — no live request
+        shares them) until ``want_blocks`` blocks were freed or no entry
+        is evictable. Returns the number freed."""
+        freed = 0
+        for key in list(self._map):
+            if freed >= want_blocks:
+                break
+            b = self._map[key]
+            if self.allocator.refcount(b) == 1:
+                del self._map[key]
+                self.allocator.release([b])
+                freed += 1
+        return freed
+
+    @property
+    def registered_blocks(self) -> int:
+        return len(set(self._map.values()))
 
 
 # ---------------------------------------------------------------- pools ----

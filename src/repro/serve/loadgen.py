@@ -19,7 +19,14 @@ The simulated clock advances ``dt_step`` per scheduler step (a fixed
 nominal step cost — the *wall-clock* numbers in the bench come from real
 timers around the same loop, the simulated clock only orders admissions
 and scores deadlines) and jumps to the next arrival when the scheduler
-goes idle.
+goes idle. When a :class:`PrefillCostModel` is supplied, each step is
+additionally charged for the prefill compute it actually ran — padded
+prompt tokens (linear qkv/ffn work) plus attention score MACs — which is
+what makes TTFT comparisons between chunked and monolithic prefill
+honest on this CPU container: interpret-mode Pallas wall-clock says
+nothing about accelerator cost, but a monolithic prefill's
+``max_context`` padding and ``max_context**2`` score matrix are real
+FLOPs a chunked prefill never issues.
 """
 from __future__ import annotations
 
@@ -84,15 +91,89 @@ def generate_fleet_requests(fleet_spec, *, num_requests: int,
     return out
 
 
+def generate_pod_requests(fleet_spec, *, num_requests: int, pods: int = 2,
+                          template_len: int = 24, max_suffix: int = 8,
+                          seed: int = 0, period_s: float = 0.05,
+                          deadline_s: float = 2.0,
+                          short_new: tuple = (4, 8),
+                          long_new: tuple = (32, 48),
+                          long_frac: float = 0.2,
+                          vocab_size: int = 512) -> List[ServeRequest]:
+    """Pod-templated request trace: shared prefix + unique suffix.
+
+    FLAD's vehicles cluster into geographic pods whose AD prompts share a
+    templated scene/instruction preamble; only the tail (ego state, query)
+    differs per vehicle. Each of ``pods`` pods draws one fixed
+    ``template_len``-token template, and every request from that pod's
+    vehicles is ``template + suffix`` with a unique 1..``max_suffix``
+    token suffix — exactly the shape the serving tier's prefix cache
+    exploits. Arrivals/deadlines/decode lengths follow
+    :func:`generate_fleet_requests`."""
+    fleet = parse_fleet(fleet_spec) if isinstance(fleet_spec, str) \
+        else list(fleet_spec)
+    rng = np.random.default_rng(seed)
+    templates = [rng.integers(1, vocab_size, (template_len,)).astype(np.int32)
+                 for _ in range(pods)]
+    out = []
+    for rid in range(num_requests):
+        v = fleet[rid % len(fleet)]
+        pod = (rid % len(fleet)) % pods
+        slen = int(rng.integers(1, max_suffix + 1))
+        suffix = rng.integers(1, vocab_size, (slen,)).astype(np.int32)
+        prompt = np.concatenate([templates[pod], suffix])
+        if rng.random() < long_frac:
+            lo, hi = long_new
+        else:
+            lo, hi = short_new
+        max_new = int(rng.integers(lo, hi + 1))
+        epoch = (rid // len(fleet)) * period_s
+        arrival = epoch + t_uplink(len(prompt) * BYTES_PER_PROMPT_TOKEN, v)
+        out.append(ServeRequest(rid=rid, prompt=prompt,
+                                max_new_tokens=max_new,
+                                arrival_s=arrival,
+                                deadline_s=arrival + deadline_s))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillCostModel:
+    """Sim-time surcharge for the prefill compute a step actually ran.
+
+    ``s_per_token`` prices the linear work (embed/qkv/ffn) of every
+    *padded* prompt token the step pushed through the model —
+    ``max_context`` for a monolithic prefill, the chunk size for a
+    chunked one — and ``s_per_mac`` prices attention score entries
+    (query rows x visible keys). The defaults are nominal edge-GPU
+    magnitudes; the TTFT gate compares two runs under the SAME model, so
+    only the ratio matters."""
+    s_per_token: float = 5e-5
+    s_per_mac: float = 2e-9
+
+    def step_cost(self, stats: Dict) -> float:
+        return (stats.get("prefill_padded_tokens", 0) * self.s_per_token
+                + stats.get("prefill_attn_mac", 0) * self.s_per_mac)
+
+
+def _pct(sorted_vals: List[float], p: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1,
+            int(math.ceil(p / 100.0 * len(sorted_vals))) - 1)
+    return sorted_vals[max(0, i)]
+
+
 def drive(scheduler: ContinuousScheduler,
           requests: Sequence[ServeRequest], *,
-          dt_step: float = 0.01, max_steps: int = 1_000_000) -> Dict:
+          dt_step: float = 0.01,
+          prefill_cost: Optional[PrefillCostModel] = None,
+          max_steps: int = 1_000_000) -> Dict:
     """Push the request trace through the scheduler in event-time order.
 
     Arrivals enter a :class:`EventQueue`; the simulated clock advances
-    ``dt_step`` per decode step and jumps forward when the scheduler is
+    ``dt_step`` per scheduler step (plus the step's prefill compute under
+    ``prefill_cost``, when given) and jumps forward when the scheduler is
     idle and the next arrival is still in flight. Returns the latency /
-    deadline report."""
+    TTFT / deadline report."""
     q = EventQueue()
     by_rid = {}
     for r in requests:
@@ -100,6 +181,7 @@ def drive(scheduler: ContinuousScheduler,
         by_rid[r.rid] = r
     t = 0.0
     steps = 0
+    pref_tokens = pref_mac = 0
     while len(q) or not scheduler.idle:
         # drain every arrival that has landed by now
         while len(q) and q.peek_t() <= t:
@@ -111,28 +193,55 @@ def drive(scheduler: ContinuousScheduler,
             t = q.peek_t()          # nothing in flight: jump to next landing
             continue
         scheduler.step(t)
-        t += dt_step
+        pref_tokens += scheduler.last_stats.get("prefill_padded_tokens", 0)
+        pref_mac += scheduler.last_stats.get("prefill_attn_mac", 0)
+        t_end = t + dt_step
+        if prefill_cost is not None:
+            t_end += prefill_cost.step_cost(scheduler.last_stats)
+        # first-token / completion events happen when the step's compute
+        # finishes, not when it is issued — finalize their timestamps to
+        # the step's end so a prefill's cost lands in its own TTFT
+        for r in scheduler.step_events:
+            if r.t_first_token == t:
+                r.t_first_token = t_end
+            if r.t_done == t:
+                r.t_done = t_end
+        t = t_end
         steps += 1
         if steps > max_steps:
             raise RuntimeError("loadgen failed to drain the request trace")
 
     done = scheduler.finished
     lats = sorted(r.latency_s for r in done)
+    ttfts = sorted(r.ttft_s for r in done if r.ttft_s is not None)
+    waits = sorted(r.queue_wait_s for r in done
+                   if r.queue_wait_s is not None)
 
-    def pct(p: float) -> float:
-        if not lats:
-            return 0.0
-        i = min(len(lats) - 1, int(math.ceil(p / 100.0 * len(lats))) - 1)
-        return lats[max(0, i)]
-
-    return {
+    report = {
         "requests": len(done),
         "total_new_tokens": scheduler.total_new_tokens,
         "decode_steps": scheduler.decode_steps_run,
         "prefills": scheduler.prefills_run,
+        "prefill_chunks": scheduler.prefill_chunks_run,
+        "prefill_padded_tokens": pref_tokens,
+        "prefill_attn_mac": pref_mac,
         "sim_time_s": t,
-        "p50_latency_s": pct(50.0),
-        "p99_latency_s": pct(99.0),
+        "p50_latency_s": _pct(lats, 50.0),
+        "p99_latency_s": _pct(lats, 99.0),
+        "p50_ttft_s": _pct(ttfts, 50.0),
+        "p99_ttft_s": _pct(ttfts, 99.0),
+        "p50_queue_wait_s": _pct(waits, 50.0),
+        "p99_queue_wait_s": _pct(waits, 99.0),
         "deadline_hit_rate": (sum(r.met_deadline for r in done)
                               / max(1, len(done))),
     }
+    if scheduler.prefix is not None:
+        pc = scheduler.prefix
+        report.update({
+            "prefix_hits": pc.hits,
+            "prefix_misses": pc.misses,
+            "prefix_hit_rate": pc.hits / max(1, pc.hits + pc.misses),
+            "prefix_cached_tokens": pc.cached_tokens,
+            "prefix_blocks_saved": pc.shared_blocks,
+        })
+    return report

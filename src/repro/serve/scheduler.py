@@ -14,17 +14,41 @@ request sits in which lane:
     strawman the serving bench compares against; at mixed decode lengths
     most lanes idle for most of each wave.
 
+Prefill is decoupled from admission (Sarathi-style chunked prefill):
+``_admit`` only reserves a lane and its blocks — the actual prompt
+compute happens inside :meth:`step`, AT MOST ONE prefill unit per step
+(one fixed-size chunk in ``prefill="chunked"`` mode, one full bucketed
+prefill in ``prefill="monolithic"`` mode), interleaved with the fused
+decode over every prefill-complete lane. A burst of N arrivals therefore
+costs live decode lanes one chunk of latency per step, not N monolithic
+prefills of dead air. Lanes still prefilling are masked out of the decode
+batch (table/ctx/token zeroed → they behave exactly like dead lanes
+pointing at the null block).
+
+Chunked mode optionally shares pod prompt prefixes: a
+:class:`repro.serve.kvcache.PrefixCache` maps previously computed full
+prompt blocks into a new request's table via refcounted
+``BlockAllocator.share`` (read-only by contract; the whole-prompt-cached
+case goes through ``PagedEngine.copy_block`` copy-on-write), and chunked
+prefill resumes at the first uncached token. Monolithic prefill cannot
+share (``write_prefill`` scatters the full bucket and would clobber
+shared blocks), so ``prefix_cache=True`` requires chunked mode.
+
 Admission is gated by the :class:`repro.serve.kvcache.BlockAllocator`
 (all-or-nothing block reservation for prompt + max_new_tokens) and by
-``max_inflight_blocks`` so a fleet burst cannot overcommit the pool.
+``max_inflight_blocks`` so a fleet burst cannot overcommit the pool;
+when the prefix registry's cold entries are what exhausts the pool they
+are LRU-evicted before admission gives up.
 
 Determinism: greedy decoding makes the token streams a pure function of
 (params, prompts) — per-request streams are bit-identical between the two
-policies for the dense family (each lane's attention only reads its own
-blocks; MoE capacity routing is cross-token and would break this, which
-the equivalence test therefore pins to dense). Temperature sampling draws
-from a per-step key folded from a base key and the step index, so a run
-is reproducible given its seed.
+policies AND the two prefill modes for the dense family (each lane's
+attention only reads its own blocks; prefix-shared blocks hold bitwise
+the K/V the request would have computed itself, since K/V rows are a
+pure function of the token prefix; MoE capacity routing is cross-token
+and would break this, which the equivalence test therefore pins to
+dense). Temperature sampling draws from a per-step key folded from a
+base key and the step index, so a run is reproducible given its seed.
 """
 from __future__ import annotations
 
@@ -41,6 +65,7 @@ from repro.serve import kvcache as KC
 from repro.serve.engine import PagedEngine
 
 _POLICIES = ("continuous", "rebatch")
+_PREFILL_MODES = ("chunked", "monolithic")
 
 
 @dataclasses.dataclass
@@ -54,6 +79,7 @@ class ServeRequest:
     # filled by the scheduler:
     tokens: List[int] = dataclasses.field(default_factory=list)
     t_admit: Optional[float] = None
+    t_first_token: Optional[float] = None
     t_done: Optional[float] = None
 
     @property
@@ -63,29 +89,58 @@ class ServeRequest:
         return self.t_done - self.arrival_s
 
     @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token (arrival -> first sampled token)."""
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival_s
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Time spent waiting for a lane (arrival -> admission)."""
+        if self.t_admit is None:
+            return None
+        return self.t_admit - self.arrival_s
+
+    @property
     def met_deadline(self) -> bool:
         return self.t_done is not None and self.t_done <= self.deadline_s
 
 
 class ContinuousScheduler:
-    """Admit/decode/retire requests against a :class:`PagedEngine`."""
+    """Admit/prefill/decode/retire requests against a :class:`PagedEngine`."""
 
     def __init__(self, engine: PagedEngine, params, *,
                  policy: str = "continuous",
+                 prefill: str = "chunked", prefill_chunk: int = 32,
+                 prefix_cache: bool = False,
                  max_inflight_blocks: Optional[int] = None,
                  sampling: str = "greedy", temperature: float = 1.0,
                  seed: int = 0):
         if policy not in _POLICIES:
             raise ValueError(f"unknown policy {policy!r} ({_POLICIES})")
+        if prefill not in _PREFILL_MODES:
+            raise ValueError(
+                f"unknown prefill mode {prefill!r} ({_PREFILL_MODES})")
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if prefix_cache and prefill != "chunked":
+            raise ValueError(
+                "prefix_cache requires prefill='chunked' (monolithic "
+                "write_prefill would clobber shared blocks)")
         self.engine = engine
         self.params = params
         self.policy = policy
+        self.prefill_mode = prefill
+        self.prefill_chunk = int(prefill_chunk)
         self.spec = engine.spec
         self.slots = engine.slots
         self.max_inflight_blocks = (max_inflight_blocks
                                     if max_inflight_blocks is not None
                                     else self.spec.num_blocks - 1)
         self.allocator = KC.BlockAllocator(self.spec)
+        self.prefix: Optional[KC.PrefixCache] = (
+            KC.PrefixCache(self.allocator) if prefix_cache else None)
         self.sampler = engine.make_sampler(sampling, temperature)
         self._base_key = jax.random.PRNGKey(seed)
         self._sample_step = 0
@@ -97,12 +152,24 @@ class ContinuousScheduler:
         self.pending_tok = np.zeros(self.slots, np.int32)
         self.active: List[Optional[ServeRequest]] = [None] * self.slots
         self.blocks: List[Optional[List[int]]] = [None] * self.slots
+        self.prefill_pos = np.zeros(self.slots, np.int32)
+        self.prefill_done = np.zeros(self.slots, bool)
+        self._prefill_queue: Deque[int] = collections.deque()
         self.waiting: Deque[ServeRequest] = collections.deque()
         self.finished: List[ServeRequest] = []
         # counters for the bench report
         self.decode_steps_run = 0
-        self.prefills_run = 0
+        self.prefills_run = 0            # monolithic full prefills
+        self.prefill_chunks_run = 0
         self.total_new_tokens = 0
+        self.fresh_blocks_allocated = 0
+        # per-step cost stats for the loadgen's sim clock
+        self.last_stats: Dict[str, int] = {}
+        # requests stamped (first token / done) during the current step;
+        # the loadgen finalizes their timestamps to the step's END time
+        # once it knows the step's compute cost, so a prefill's own cost
+        # lands in the TTFT of the request that incurred it
+        self.step_events: List[ServeRequest] = []
 
     # ---- bookkeeping --------------------------------------------------
     @property
@@ -118,7 +185,10 @@ class ContinuousScheduler:
             raise ValueError(f"request {req.rid} needs "
                              f"{len(req.prompt) + req.max_new_tokens} tokens "
                              f"> table capacity")
-        if len(req.prompt) > self.engine.max_context:
+        if (self.prefill_mode == "monolithic"
+                and len(req.prompt) > self.engine.max_context):
+            # Chunked prefill streams arbitrarily long prompts through
+            # fixed-size chunks; only the monolithic bucket is bounded.
             raise ValueError(f"request {req.rid} prompt exceeds max_context")
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
@@ -132,6 +202,7 @@ class ContinuousScheduler:
     def _retire(self, slot: int, t: float) -> None:
         req = self.active[slot]
         req.t_done = t
+        self.step_events.append(req)
         self.finished.append(req)
         self.allocator.release(self.blocks[slot])
         self.active[slot] = None
@@ -139,9 +210,28 @@ class ContinuousScheduler:
         self.tables[slot] = 0
         self.ctx[slot] = 0
         self.pending_tok[slot] = 0
+        self.prefill_pos[slot] = 0
+        self.prefill_done[slot] = False
 
     # ---- admission ----------------------------------------------------
+    def _try_alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` fresh blocks under the inflight cap, LRU-evicting
+        cold prefix-registry entries once if they are what's in the way."""
+        def fits() -> bool:
+            return (self.allocator.in_use + n <= self.max_inflight_blocks
+                    and n <= self.allocator.free_blocks)
+        if not fits() and self.prefix is not None:
+            deficit = max(n - self.allocator.free_blocks,
+                          self.allocator.in_use + n
+                          - self.max_inflight_blocks)
+            self.prefix.evict(deficit)
+        if not fits():
+            return None
+        return self.allocator.alloc(n)
+
     def _admit(self, t: float) -> None:
+        """Reserve lanes + blocks for waiting requests (bookkeeping only —
+        prompt compute happens one prefill unit per :meth:`step`)."""
         if self.policy == "rebatch" and self.num_active > 0:
             return                      # wave semantics: drain first
         for slot in range(self.slots):
@@ -150,46 +240,123 @@ class ContinuousScheduler:
             req = self.waiting[0]
             need = self.spec.blocks_needed(len(req.prompt)
                                            + req.max_new_tokens)
-            inflight = self.allocator.in_use
-            if inflight + need > self.max_inflight_blocks:
-                break                   # FIFO: don't starve the head
-            blocks = self.allocator.alloc(need)
-            if blocks is None:
+            shared: List[int] = []
+            cow_src: Optional[int] = None
+            resume = 0
+            if self.prefix is not None:
+                shared, cow_src, resume = self.prefix.match(req.prompt)
+            fresh_need = need - len(shared)
+            fresh = self._try_alloc(fresh_need)
+            if fresh is None:
+                # Undo the prefix refs and keep FIFO order (don't starve
+                # the head by admitting a smaller request behind it).
+                undo = shared + ([cow_src] if cow_src is not None else [])
+                if undo:
+                    self.allocator.release(undo)
                 break
             self.waiting.popleft()
+            self.fresh_blocks_allocated += fresh_need
+            if cow_src is not None:
+                # Whole prompt was cached: clone the last shared block so
+                # the final-token recompute writes a private copy.
+                dst = fresh[0]
+                self.pools = self.engine.copy_block(self.pools, cow_src, dst)
+                self.allocator.release([cow_src])
             req.t_admit = t
             self.active[slot] = req
-            self.blocks[slot] = blocks
+            self.blocks[slot] = shared + fresh
             self.tables[slot] = 0
-            self.tables[slot, :need] = blocks
+            self.tables[slot, :need] = shared + fresh
+            self.ctx[slot] = 0
+            self.pending_tok[slot] = 0
+            self.prefill_pos[slot] = resume
+            self.prefill_done[slot] = False
+            self._prefill_queue.append(slot)
+
+    # ---- prefill work -------------------------------------------------
+    def _finish_prefill(self, slot: int, logits, t: float) -> None:
+        req = self.active[slot]
+        first = int(self.sampler(logits, self._next_key())[0])
+        req.tokens.append(first)
+        req.t_first_token = t
+        self.step_events.append(req)
+        self.total_new_tokens += 1
+        self.ctx[slot] = len(req.prompt)
+        self.pending_tok[slot] = first
+        self.prefill_done[slot] = True
+        if self.prefix is not None:
+            self.prefix.insert(req.prompt, self.tables[slot])
+        if req.max_new_tokens == 1:
+            self._retire(slot, t)
+
+    def _run_prefill(self, t: float) -> None:
+        """Run AT MOST ONE prefill unit: the oldest admitted lane still
+        prefilling gets one chunk (chunked) or its whole bucketed prefill
+        (monolithic)."""
+        while self._prefill_queue and (
+                self.active[self._prefill_queue[0]] is None
+                or self.prefill_done[self._prefill_queue[0]]):
+            self._prefill_queue.popleft()
+        if not self._prefill_queue:
+            return
+        slot = self._prefill_queue[0]
+        req = self.active[slot]
+        plen = len(req.prompt)
+        if self.prefill_mode == "monolithic":
             toks, length = self.engine.pad_prompt(req.prompt)
             logits, k, v = self.engine.prefill(self.params, toks, length)
             self.pools = self.engine.write_prefill(
                 self.pools, k, v, jnp.asarray(self.tables[slot]))
             self.prefills_run += 1
-            first = int(self.sampler(logits, self._next_key())[0])
-            req.tokens.append(first)
-            self.total_new_tokens += 1
-            self.ctx[slot] = len(req.prompt)
-            self.pending_tok[slot] = first
-            if req.max_new_tokens == 1:
-                self._retire(slot, t)
+            self.prefill_pos[slot] = plen
+            self.last_stats["prefill_padded_tokens"] = self.engine.max_context
+            self.last_stats["prefill_attn_mac"] = self.engine.max_context ** 2
+            self._prefill_queue.popleft()
+            self._finish_prefill(slot, logits, t)
+            return
+        c = self.prefill_chunk
+        pos = int(self.prefill_pos[slot])
+        clen = min(c, plen - pos)
+        buf = np.zeros(c, np.int32)
+        buf[:clen] = np.asarray(req.prompt[pos:pos + clen], np.int32)
+        logits, self.pools = self.engine.prefill_chunk(
+            self.params, self.pools, jnp.asarray(buf),
+            jnp.asarray(self.tables[slot]), pos, clen)
+        self.prefill_chunks_run += 1
+        self.prefill_pos[slot] = pos + clen
+        self.last_stats["prefill_padded_tokens"] = c
+        self.last_stats["prefill_attn_mac"] = c * (pos + clen)
+        if pos + clen == plen:
+            self._prefill_queue.popleft()
+            self._finish_prefill(slot, logits, t)
 
     # ---- one step -----------------------------------------------------
     def step(self, t: float = 0.0) -> int:
-        """Admit what fits, then run one fused decode step across all
-        lanes. Returns the number of tokens emitted this step."""
+        """Admit what fits, run at most one prefill unit, then one fused
+        decode step across every prefill-complete lane. Returns the
+        number of decode tokens emitted this step (``self.last_stats``
+        carries the step's prefill cost breakdown for the sim clock)."""
+        self.last_stats = {"prefill_padded_tokens": 0, "prefill_attn_mac": 0}
+        self.step_events = []
         self._admit(t)
-        live = [i for i in range(self.slots) if self.active[i] is not None]
-        if not live:
+        self._run_prefill(t)
+        ready = np.array([self.active[i] is not None and self.prefill_done[i]
+                          for i in range(self.slots)])
+        if not ready.any():
             return 0
+        # Lanes still prefilling are masked to the dead-lane contract so
+        # the fused decode never writes into their (possibly shared)
+        # blocks: table 0 -> null block, ctx 0, token 0.
+        dec_tables = np.where(ready[:, None], self.tables, 0)
+        dec_ctx = np.where(ready, self.ctx, 0).astype(np.int32)
+        dec_tok = np.where(ready, self.pending_tok, 0).astype(np.int32)
         logits, self.pools = self.engine.decode(
-            self.params, self.pools, jnp.asarray(self.pending_tok),
-            jnp.asarray(self.tables), jnp.asarray(self.ctx))
+            self.params, self.pools, jnp.asarray(dec_tok),
+            jnp.asarray(dec_tables), jnp.asarray(dec_ctx))
         self.decode_steps_run += 1
         nxt = np.asarray(self.sampler(logits, self._next_key()), np.int32)
         emitted = 0
-        for slot in live:
+        for slot in np.flatnonzero(ready):
             req = self.active[slot]
             self.ctx[slot] += 1
             tok = int(nxt[slot])

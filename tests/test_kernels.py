@@ -279,6 +279,122 @@ def test_paged_decode_attention_int8():
     assert float(jnp.max(jnp.abs(got - want))) < 5e-6
 
 
+def _prefill_pool_setup(key, hkv, bs, d, s, spare=2, int8=False):
+    """A contiguous K/V stream scattered into shuffled physical blocks,
+    plus the block table that maps it back (trailing entries null)."""
+    import numpy as np
+    t = -(-s // bs)
+    nb = 1 + t + spare
+    ks = jax.random.split(key, 4)
+    k = jax.random.normal(ks[0], (hkv, s, d), jnp.float32)
+    v = jax.random.normal(ks[1], (hkv, s, d), jnp.float32)
+    pad = t * bs - s
+    kb = jnp.pad(k, ((0, 0), (0, pad), (0, 0))).reshape(hkv, t, bs, d)
+    vb = jnp.pad(v, ((0, 0), (0, pad), (0, 0))).reshape(hkv, t, bs, d)
+    rng = np.random.default_rng(int(jax.random.randint(ks[2], (), 0, 1 << 30)))
+    phys = rng.permutation(np.arange(1, nb))[:t]
+    kp = jnp.zeros((hkv, nb, bs, d), jnp.float32).at[:, phys].set(kb)
+    vp = jnp.zeros((hkv, nb, bs, d), jnp.float32).at[:, phys].set(vb)
+    tbl = np.zeros(t + 1, np.int32)
+    tbl[:t] = phys
+    scales = None
+    if int8:
+        from repro.serve.kvcache import quantize_rows
+        kp, ksc = quantize_rows(kp)
+        vp, vsc = quantize_rows(vp)
+        scales = (ksc, vsc)
+    return k, v, kp, vp, jnp.asarray(tbl), scales
+
+
+@pytest.mark.parametrize(
+    "hq,hkv,d,bs,chunk,ctx,off",
+    [
+        (4, 2, 32, 8, 8, 21, 0),      # GQA, first chunk
+        (4, 2, 32, 8, 8, 21, 8),      # mid chunk over earlier blocks
+        (4, 2, 32, 8, 8, 21, 16),     # final partial chunk (5 live rows)
+        (8, 8, 64, 16, 16, 16, 0),    # MHA, one exact-fit chunk
+        (2, 1, 128, 4, 4, 9, 4),      # MQA, tiny blocks, odd tail
+        (4, 2, 32, 8, 16, 37, 16),    # chunk spanning multiple blocks
+    ])
+def test_paged_prefill_attention(hq, hkv, d, bs, chunk, ctx, off):
+    """Chunked paged prefill kernel vs the dense gather oracle: a C-row
+    query chunk at q_offset attends causally through the block table."""
+    _, _, kp, vp, tbl, _ = _prefill_pool_setup(jax.random.fold_in(KEY, 13),
+                                               hkv, bs, d, ctx)
+    q = jax.random.normal(jax.random.fold_in(KEY, 17), (hq, chunk, d),
+                          jnp.float32)
+    got = ops.paged_prefill_attention(q, kp, vp, tbl, off, ctx,
+                                      interpret=True)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, tbl, off, ctx)
+    clen = ctx - off            # rows past the live chunk are garbage
+    assert got.shape == (hq, chunk, d)
+    err = float(jnp.max(jnp.abs(got[:, :clen] - want[:, :clen])))
+    assert err < 5e-6
+
+
+def test_paged_prefill_attention_int8():
+    """int8 pools dequantize in-kernel through per-row scales."""
+    hq, hkv, d, bs, chunk, ctx, off = 4, 2, 32, 8, 8, 19, 8
+    _, _, kp, vp, tbl, (ksc, vsc) = _prefill_pool_setup(
+        jax.random.fold_in(KEY, 19), hkv, bs, d, ctx, int8=True)
+    q = jax.random.normal(jax.random.fold_in(KEY, 23), (hq, chunk, d),
+                          jnp.float32)
+    got = ops.paged_prefill_attention(q, kp, vp, tbl, off, ctx,
+                                      k_scales=ksc, v_scales=vsc,
+                                      interpret=True)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, tbl, off, ctx,
+                                           k_scales=ksc, v_scales=vsc)
+    clen = ctx - off
+    assert float(jnp.max(jnp.abs(got[:, :clen] - want[:, :clen]))) < 5e-6
+
+
+def test_paged_prefill_dead_blocks_skipped():
+    """Table entries beyond the context are never read: pointing them at
+    a NaN-poisoned block must not change the output (the kernel's
+    dead-block skip, not masking, is what protects the accumulator)."""
+    import numpy as np
+    hq, hkv, d, bs = 4, 2, 32, 8
+    ctx, off = 12, 8                     # 2 live blocks, chunk rows 8..11
+    _, _, kp, vp, tbl, _ = _prefill_pool_setup(jax.random.fold_in(KEY, 29),
+                                               hkv, bs, d, ctx, spare=2)
+    q = jax.random.normal(jax.random.fold_in(KEY, 31), (hq, bs, d),
+                          jnp.float32)
+    live = -(-ctx // bs)
+    poison = int(max(np.asarray(tbl))) + 1      # a spare, unused block
+    kp = kp.at[:, poison].set(jnp.nan)
+    vp = vp.at[:, poison].set(jnp.nan)
+    tbl_nan = np.asarray(tbl).copy()
+    tbl_nan[live:] = poison
+    got = ops.paged_prefill_attention(q, kp, vp, jnp.asarray(tbl_nan),
+                                      off, ctx, interpret=True)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, tbl, off, ctx)
+    clen = ctx - off
+    assert bool(jnp.isfinite(got[:, :clen]).all())
+    assert float(jnp.max(jnp.abs(got[:, :clen] - want[:, :clen]))) < 5e-6
+
+
+def test_paged_prefill_chunks_match_flash():
+    """A full causal prefill assembled from sequential fixed-size chunks
+    reproduces the dense flash oracle on the contiguous stream."""
+    hq, hkv, d, bs, s, chunk = 4, 2, 32, 8, 21, 8
+    k, v, kp, vp, tbl, _ = _prefill_pool_setup(jax.random.fold_in(KEY, 37),
+                                               hkv, bs, d, s)
+    q = jax.random.normal(jax.random.fold_in(KEY, 41), (hq, s, d),
+                          jnp.float32)
+    outs = []
+    for off in range(0, s, chunk):
+        clen = min(chunk, s - off)
+        qc = jnp.zeros((hq, chunk, d)).at[:, :clen].set(
+            q[:, off:off + clen])
+        o = ops.paged_prefill_attention(qc, kp, vp, tbl, off, off + clen,
+                                        interpret=True)
+        outs.append(o[:, :clen])
+    got = jnp.concatenate(outs, axis=1)
+    want = ref.flash_attention_ref(q[None], k[None], v[None],
+                                   causal=True)[0]
+    assert float(jnp.max(jnp.abs(got - want))) < 5e-6
+
+
 def test_paged_decode_matches_contiguous_attention():
     """Scattering a contiguous K/V stream into shuffled physical blocks
     must not change attention output vs the flash kernel on the same

@@ -1,5 +1,6 @@
-"""Serving tier: paged KV-cache, continuous batching, int8 cache, and the
-incremental-decode consistency contract behind them all."""
+"""Serving tier: paged KV-cache, continuous batching, int8 cache, chunked
+prefill, pod prefix sharing, and the incremental-decode consistency
+contract behind them all."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,10 +10,12 @@ from repro.config import ShapeConfig
 from repro.configs import get_config
 from repro.configs.common import reduced
 from repro.serve import (BlockAllocator, ContinuousScheduler,
-                         PagedCacheSpec, PagedEngine, ServeRequest, drive,
-                         generate_fleet_requests, int8_cache_fidelity,
-                         serve_continuous)
+                         PagedCacheSpec, PagedEngine, PrefillCostModel,
+                         PrefixCache, ServeRequest, drive,
+                         generate_fleet_requests, generate_pod_requests,
+                         int8_cache_fidelity, serve_continuous)
 from repro.serve import kvcache as KC
+from tests._hyp import given, settings, st
 
 KEY = jax.random.PRNGKey(0)
 
@@ -256,6 +259,321 @@ def test_fleet_arrivals_follow_uplink():
     assert nano.arrival_s == pytest.approx(
         len(nano.prompt) * 64 / 0.125e9)
     assert agx.arrival_s == pytest.approx(len(agx.prompt) * 64 / 0.25e9)
+
+
+# ---------------------------------------------- refcounted sharing --------
+def _refcount_walk(alloc, spec, choices):
+    """Mirror a random alloc/share/release walk against a pure-python
+    refcount model; assert pool accounting after every op."""
+    model, held = {}, []
+    for op, salt in choices:
+        if op == 0:
+            n = 1 + salt % spec.max_blocks_per_req
+            got = alloc.alloc(n)
+            can = n <= (spec.num_blocks - 1) - len(model)
+            assert (got is not None) == can
+            for b in got or []:
+                assert model.get(b, 0) == 0    # handed out from free
+                model[b] = 1
+                held.append(b)
+        elif op == 1 and held:
+            picks = [held[(salt + i) % len(held)]
+                     for i in range(1 + salt % 3)]
+            alloc.share(picks)
+            for b in picks:
+                model[b] += 1
+                held.append(b)
+        elif op == 2 and held:
+            k = 1 + salt % min(6, len(held))
+            idx = sorted({(salt + 7 * i) % len(held) for i in range(k)},
+                         reverse=True)
+            picks = [held[i] for i in idx]
+            for i in idx:
+                del held[i]
+            alloc.release(picks)
+            for b in picks:
+                model[b] -= 1
+                if model[b] == 0:
+                    del model[b]
+        assert alloc.free_blocks == (spec.num_blocks - 1) - len(model)
+        for b in set(held):
+            assert alloc.refcount(b) == model[b]
+    # one release too many must raise and mutate nothing
+    if held:
+        b = held[0]
+        extra = [b] * (model[b] + 1)
+        free_before, rc_before = alloc.free_blocks, alloc.refcount(b)
+        with pytest.raises(ValueError):
+            alloc.release(extra)
+        assert alloc.free_blocks == free_before
+        assert alloc.refcount(b) == rc_before
+    free = [b for b in range(1, spec.num_blocks) if b not in model]
+    if free:
+        with pytest.raises(ValueError):
+            alloc.share([free[0]])             # share of a free block
+
+
+def test_allocator_refcount_random_walk():
+    spec = PagedCacheSpec(num_blocks=16, block_size=4, max_blocks_per_req=6)
+    rng = np.random.default_rng(0)
+    choices = [(int(rng.integers(0, 3)), int(rng.integers(0, 1 << 20)))
+               for _ in range(300)]
+    _refcount_walk(BlockAllocator(spec), spec, choices)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 1 << 20)),
+                max_size=60))
+def test_allocator_refcount_property(choices):
+    spec = PagedCacheSpec(num_blocks=10, block_size=2, max_blocks_per_req=4)
+    _refcount_walk(BlockAllocator(spec), spec, choices)
+
+
+def test_prefix_cache_match_insert_evict():
+    spec = PagedCacheSpec(num_blocks=12, block_size=4, max_blocks_per_req=4)
+    alloc = BlockAllocator(spec)
+    pc = PrefixCache(alloc)
+    prompt = np.arange(1, 11, dtype=np.int32)     # 10 tokens, 2 full blocks
+    assert pc.match(prompt) == ([], None, 0)      # cold miss
+    blocks = alloc.alloc(3)
+    pc.insert(prompt, blocks + [0])
+    assert len(pc) == 2 and pc.registered_blocks == 2
+    assert alloc.refcount(blocks[0]) == 2         # request + registry
+    assert alloc.refcount(blocks[2]) == 1         # partial block never cached
+
+    shared, cow, resume = pc.match(prompt)        # 8 of 10 tokens cached
+    assert (shared, cow, resume) == (blocks[:2], None, 8)
+    alloc.release(shared)
+    div = np.concatenate([prompt[:4], prompt[:6][::-1]])
+    shared, cow, resume = pc.match(div)           # diverges after block 0
+    assert (shared, cow, resume) == ([blocks[0]], None, 4)
+    alloc.release(shared)
+    shared, cow, resume = pc.match(prompt[:8])    # whole prompt cached: CoW
+    assert (shared, cow, resume) == ([blocks[0]], blocks[1], 7)
+    alloc.release(shared + [cow])
+    assert (pc.hits, pc.misses, pc.cached_tokens) == (3, 1, 19)
+
+    alloc.release(blocks)                         # the request retires
+    assert alloc.refcount(blocks[2]) == 0
+    assert pc.evict(1) == 1                       # registry-only -> evictable
+    assert pc.evict(10) == 1
+    assert len(pc) == 0 and alloc.in_use == 0
+
+
+# ------------------------------- chunked prefill / stream equivalence -----
+def _trace(cfg, n=4, seed=0, max_prompt=6):
+    return generate_fleet_requests("nano*1,agx*1", num_requests=n,
+                                   max_prompt=max_prompt, seed=seed,
+                                   short_new=(3, 5), long_new=(9, 12),
+                                   long_frac=0.5, vocab_size=cfg.vocab_size)
+
+
+def _assert_streams_greedy_consistent(cfg, params, requests, sequences):
+    """Each stream must be self-consistent under ONE full lm.forward over
+    prompt + generated tokens (exact for greedy by the prefix property)."""
+    from repro.models import lm
+    for r in requests:
+        stream = sequences[r.rid]
+        toks = np.concatenate([r.prompt, np.asarray(stream, np.int32)])
+        logits, _, _ = lm.forward(params, cfg, jnp.asarray(toks)[None],
+                                  positions=jnp.arange(len(toks)))
+        plen = len(r.prompt)
+        for i, tok in enumerate(stream):
+            assert int(jnp.argmax(logits[0, plen - 1 + i])) == tok, \
+                (r.rid, i)
+
+
+def test_chunked_equals_monolithic_and_oracle(dense_setup):
+    cfg, params = dense_setup
+    reqs = _trace(cfg)
+    base = dict(params=params, slots=2, block_size=4, max_context=12,
+                requests=reqs, log_fn=None)
+    mono = serve_continuous(cfg, prefill="monolithic", **base)
+    assert mono["prefills"] > 0 and mono["prefill_chunks"] == 0
+    for chunk in (3, 16):        # uneven chunking and one-shot chunking
+        ch = serve_continuous(cfg, prefill="chunked", prefill_chunk=chunk,
+                              **base)
+        assert ch["sequences"] == mono["sequences"], chunk
+        assert ch["prefills"] == 0 and ch["prefill_chunks"] > 0
+    _assert_streams_greedy_consistent(cfg, params, reqs, mono["sequences"])
+
+
+def test_chunked_int8_fidelity(dense_setup):
+    """The int8 drift contract holds through the chunked prefill path."""
+    cfg, params = dense_setup
+    reqs = _trace(cfg, n=3, seed=2)
+    rep = serve_continuous(cfg, params=params, prefill="chunked",
+                           prefill_chunk=4, requests=reqs, slots=2,
+                           block_size=4, max_context=12, log_fn=None)
+    fid = int8_cache_fidelity(cfg, params, reqs, rep["sequences"],
+                              block_size=4, max_context=12,
+                              prefill="chunked", prefill_chunk=4)
+    assert fid["max_logit_drift"] < 0.15
+    assert fid["disagreement"] <= 0.15
+
+
+def test_prefill_burst_keeps_decode_lanes_live(dense_setup):
+    """8-request burst: at most ONE prefill unit per step in either mode,
+    decode lanes keep emitting while later arrivals are still
+    prefilling, and the two modes agree on every stream."""
+    cfg, params = dense_setup
+    spec = PagedCacheSpec.for_requests(4, 16, block_size=4)
+    eng = PagedEngine(cfg, spec, max_context=8, slots=4)
+
+    def mk():
+        rng = np.random.default_rng(1)
+        return [ServeRequest(rid=i,
+                             prompt=rng.integers(1, cfg.vocab_size,
+                                                 (6,)).astype(np.int32),
+                             max_new_tokens=8) for i in range(8)]
+
+    streams = {}
+    for mode, kw in (("chunked", dict(prefill_chunk=2)), ("monolithic", {})):
+        sched = ContinuousScheduler(eng, params, prefill=mode, **kw)
+        for r in mk():
+            sched.submit(r)
+        overlap, prev_units = 0, 0
+        for step in range(400):
+            emitted = sched.step(float(step))
+            units = sched.prefills_run + sched.prefill_chunks_run
+            assert units - prev_units <= 1, (mode, step)
+            prev_units = units
+            still = any(sched.active[i] is not None
+                        and not sched.prefill_done[i]
+                        for i in range(sched.slots))
+            if emitted > 0 and still:
+                overlap += 1
+            if sched.idle:
+                break
+        assert sched.idle and len(sched.finished) == 8
+        assert overlap > 0, mode           # decode ran during the burst
+        assert sched.allocator.in_use == 0
+        streams[mode] = {r.rid: list(r.tokens) for r in sched.finished}
+    assert streams["chunked"] == streams["monolithic"]
+
+
+def test_chunked_lifts_max_context_submit_limit(dense_setup):
+    """Chunked mode accepts prompts beyond the monolithic prefill bucket
+    (bounded only by table capacity) and still streams correctly."""
+    cfg, params = dense_setup
+    spec = PagedCacheSpec.for_requests(1, 24, block_size=4)
+    eng = PagedEngine(cfg, spec, max_context=8, slots=1)
+    rng = np.random.default_rng(5)
+    long_prompt = rng.integers(1, cfg.vocab_size, (14,)).astype(np.int32)
+
+    mono = ContinuousScheduler(eng, params, prefill="monolithic")
+    with pytest.raises(ValueError):        # 14 > max_context=8
+        mono.submit(ServeRequest(rid=0, prompt=long_prompt,
+                                 max_new_tokens=4))
+    ch = ContinuousScheduler(eng, params, prefill="chunked",
+                             prefill_chunk=8)
+    with pytest.raises(ValueError):        # 22+4 > 24-token table
+        ch.submit(ServeRequest(rid=1,
+                               prompt=rng.integers(
+                                   1, cfg.vocab_size,
+                                   (22,)).astype(np.int32),
+                               max_new_tokens=4))
+    req = ServeRequest(rid=0, prompt=long_prompt, max_new_tokens=4)
+    done = ch.run_to_completion([req])
+    assert len(done) == 1 and len(done[0].tokens) == 4
+    _assert_streams_greedy_consistent(cfg, params, [req],
+                                      {0: list(done[0].tokens)})
+
+
+def test_moe_family_through_scheduler():
+    """MoE configs serve through the chunked continuous scheduler (smoke
+    + determinism only: capacity routing is cross-token, so chunked-vs-
+    monolithic equivalence is pinned to the dense family)."""
+    from repro.models import lm
+    cfg = _smoke_cfg("qwen3_moe_30b_a3b")
+    params = lm.init(KEY, cfg)
+    reqs = _trace(cfg, n=3, seed=1)
+    kw = dict(params=params, prefill="chunked", prefill_chunk=4,
+              requests=reqs, slots=2, block_size=4, max_context=12,
+              log_fn=None)
+    a = serve_continuous(cfg, **kw)
+    b = serve_continuous(cfg, **kw)
+    assert a["requests"] == 3 and a["total_new_tokens"] > 0
+    assert a["sequences"] == b["sequences"]
+
+
+# ----------------------------------------- pod prefix-cache sharing -------
+def test_prefix_sharing_streams_and_block_immutability(dense_setup):
+    """Prefix sharing must not change any stream, and registered template
+    blocks must be bit-identical after other requests mapped them
+    (shared blocks are read-only; the CoW path covers the whole-prompt
+    case)."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(9)
+    template = rng.integers(1, cfg.vocab_size, (8,)).astype(np.int32)
+    sfx = [rng.integers(1, cfg.vocab_size, (2,)).astype(np.int32)
+           for _ in range(2)]
+
+    def mk():
+        return [
+            ServeRequest(rid=0, prompt=np.concatenate([template, sfx[0]]),
+                         max_new_tokens=4),
+            ServeRequest(rid=1, prompt=np.concatenate([template, sfx[1]]),
+                         max_new_tokens=4),
+            ServeRequest(rid=2, prompt=template.copy(),   # CoW: whole
+                         max_new_tokens=4),                # prompt cached
+        ]
+
+    spec = PagedCacheSpec.for_requests(2, 16, block_size=4, headroom=4)
+    eng = PagedEngine(cfg, spec, max_context=12, slots=2)
+
+    base = ContinuousScheduler(eng, params, prefill="chunked",
+                               prefill_chunk=4)
+    want = {r.rid: list(r.tokens)
+            for r in base.run_to_completion(mk())}
+
+    sched = ContinuousScheduler(eng, params, prefill="chunked",
+                                prefill_chunk=4, prefix_cache=True)
+    reqs = mk()
+    first = sched.run_to_completion([reqs[0]])
+    assert sched.prefix.registered_blocks == 2    # template = 2 full blocks
+    reg = sorted(set(sched.prefix._map.values()))
+    snap = np.asarray(sched.pools["k"])[:, :, reg].copy()
+
+    rest = sched.run_to_completion(reqs[1:])
+    got = {r.rid: list(r.tokens) for r in first + rest}
+    assert got == want
+    assert sched.prefix.hits >= 2                 # rid 1 shares, rid 2 CoWs
+    assert sched.prefix.shared_blocks > 0
+    # registered template blocks were mapped, never rewritten
+    assert np.array_equal(snap, np.asarray(sched.pools["k"])[:, :, reg])
+    # after drain only the registry holds blocks
+    assert sched.allocator.in_use == sched.prefix.registered_blocks
+
+
+def test_pod_trace_prefix_report(dense_setup):
+    cfg, params = dense_setup
+    reqs = generate_pod_requests("nano*1,agx*1", num_requests=6, pods=1,
+                                 template_len=8, max_suffix=4, seed=0,
+                                 short_new=(3, 4), long_new=(5, 6),
+                                 long_frac=0.5, vocab_size=cfg.vocab_size)
+    base = dict(params=params, prefill="chunked", prefill_chunk=4,
+                requests=reqs, slots=2, block_size=4, max_context=16,
+                log_fn=None)
+    on = serve_continuous(cfg, prefix_cache=True, **base)
+    off = serve_continuous(cfg, prefix_cache=False, **base)
+    assert on["sequences"] == off["sequences"]
+    assert on["prefix_hits"] > 0 and on["prefix_blocks_saved"] > 0
+    assert 0 < on["prefix_hit_rate"] <= 1
+    assert "prefix_hits" not in off
+    # sharing strictly reduces the prefill work actually issued
+    assert on["prefill_padded_tokens"] < off["prefill_padded_tokens"]
+
+
+def test_ttft_and_queue_wait_in_report(dense_setup):
+    cfg, params = dense_setup
+    rep = serve_continuous(cfg, params=params, requests=_trace(cfg),
+                           slots=2, block_size=4, max_context=12,
+                           prefill_cost=PrefillCostModel(), log_fn=None)
+    assert 0 < rep["p50_ttft_s"] <= rep["p50_latency_s"]
+    assert rep["p99_ttft_s"] >= rep["p50_ttft_s"]
+    assert rep["p99_queue_wait_s"] >= rep["p50_queue_wait_s"] >= 0
+    assert rep["p50_ttft_s"] >= rep["p50_queue_wait_s"]
 
 
 # ----------------------------------------------------- session plumbing ---
