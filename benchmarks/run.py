@@ -36,12 +36,28 @@ os.environ.setdefault("XLA_FLAGS",
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
+#: registered benchmark names, in run order (``--list`` prints these; the
+#: jobs table below is asserted against it so the two cannot drift)
+JOB_NAMES = ("swift_opt", "pipeline_exec", "recovery", "repartition",
+             "attention", "comm", "async", "serving", "prefill",
+             "distill_fl", "fhdp_throughput", "fl_accuracy",
+             "distill_quality", "roofline")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list of benchmark names")
+                    help="comma list of benchmark names (see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered benchmark names and exit")
     args = ap.parse_args()
+
+    if args.list:
+        # no benchmark imports: listing must stay instant
+        for name in JOB_NAMES:
+            print(name)
+        return
 
     from benchmarks import (async_bench, attention_bench, comm_bench,
                             distill_fl_bench, distill_quality,
@@ -75,6 +91,8 @@ def main() -> None:
         ("distill_quality", lambda: distill_quality.run(quick=args.quick)),
         ("roofline", lambda: roofline.run(quick=args.quick)),
     ]
+    assert tuple(n for n, _ in jobs) == JOB_NAMES, \
+        "jobs table drifted from JOB_NAMES (--list would lie)"
     only = set(args.only.split(",")) if args.only else None
     failures = []
     for name, job in jobs:

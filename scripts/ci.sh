@@ -36,6 +36,18 @@ if [[ "${1:-}" != "--fast" ]]; then
   echo "=== smoke: async FL migration example ==="
   python examples/async_fl_migration.py --rounds 3
 
+  echo "=== smoke: traced async round (repro.obs example) ==="
+  python examples/traced_async_round.py --rounds 2 \
+      --out /tmp/ci_traced_async.json
+  python scripts/validate_trace.py /tmp/ci_traced_async.json
+
+  echo "=== smoke: traced async FL via the train launcher ==="
+  python -m repro.launch.train --strategy async_hier_fl --devices 2 \
+      --mesh 2 --topology "2@nano*2,agx*2" --codec int8 \
+      --async-clock 0.3 --compute-jitter 0.2 --steps 2 \
+      --trace /tmp/ci_async_trace.json --metrics /tmp/ci_async_metrics.json
+  python scripts/validate_trace.py /tmp/ci_async_trace.json
+
   echo "=== smoke: serve launcher (Session.serve) ==="
   python -m repro.launch.serve --devices 2 --batch 2 --context 16 \
       --decode-steps 4 --requests 1
@@ -48,6 +60,16 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.serve --devices 2 --scheduler continuous \
       --slots 2 --context 16 --requests 4 --block-size 8 \
       --prefill chunked --prefill-chunk 8 --prefix-cache
+
+  echo "=== smoke: traced continuous serve (repro.obs) ==="
+  python -m repro.launch.serve --devices 2 --scheduler continuous \
+      --slots 2 --context 16 --requests 4 --block-size 8 \
+      --prefill chunked --prefill-chunk 8 --prefix-cache \
+      --trace /tmp/ci_serve_trace.json
+  python scripts/validate_trace.py /tmp/ci_serve_trace.json
+
+  echo "=== smoke: benchmark registry listing ==="
+  python benchmarks/run.py --list
 
   echo "=== smoke: SWIFT live repartition example (dry run) ==="
   python examples/swift_repartition.py --dry-run

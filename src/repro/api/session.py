@@ -200,18 +200,39 @@ class Session:
 
     # ---- drivers ------------------------------------------------------
     def run(self, steps: int, *, state=None, batches=None,
-            hooks=None) -> Dict:
+            hooks=None, trace=None, metrics=None, profile=None) -> Dict:
         """Train for ``steps`` steps (or FL rounds, for ``round``-loop
         strategies) and return the loop output (+ final ``state``).
 
         ``batches``: an iterator of step batches, or for round strategies a
         ``fn(round_idx) -> round_batch``; defaults to synthetic data.
+
+        Observability (:mod:`repro.obs`): ``trace`` — a Tracer or a path —
+        records the event engine's sim-time spans (async strategies only:
+        the sim clock lives there); ``metrics`` — a MetricsRegistry or a
+        path — collects every loop's scalar metrics plus the engine's
+        fabric counters; ``profile`` — a :class:`repro.obs.ProfileOptions`
+        — wraps the loop in a ``jax.profiler`` capture. Paths are written
+        when the loop returns (``out["trace_path"]`` /
+        ``out["metrics_path"]``). All three default off and add zero work
+        when off.
         """
         import dataclasses
 
+        from repro.obs import (MetricsRegistry, profiled, resolve_tracer)
         from repro.train.loop import (LoopHooks, async_fl_loop, fl_loop,
                                       train_loop)
 
+        tracer, trace_path = resolve_tracer(trace)
+        if tracer is not None and self.strategy.loop != "async":
+            raise ValueError(
+                f"trace= needs an async strategy (the event engine owns "
+                f"the simulated clock); {self.strategy.name!r} runs a "
+                f"{self.strategy.loop!r} loop — pass metrics= instead")
+        if isinstance(metrics, str):
+            registry, metrics_path = MetricsRegistry(), metrics
+        else:
+            registry, metrics_path = metrics, None
         step, init_state = self.build(init=state is None)
         if state is not None:
             init_state = state
@@ -231,6 +252,10 @@ class Session:
             # method, so a mid-run repartition is reflected at save time)
             hooks = dataclasses.replace(
                 hooks, checkpoint_meta=self._checkpoint_meta)
+        if tracer is not None and hooks.tracer is None:
+            hooks = dataclasses.replace(hooks, tracer=tracer)
+        if registry is not None and hooks.metrics is None:
+            hooks = dataclasses.replace(hooks, metrics=registry)
         params, opt = init_state
         if self.strategy.loop in ("round", "async", "distill"):
             if batches is None:
@@ -258,8 +283,9 @@ class Session:
                 # per-round teacher and rejoins the state afterwards
                 loop_kw["teacher"] = params["base"]
                 client_like = params["factors"]
-            out = loop(step, client_like, opt, round_fn, rounds=steps,
-                       hooks=hooks, **loop_kw)
+            with profiled(profile):
+                out = loop(step, client_like, opt, round_fn, rounds=steps,
+                           hooks=hooks, **loop_kw)
             if self.strategy.loop == "distill":
                 out["client_params"] = {"base": params["base"],
                                         "factors": out["client_params"]}
@@ -267,18 +293,23 @@ class Session:
         else:
             it = iter(batches) if batches is not None \
                 else self.default_batches()
-            out = train_loop(step, params, opt, it, steps=steps,
-                             hooks=hooks)
+            with profiled(profile):
+                out = train_loop(step, params, opt, it, steps=steps,
+                                 hooks=hooks)
             self.state = (out["params"], out["opt_state"])
         # a live repartition may have swapped the jitted step mid-loop
         self._built = (out.get("step_fn", step), self.state)
         self.history.extend(out["history"])
+        if trace_path is not None:
+            out["trace_path"] = tracer.save(trace_path)
+        if metrics_path is not None:
+            out["metrics_path"] = registry.save(metrics_path)
         return out
 
     def serve(self, *, requests: int = 3, batch: int = 8, context: int = 64,
               decode_steps: int = 16, params=None, scheduler: str = "legacy",
               sampling: str = "greedy", temperature: float = 1.0,
-              pod: Optional[int] = None, log_fn=print,
+              pod: Optional[int] = None, trace=None, log_fn=print,
               **serve_options) -> Dict:
         """Batched prefill+decode serving (paper Fig. 2); uses the trained
         session params when available, else a fresh init.
@@ -293,7 +324,10 @@ class Session:
         ``fleet``, ``prefill``/``prefill_chunk`` for chunked paged
         prefill (the default) vs the monolithic baseline,
         ``prefix_cache`` for pod prefix-block sharing, ...) pass straight
-        to :func:`repro.serve.serve_continuous`.
+        to :func:`repro.serve.serve_continuous`. ``trace`` (a
+        :class:`repro.obs.Tracer` or a path) records the final warm
+        pass's queue/lane spans on the simulated clock — continuous
+        scheduler only; the legacy driver has no sim clock.
 
         ``pod``: serve edge pod ``pod``'s **personalized** model — the
         strategy's ``pod_params`` view (``distill_fl``: base weights with
@@ -321,7 +355,12 @@ class Session:
                                     num_requests=requests,
                                     sampling=sampling,
                                     temperature=temperature,
+                                    trace=trace,
                                     log_fn=log_fn, **serve_options)
+        if trace is not None:
+            raise ValueError(
+                "trace= needs scheduler='continuous' (the legacy static "
+                "driver has no simulated clock to put spans on)")
         if scheduler != "legacy":
             raise ValueError(f"unknown scheduler {scheduler!r} "
                              "(legacy|continuous)")

@@ -340,7 +340,8 @@ class AsyncHierFLEngine:
                  mobility: Optional[MobilitySpec] = None,
                  migrate_every: Optional[float] = None,
                  seed: int = 0,
-                 key_fn: Optional[Callable] = None):
+                 key_fn: Optional[Callable] = None,
+                 tracer=None, metrics=None):
         if clock is not None and clock <= 0:
             raise ValueError(f"clock must be positive or None, got {clock}")
         if not 0.0 < decay <= 1.0:
@@ -367,6 +368,14 @@ class AsyncHierFLEngine:
         self.key_fn = key_fn
         self.topo = topology
         self.version = 0
+        #: optional :class:`repro.obs.Tracer` — sim-time spans on one
+        #: track per vehicle/edge/cloud. None (the default) means no
+        #: callbacks fire at all: event log, params, and metrics are
+        #: bitwise those of an untraced run (tests/test_obs.py).
+        self.tracer = tracer
+        #: optional :class:`repro.obs.MetricsRegistry` the engine
+        #: publishes wire bytes / observed staleness / migrations into
+        self.metrics = metrics
 
     # ---- lifecycle -----------------------------------------------------
     def reset(self, client_params=None, client_opt=None,
@@ -400,6 +409,10 @@ class AsyncHierFLEngine:
         self._batches_fn = round_batches_fn
         self.mobility = (FleetMobility(self.mobility_spec, self.topo0)
                          if self.mobility_spec is not None else None)
+        self._uplink_t0 = np.zeros(C, np.float64)   # LocalStepDone times
+        self._uplink_t1 = np.zeros(C, np.float64)   # UplinkArrived times
+        if self.tracer is not None:
+            self._declare_tracks()
         if self.program is not None:
             import jax
 
@@ -422,6 +435,18 @@ class AsyncHierFLEngine:
             self.queue.push(CloudDeadline(self.clock, 1))
         if self.mobility is not None and self.migrate_every is not None:
             self.queue.push(MobilityTick(self.migrate_every, 1))
+
+    # ---- tracing (repro.obs) -------------------------------------------
+    def _declare_tracks(self) -> None:
+        from repro.obs import trace as T
+        tr = self.tracer
+        tr.process(T.FL_PID, "fl-fabric", sort_index=1)
+        tr.track(T.FL_PID, T.CLOUD_TID, "cloud")
+        for e in range(self.topo0.n_edges):
+            tr.track(T.FL_PID, T.edge_tid(e), f"edge {e}")
+        for i, v in enumerate(self.topo0.vehicles):
+            tr.track(T.FL_PID, T.vehicle_tid(i),
+                     f"vehicle {i} (vid {v.vid})")
 
     # ---- event dispatch ------------------------------------------------
     def handle(self, ev) -> Optional[Dict]:
@@ -512,6 +537,16 @@ class AsyncHierFLEngine:
         if i in self._wave_open:
             self._run_wave()
         self.state[i] = "uplink"
+        self._uplink_t0[i] = ev.t
+        if self.tracer is not None:
+            from repro.obs import trace as T
+            from repro.obs.profile import kernel_cost_args
+            self.tracer.complete(
+                "compute", float(self.base_time[i]), ev.t,
+                pid=T.FL_PID, tid=T.vehicle_tid(i), cat="compute",
+                args=dict(kernel_cost_args(flops=self.compute.flops),
+                          vehicle=i,
+                          base_version=int(self.base_version[i])))
         dt = t_uplink(self.bytes_per_client, self.topo.vehicles[i])
         self.queue.push(UplinkArrived(ev.t + dt, i, self.bytes_per_client))
         return None
@@ -527,6 +562,17 @@ class AsyncHierFLEngine:
             # current partial first so one commit never carries the same
             # member twice (which would double its aggregation weight)
             self._commit(e, ev.t)
+        self._uplink_t1[i] = ev.t
+        if self.tracer is not None:
+            from repro.obs import trace as T
+            self.tracer.complete(
+                "uplink", float(self._uplink_t0[i]), ev.t,
+                pid=T.FL_PID, tid=T.vehicle_tid(i), cat="comm",
+                args={"vehicle": i, "edge": e, "nbytes": ev.nbytes})
+        if self.metrics is not None:
+            self.metrics.counter(
+                "fl_uplink_bytes",
+                "coded V2X uplink bytes per edge pod").inc(ev.nbytes, edge=e)
         self.edge_buffers[e].append(_Buffered(
             i, self._delta[i], float(self.client_w[i]),
             int(self.base_version[i]), float(self.base_time[i])))
@@ -578,6 +624,15 @@ class AsyncHierFLEngine:
             partial, weight, tuple(b.vehicle for b in entries),
             min(b.base_version for b in entries),
             min(b.base_time for b in entries), nbytes, e, t)
+        if self.tracer is not None:
+            from repro.obs import trace as T
+            for b in entries:
+                # arrow from each member's uplink-span end into the
+                # backhaul span that starts at the commit time
+                self.tracer.flow(
+                    "uplink->commit", float(self._uplink_t1[b.vehicle]),
+                    T.FL_PID, T.vehicle_tid(b.vehicle),
+                    t, T.FL_PID, T.edge_tid(e))
         dt = nbytes / self.topo.backhaul_bw + self.topo.backhaul_latency
         self.queue.push(BackhaulArrived(t + dt, e, cid))
 
@@ -586,6 +641,19 @@ class AsyncHierFLEngine:
         c = self.commits[ev.commit_id]
         c.t_arrive = ev.t
         self.bytes_backhaul += c.nbytes
+        if self.tracer is not None:
+            from repro.obs import trace as T
+            self.tracer.complete(
+                "backhaul", float(c.t_commit), ev.t,
+                pid=T.FL_PID, tid=T.edge_tid(c.edge), cat="comm",
+                args={"edge": c.edge, "commit": ev.commit_id,
+                      "nbytes": c.nbytes, "n_vehicles": len(c.vehicles),
+                      "base_version": int(c.base_version)})
+        if self.metrics is not None:
+            self.metrics.counter(
+                "fl_backhaul_bytes",
+                "partial-aggregate backhaul bytes per edge pod").inc(
+                    c.nbytes, edge=c.edge)
         self.cloud_buffer.append(ev.commit_id)
         if self.clock is None:
             covered = sum(len(self.commits[i].vehicles)
@@ -596,6 +664,12 @@ class AsyncHierFLEngine:
 
     def _on_deadline(self, ev: CloudDeadline) -> Optional[Dict]:
         self.queue.push(CloudDeadline(ev.t + self.clock, ev.index + 1))
+        if self.tracer is not None:
+            from repro.obs import trace as T
+            self.tracer.instant(
+                "cloud_deadline", ev.t, pid=T.FL_PID, tid=T.CLOUD_TID,
+                cat="clock", args={"index": ev.index,
+                                   "pending": len(self.cloud_buffer)})
         if self.cloud_buffer:
             return self._merge(ev.t)
         self._broadcast(range(self.C), ev.t)    # restart idle vehicles
@@ -639,6 +713,30 @@ class AsyncHierFLEngine:
         }
         self._bytes_up_mark = self.bytes_up
         self._bytes_backhaul_mark = self.bytes_backhaul
+        if self.tracer is not None:
+            from repro.obs import trace as T
+            self.tracer.complete(
+                "merge", t, t, pid=T.FL_PID, tid=T.CLOUD_TID, cat="merge",
+                args={"version": self.version, "n_commits": len(commits),
+                      "n_vehicles": covered,
+                      "staleness_mean": float(stale.mean()),
+                      "lag_max": float(lags.max())})
+            for c in commits:
+                # arrow from each backhaul-span end into the merge mark
+                self.tracer.flow("commit->merge", float(c.t_arrive),
+                                 T.FL_PID, T.edge_tid(c.edge),
+                                 t, T.FL_PID, T.CLOUD_TID)
+            self.tracer.counter(
+                "wire bytes", t,
+                {"uplink": self.bytes_up, "backhaul": self.bytes_backhaul},
+                pid=T.FL_PID)
+        if self.metrics is not None:
+            self.metrics.counter("fl_merges", "cloud merges").inc()
+            h = self.metrics.histogram(
+                "fl_observed_staleness_s",
+                "commit arrival lag behind its base broadcast (sim s)")
+            for c in commits:
+                h.observe(float(c.t_arrive - c.base_time))
         for k, v in self.last_metrics.items():
             metrics[k] = v.copy()
         self._broadcast(range(self.C), t)
@@ -664,6 +762,14 @@ class AsyncHierFLEngine:
             return None                 # a same-tick migration got there first
         self.topo = self.topo.reassign(i, ev.dst)
         self.n_migrations += 1
+        if self.tracer is not None:
+            from repro.obs import trace as T
+            self.tracer.instant(
+                "pod_migration", ev.t, pid=T.FL_PID, tid=T.vehicle_tid(i),
+                cat="mobility", args={"src": ev.src, "dst": ev.dst})
+        if self.metrics is not None:
+            self.metrics.counter(
+                "fl_migrations", "completed pod migrations").inc()
         # membership changed: either pod may now be complete
         self._edge_check(ev.src, ev.t)
         self._edge_check(ev.dst, ev.t)
@@ -679,7 +785,8 @@ def simulate_schedule(topology: Topology, *, bytes_per_client: int = 2 ** 21,
                       migrate_every: Optional[float] = None,
                       mobility: Optional[MobilitySpec] = None,
                       rounds: int = 10, seed: int = 0,
-                      max_events: int = 1_000_000) -> Dict:
+                      max_events: int = 1_000_000,
+                      tracer=None, metrics=None) -> Dict:
     """Run the event schedule with no tensors — merge cadence, observed
     staleness, and migration counts for a topology + clock, in
     microseconds of host time. Backs ``launch/dryrun.py --async-clock``."""
@@ -689,7 +796,8 @@ def simulate_schedule(topology: Topology, *, bytes_per_client: int = 2 ** 21,
         topology, bytes_per_client, lambda m: bytes_per_client,
         compute=ComputeModel(flops=compute_flops, jitter=jitter),
         clock=clock, decay=decay, mobility=mobility,
-        migrate_every=migrate_every, seed=seed)
+        migrate_every=migrate_every, seed=seed,
+        tracer=tracer, metrics=metrics)
     engine.reset()
     merges: List[Dict] = []
     for _ in range(max_events):

@@ -167,18 +167,26 @@ def main():
                          "compute slowdown fraction")
     ap.add_argument("--topology", default="2@nano*2,agx*2",
                     help="async schedule dry-run topology spec")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with --async-clock: write a Perfetto-loadable "
+                         "sim-time trace of the dry-run schedule to PATH")
     args = ap.parse_args()
 
+    if args.trace is not None and args.async_clock is None:
+        raise SystemExit("--trace requires --async-clock (the timing-only "
+                         "schedule is what gets traced)")
     if args.async_clock is not None:
         # timing-only event-schedule exploration: no params, no lowering —
         # the event engine runs with program=None
         from repro.comm.events import simulate_schedule
         from repro.comm.topology import parse_topology
+        from repro.obs import resolve_tracer
+        tracer, trace_path = resolve_tracer(args.trace)
         topo = parse_topology(args.topology)
         stats = simulate_schedule(
             topo, clock=args.async_clock or None,
             jitter=args.compute_jitter,
-            migrate_every=args.migrate_every)
+            migrate_every=args.migrate_every, tracer=tracer)
         print(f"[dryrun] async schedule {args.topology}: "
               f"{len(stats['merges'])} merges in "
               f"{stats['sim_time_s']:.3f}s simulated "
@@ -186,6 +194,10 @@ def main():
               f"{stats['mean_staleness']:.3f}, "
               f"{stats['n_migrations']} migrations, "
               f"{stats['events']} events)")
+        if trace_path is not None:
+            tracer.save(trace_path)
+            print(f"[dryrun] trace written to {trace_path} "
+                  f"(load at https://ui.perfetto.dev)")
         if not (args.arch or args.all):
             return
 

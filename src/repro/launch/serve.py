@@ -47,6 +47,9 @@ def main():
     ap.add_argument("--fleet", default="nano*2,agx*2",
                     help="vehicle fleet spec for the load generator "
                          "(continuous)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable sim-time trace of "
+                         "the final warm pass to PATH (continuous)")
     ap.add_argument("--sampling", choices=("greedy", "temperature"),
                     default="greedy")
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -66,12 +69,18 @@ def main():
         kw = dict(block_size=args.block_size, cache=args.cache,
                   fleet=args.fleet, prefill=args.prefill,
                   prefill_chunk=args.prefill_chunk,
-                  prefix_cache=args.prefix_cache)
-    session.serve(requests=args.requests,
-                  batch=args.slots or args.batch,
-                  context=args.context, decode_steps=args.decode_steps,
-                  scheduler=args.scheduler, sampling=args.sampling,
-                  temperature=args.temperature, **kw)
+                  prefix_cache=args.prefix_cache, trace=args.trace)
+    elif args.trace:
+        raise SystemExit("--trace requires --scheduler continuous")
+    report = session.serve(requests=args.requests,
+                           batch=args.slots or args.batch,
+                           context=args.context,
+                           decode_steps=args.decode_steps,
+                           scheduler=args.scheduler, sampling=args.sampling,
+                           temperature=args.temperature, **kw)
+    if args.trace:
+        print(f"[serve] trace written to {report['trace_path']} "
+              f"(load at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

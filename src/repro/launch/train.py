@@ -73,6 +73,12 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="use the full published config (TPU scale)")
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="async_hier_fl: write a Perfetto-loadable "
+                         "sim-time trace (repro.obs) to PATH")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write a repro.obs metrics-registry snapshot "
+                         "(JSON) to PATH")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -121,9 +127,14 @@ def main():
         session.hooks = dataclasses.replace(
             session.hooks,
             repartition=Repartitioner(session, {int(step_s): int(vid_s)}))
-    out = session.run(args.steps)
+    out = session.run(args.steps, trace=args.trace, metrics=args.metrics)
     last = out["history"][-1]
     print(f"[train] done: {last}")
+    if args.trace:
+        print(f"[train] trace written to {out['trace_path']} "
+              f"(load at https://ui.perfetto.dev)")
+    if args.metrics:
+        print(f"[train] metrics snapshot written to {out['metrics_path']}")
 
 
 if __name__ == "__main__":

@@ -120,7 +120,7 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
                      short_new: tuple = (4, 8), long_new: tuple = (32, 48),
                      long_frac: float = 0.2, warm_passes: int = 1,
                      requests=None, dt_step: float = 0.01,
-                     prefill_cost=None,
+                     prefill_cost=None, trace=None,
                      log_fn: Optional[Callable] = print) -> Dict:
     """Serve a fleet request trace through the paged engine.
 
@@ -137,6 +137,9 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
     re-instantiated per pass) to serve a custom trace, e.g. from
     :func:`generate_pod_requests`, instead of the built-in fleet trace;
     ``dt_step``/``prefill_cost`` feed the loadgen's simulated clock.
+    ``trace`` (a :class:`repro.obs.Tracer` or a path) records the FINAL
+    warm pass — one clean steady-state pass, not the jit-noisy cold one —
+    as sim-time queue/lane spans; a path is saved before returning.
     Returns the loadgen report plus both throughputs and the per-request
     token streams (greedy streams are deterministic — the equivalence
     tests compare them across policies, prefill modes and cache modes).
@@ -146,6 +149,9 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
     import copy
 
     from repro.models import lm
+    from repro.obs import resolve_tracer
+
+    tracer, trace_path = resolve_tracer(trace)
 
     if params is None:
         params = lm.init(jax.random.PRNGKey(seed), cfg)
@@ -170,13 +176,14 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
             long_new=long_new, long_frac=long_frac,
             vocab_size=cfg.vocab_size)
 
-    def fresh_scheduler():
+    def fresh_scheduler(tracer=None):
         return ContinuousScheduler(engine, params, policy=policy,
                                    prefill=prefill,
                                    prefill_chunk=prefill_chunk,
                                    prefix_cache=prefix_cache,
                                    sampling=sampling,
-                                   temperature=temperature, seed=seed)
+                                   temperature=temperature, seed=seed,
+                                   tracer=tracer)
 
     t0 = time.time()
     sched = fresh_scheduler()
@@ -185,13 +192,16 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
     cold_s = time.time() - t0
     cold_toks = sched.total_new_tokens
 
+    n_warm = max(1, warm_passes)
     warm_s = float("inf")
-    for _ in range(max(1, warm_passes)):
+    for p in range(n_warm):
         t0 = time.time()
-        sched = fresh_scheduler()
+        sched = fresh_scheduler(tracer if p == n_warm - 1 else None)
         report = drive(sched, fresh_requests(), dt_step=dt_step,
                        prefill_cost=prefill_cost)
         warm_s = min(warm_s, time.time() - t0)
+    if trace_path is not None:
+        tracer.save(trace_path)
 
     report.update({
         "policy": policy,
@@ -206,6 +216,8 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
         / max(warm_s, 1e-9),
         "sequences": {r.rid: list(r.tokens) for r in sched.finished},
     })
+    if trace_path is not None:
+        report["trace_path"] = trace_path
     if log_fn:
         log_fn(f"[serve:{policy}/{cache}] {report['requests']} requests, "
                f"{report['total_new_tokens']} tokens in "

@@ -206,6 +206,8 @@ def drive(scheduler: ContinuousScheduler,
                 r.t_first_token = t_end
             if r.t_done == t:
                 r.t_done = t_end
+        # deferred spans read the (now final) restamped timestamps
+        scheduler.flush_trace(t_end, cost_model=prefill_cost)
         t = t_end
         steps += 1
         if steps > max_steps:
@@ -235,6 +237,10 @@ def drive(scheduler: ContinuousScheduler,
         "deadline_hit_rate": (sum(r.met_deadline for r in done)
                               / max(1, len(done))),
     }
+    pool = scheduler.metrics.gauge("serve_pool_blocks_in_use").stats()
+    if pool is not None:
+        report["pool_blocks_mean"] = pool["mean"]
+        report["pool_blocks_peak"] = pool["peak"]
     if scheduler.prefix is not None:
         pc = scheduler.prefix
         report.update({

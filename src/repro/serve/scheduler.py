@@ -76,11 +76,19 @@ class ServeRequest:
     max_new_tokens: int
     arrival_s: float = 0.0
     deadline_s: float = math.inf
+    #: stable id echoed in every span this request produces in a trace
+    #: (defaults to ``rid``; callers multiplexing several traces can set
+    #: their own correlation id)
+    trace_id: Optional[int] = None
     # filled by the scheduler:
     tokens: List[int] = dataclasses.field(default_factory=list)
     t_admit: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+
+    def __post_init__(self):
+        if self.trace_id is None:
+            self.trace_id = self.rid
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -116,7 +124,7 @@ class ContinuousScheduler:
                  prefix_cache: bool = False,
                  max_inflight_blocks: Optional[int] = None,
                  sampling: str = "greedy", temperature: float = 1.0,
-                 seed: int = 0):
+                 seed: int = 0, tracer=None, metrics=None):
         if policy not in _POLICIES:
             raise ValueError(f"unknown policy {policy!r} ({_POLICIES})")
         if prefill not in _PREFILL_MODES:
@@ -170,6 +178,27 @@ class ContinuousScheduler:
         # once it knows the step's compute cost, so a prefill's own cost
         # lands in the TTFT of the request that incurred it
         self.step_events: List[ServeRequest] = []
+        #: optional :class:`repro.obs.Tracer`: queue/lane spans on the
+        #: sim clock. Spans whose end time is the step's END (known only
+        #: after the driver prices the step) are deferred as callables
+        #: and emitted by :meth:`flush_trace` — mirroring the
+        #: ``step_events`` restamping contract above. None -> no
+        #: callbacks, bit-identical streams (tests/test_obs.py).
+        self.tracer = tracer
+        if self.tracer is not None:
+            from repro.obs import trace as T
+            self.tracer.process(T.SERVE_PID, "serving", sort_index=2)
+            self.tracer.track(T.SERVE_PID, T.QUEUE_TID, "queue")
+            for s in range(self.slots):
+                self.tracer.track(T.SERVE_PID, T.lane_tid(s), f"lane {s}")
+        self._pending_trace: List = []
+        # always-on registry (host-side dict updates only): the bench
+        # report reads pool-occupancy stats from it even when no external
+        # registry is supplied
+        if metrics is None:
+            from repro.obs.metrics import MetricsRegistry
+            metrics = MetricsRegistry()
+        self.metrics = metrics
 
     # ---- bookkeeping --------------------------------------------------
     @property
@@ -203,6 +232,19 @@ class ContinuousScheduler:
         req = self.active[slot]
         req.t_done = t
         self.step_events.append(req)
+        if self.tracer is not None:
+            def emit(t_end, cost_model, *, req=req, slot=slot):
+                from repro.obs import trace as T
+                t0 = (req.t_first_token if req.t_first_token is not None
+                      else req.t_done)
+                self.tracer.complete(
+                    "decode", t0, req.t_done, pid=T.SERVE_PID,
+                    tid=T.lane_tid(slot), cat="decode",
+                    args={"trace_id": req.trace_id, "rid": req.rid,
+                          "new_tokens": len(req.tokens),
+                          "latency_s": req.latency_s,
+                          "met_deadline": req.met_deadline})
+            self._pending_trace.append(emit)
         self.finished.append(req)
         self.allocator.release(self.blocks[slot])
         self.active[slot] = None
@@ -263,6 +305,16 @@ class ContinuousScheduler:
                 self.pools = self.engine.copy_block(self.pools, cow_src, dst)
                 self.allocator.release([cow_src])
             req.t_admit = t
+            if self.tracer is not None:
+                from repro.obs import trace as T
+                self.tracer.complete(
+                    "queued", req.arrival_s, t, pid=T.SERVE_PID,
+                    tid=T.QUEUE_TID, cat="queue",
+                    args={"trace_id": req.trace_id, "rid": req.rid,
+                          "slot": slot, "prompt_tokens": len(req.prompt),
+                          "shared_blocks": len(shared),
+                          "resume_tokens": resume,
+                          "cow": cow_src is not None})
             self.active[slot] = req
             self.blocks[slot] = shared + fresh
             self.tables[slot] = 0
@@ -280,6 +332,15 @@ class ContinuousScheduler:
         req.tokens.append(first)
         req.t_first_token = t
         self.step_events.append(req)
+        if self.tracer is not None:
+            def emit(t_end, cost_model, *, req=req, slot=slot):
+                from repro.obs import trace as T
+                self.tracer.instant(
+                    "first_token", req.t_first_token, pid=T.SERVE_PID,
+                    tid=T.lane_tid(slot), cat="ttft",
+                    args={"trace_id": req.trace_id, "rid": req.rid,
+                          "ttft_s": req.ttft_s})
+            self._pending_trace.append(emit)
         self.total_new_tokens += 1
         self.ctx[slot] = len(req.prompt)
         self.pending_tok[slot] = first
@@ -309,8 +370,13 @@ class ContinuousScheduler:
                 self.pools, k, v, jnp.asarray(self.tables[slot]))
             self.prefills_run += 1
             self.prefill_pos[slot] = plen
-            self.last_stats["prefill_padded_tokens"] = self.engine.max_context
-            self.last_stats["prefill_attn_mac"] = self.engine.max_context ** 2
+            mc = self.engine.max_context
+            self.last_stats["prefill_padded_tokens"] = mc
+            self.last_stats["prefill_attn_mac"] = mc ** 2
+            self.last_stats["prefill_wasted_tokens"] = mc - plen
+            if self.tracer is not None:
+                self._pending_prefill_span(
+                    "prefill", t, slot, req, 0, plen, mc, mc ** 2)
             self._prefill_queue.popleft()
             self._finish_prefill(slot, logits, t)
             return
@@ -326,9 +392,42 @@ class ContinuousScheduler:
         self.prefill_pos[slot] = pos + clen
         self.last_stats["prefill_padded_tokens"] = c
         self.last_stats["prefill_attn_mac"] = c * (pos + clen)
+        self.last_stats["prefill_wasted_tokens"] = c - clen
+        if self.tracer is not None:
+            self._pending_prefill_span("prefill_chunk", t, slot, req,
+                                       pos, pos + clen, c, c * (pos + clen))
         if pos + clen == plen:
             self._prefill_queue.popleft()
             self._finish_prefill(slot, logits, t)
+
+    # ---- tracing (repro.obs) ------------------------------------------
+    def _pending_prefill_span(self, name: str, t0: float, slot: int, req,
+                              tok0: int, tok1: int, padded: int,
+                              mac: int) -> None:
+        """Defer a prefill span until the driver knows the step's end."""
+        def emit(t_end, cost_model, *, name=name, t0=t0, slot=slot,
+                 req=req, tok0=tok0, tok1=tok1, padded=padded, mac=mac):
+            from repro.obs import trace as T
+            from repro.obs.profile import kernel_cost_args
+            self.tracer.complete(
+                name, t0, t_end, pid=T.SERVE_PID, tid=T.lane_tid(slot),
+                cat="prefill",
+                args=dict(kernel_cost_args(padded_tokens=padded,
+                                           attn_mac=mac,
+                                           cost_model=cost_model),
+                          trace_id=req.trace_id, rid=req.rid,
+                          tokens=[tok0, tok1]))
+        self._pending_trace.append(emit)
+
+    def flush_trace(self, t_end: float, cost_model=None) -> None:
+        """Emit the step's deferred spans now that its sim-time end (and
+        optionally the :class:`repro.serve.loadgen.PrefillCostModel` that
+        priced it) is known. Drivers call this AFTER restamping
+        ``step_events``, so request timestamps inside spans are final."""
+        if self._pending_trace:
+            for fn in self._pending_trace:
+                fn(t_end, cost_model)
+            self._pending_trace = []
 
     # ---- one step -----------------------------------------------------
     def step(self, t: float = 0.0) -> int:
@@ -336,13 +435,15 @@ class ContinuousScheduler:
         decode step across every prefill-complete lane. Returns the
         number of decode tokens emitted this step (``self.last_stats``
         carries the step's prefill cost breakdown for the sim clock)."""
-        self.last_stats = {"prefill_padded_tokens": 0, "prefill_attn_mac": 0}
+        self.last_stats = {"prefill_padded_tokens": 0, "prefill_attn_mac": 0,
+                           "prefill_wasted_tokens": 0}
         self.step_events = []
         self._admit(t)
         self._run_prefill(t)
         ready = np.array([self.active[i] is not None and self.prefill_done[i]
                           for i in range(self.slots)])
         if not ready.any():
+            self._sample_metrics(t, 0)
             return 0
         # Lanes still prefilling are masked to the dead-lane contract so
         # the fused decode never writes into their (possibly shared)
@@ -366,7 +467,41 @@ class ContinuousScheduler:
             emitted += 1
             if len(req.tokens) >= req.max_new_tokens:
                 self._retire(slot, t)
+        self._sample_metrics(t, emitted)
         return emitted
+
+    def _sample_metrics(self, t: float, emitted: int) -> None:
+        """Per-step registry samples (host dicts only): pool occupancy +
+        its high-watermark, prefill waste, decode tokens, prefix hits."""
+        m = self.metrics
+        m.gauge("serve_pool_blocks_in_use",
+                "KV block-pool occupancy per step (peak = watermark)"
+                ).set(self.allocator.in_use)
+        m.gauge("serve_pool_blocks_free",
+                "free KV blocks per step").set(self.allocator.free_blocks)
+        pad = self.last_stats.get("prefill_padded_tokens", 0)
+        waste = self.last_stats.get("prefill_wasted_tokens", 0)
+        if pad:
+            m.counter("serve_prefill_padded_tokens",
+                      "padded prompt tokens pushed through prefill"
+                      ).inc(pad)
+        if waste:
+            m.counter("serve_prefill_wasted_tokens",
+                      "padding beyond real prompt tokens").inc(waste)
+        if emitted:
+            m.counter("serve_decode_tokens", "decode tokens emitted"
+                      ).inc(emitted)
+        if self.prefix is not None:
+            m.gauge("serve_prefix_hits", "prefix-cache hits (cumulative)"
+                    ).set(self.prefix.hits)
+            m.gauge("serve_prefix_misses",
+                    "prefix-cache misses (cumulative)"
+                    ).set(self.prefix.misses)
+        if self.tracer is not None:
+            from repro.obs import trace as T
+            self.tracer.counter("kv blocks", t,
+                                {"in_use": self.allocator.in_use},
+                                pid=T.SERVE_PID)
 
     def run_to_completion(self, requests: Sequence[ServeRequest],
                           max_steps: int = 100_000) -> List[ServeRequest]:
@@ -377,6 +512,8 @@ class ContinuousScheduler:
         steps = 0
         while not self.idle:
             self.step(float(steps))
+            # no cost model here: the step's end is the next integer tick
+            self.flush_trace(float(steps) + 1.0)
             steps += 1
             if steps > max_steps:
                 raise RuntimeError("scheduler failed to drain")

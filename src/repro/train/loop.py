@@ -92,6 +92,14 @@ class LoopHooks:
     #: (idx, step_fn, params, opt) -> None to keep going, or a replacement
     #: (step_fn, params, opt) after a template switch
     repartition: Optional[Callable] = None
+    #: optional :class:`repro.obs.Tracer` — ``async_fl_loop`` hands it to
+    #: the event engine (sim-time spans per vehicle/edge/cloud track);
+    #: the wall-clock loops have no sim timeline and ignore it
+    tracer: Optional[object] = None
+    #: optional :class:`repro.obs.MetricsRegistry` — every logged round's
+    #: scalar metrics are published into it (``comm_bytes*`` as counters,
+    #: the rest as gauges); ``async_fl_loop`` also hands it to the engine
+    metrics: Optional[object] = None
 
     def after_step(self, i: int, params, metrics=None) -> None:
         if self.backup is not None:
@@ -131,7 +139,10 @@ def train_loop(step_fn: Callable, params, opt_state,
         hooks.after_step(i, params, metrics)
         if hooks.should_log(i):
             m, per_client = _split_metrics(metrics)
-            hist.append(dict(m, **per_client, step=i + 1))
+            if hooks.metrics is not None:
+                hooks.metrics.publish_scalars(m)
+            hist.append(dict(m, **per_client, step=i + 1,
+                             t_wall_s=time.time() - t0))
             rate = (i + 1) / (time.time() - t0)
             hooks.log_fn(f"[train] step {i+1:5d} "
                          + _fmt_metrics(m, per_client)
@@ -158,6 +169,7 @@ def fl_loop(fl_round: Callable, client_params, client_opt,
     hooks = hooks or LoopHooks(log_every=1)
     extra = () if teacher is None else (teacher,)
     hist = []
+    t0 = time.time()
     for r in range(rounds):
         batches = round_batches_fn(r)
         client_params, client_opt, metrics = fl_round(client_params,
@@ -168,7 +180,10 @@ def fl_loop(fl_round: Callable, client_params, client_opt,
             hooks.on_round(r, metrics)
         if hooks.should_log(r):
             m, per_client = _split_metrics(metrics)
-            hist.append(dict(m, **per_client, round=r + 1))
+            if hooks.metrics is not None:
+                hooks.metrics.publish_scalars(m)
+            hist.append(dict(m, **per_client, round=r + 1,
+                             t_wall_s=time.time() - t0))
             hooks.log_fn(f"[fl] round {r+1:4d} "
                          + _fmt_metrics(m, per_client))
         fl_round, client_params, client_opt = hooks.maybe_repartition(
@@ -198,9 +213,16 @@ def async_fl_loop(engine, client_params, client_opt,
     event, ``hooks.on_round`` every merge.
     """
     hooks = hooks or LoopHooks(log_every=1)
+    # observability rides in on the hooks: the engine owns the sim clock,
+    # so it (not this loop) emits the spans and fabric metrics
+    if hooks.tracer is not None and getattr(engine, "tracer", None) is None:
+        engine.tracer = hooks.tracer
+    if hooks.metrics is not None and getattr(engine, "metrics", None) is None:
+        engine.metrics = hooks.metrics
     engine.reset(client_params, client_opt, round_batches_fn)
     hist = []
     merges = 0
+    t0 = time.time()
     for _ in range(max_events):
         if merges >= rounds:
             break
@@ -223,7 +245,11 @@ def async_fl_loop(engine, client_params, client_opt,
             hooks.on_round(merges, rec)
         if hooks.should_log(merges):
             m, per_client = _split_metrics(rec)
-            hist.append(dict(m, **per_client, round=merges + 1))
+            if hooks.metrics is not None:
+                hooks.metrics.publish_scalars(m)
+            hist.append(dict(m, **per_client, round=merges + 1,
+                             t_wall_s=time.time() - t0,
+                             t_sim_s=float(engine.now)))
             hooks.log_fn(f"[async-fl] merge {merges+1:4d} "
                          f"t={engine.now:9.3f}s "
                          + _fmt_metrics(m, per_client))
