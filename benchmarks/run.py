@@ -16,6 +16,8 @@
          (TTFT, pod block sharing)         (writes BENCH_prefill.json)
   §3.2 personalized distillation        -> distill_fl_bench
         (adapter uplinks, per-pod wins)    (writes BENCH_distill.json)
+  Fig. 2 speculative decoding           -> specdec_bench
+        (pod-student drafts, acceptance)   (writes BENCH_specdec.json)
   Fig. 6(a,b) pipeline execution time   -> pipeline_exec
   Fig. 7(a,b) + Table 2 FHDP            -> fhdp_throughput
   Fig. 8(a) FL accuracy                 -> fl_accuracy
@@ -40,7 +42,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 #: jobs table below is asserted against it so the two cannot drift)
 JOB_NAMES = ("swift_opt", "pipeline_exec", "recovery", "repartition",
              "attention", "comm", "async", "serving", "prefill",
-             "distill_fl", "fhdp_throughput", "fl_accuracy",
+             "distill_fl", "specdec", "fhdp_throughput", "fl_accuracy",
              "distill_quality", "roofline")
 
 
@@ -64,7 +66,7 @@ def main() -> None:
                             fhdp_throughput, fl_accuracy, pipeline_exec,
                             prefill_bench, recovery_bench,
                             repartition_latency, roofline, serving_bench,
-                            swift_opt)
+                            specdec_bench, swift_opt)
 
     agent_holder = {}
 
@@ -86,6 +88,7 @@ def main() -> None:
         ("serving", lambda: serving_bench.run(quick=args.quick)),
         ("prefill", lambda: prefill_bench.run(quick=args.quick)),
         ("distill_fl", lambda: distill_fl_bench.run(quick=args.quick)),
+        ("specdec", lambda: specdec_bench.run(quick=args.quick)),
         ("fhdp_throughput", lambda: fhdp_throughput.run(quick=args.quick)),
         ("fl_accuracy", lambda: fl_accuracy.run(quick=args.quick)),
         ("distill_quality", lambda: distill_quality.run(quick=args.quick)),

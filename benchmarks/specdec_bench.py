@@ -1,0 +1,196 @@
+"""Speculative decoding with the distilled pod student as draft model.
+
+Runs ``distill_fl`` end to end (same recipe and round schedule as
+``distill_fl_bench``), then serves each edge pod's held-out traffic
+through the continuous paged tier three ways, all against the SAME
+target — the pod's personalized student (base + pod adapter), i.e. the
+model :meth:`repro.api.Session.serve` deploys at that edge:
+
+  * **baseline** — plain one-token-per-step greedy decode;
+  * **pod draft** — draft-verify speculative decode where the draft IS
+    the pod student (shared weights, no second checkpoint: the
+    ``DraftEngine`` reuses the target's compiled forwards and only owns
+    its own KV pools);
+  * **global draft** — the same machinery drafting with the cloud-merged
+    global model, the ablation that prices what personalization buys.
+
+Three claims, schema-gated by ``scripts/validate_bench.py``:
+
+  * greedy streams are **bit-identical** across all three runs on every
+    pod — speculation changes the clock, never the tokens;
+  * the pod-matched draft sustains >= 1.3x the baseline's sim-time
+    tokens/s (FLOP-proxy :class:`~repro.serve.SpecDecodeCostModel`,
+    which charges draft forwards and the widened verify chunk);
+  * the pod-matched draft's acceptance rate beats the global draft's on
+    every pod — the same personalization gap ``BENCH_distill.json``
+    measures as waypoint L1, re-measured as accepted draft tokens.
+
+Settings mirror ``tests/test_distill_fl.py`` — the round schedule is
+part of the claim, so ``--quick`` shrinks nothing (recorded in the
+payload for provenance only). Writes ``BENCH_specdec.json``.
+
+    PYTHONPATH=src python benchmarks/specdec_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+DEFAULT_OUT = "BENCH_specdec.json"
+TOPOLOGY = "2@nano*2"               # 2 edge pods x 1 vehicle each
+ROUNDS = 8
+DRAFT_K = 4
+REQUESTS_PER_POD = 8
+PROMPT_LEN = 10
+MAX_NEW = 10
+
+
+def _pod_requests(held_pod, n, plen, max_new):
+    import numpy as np
+
+    from repro.serve import ServeRequest
+
+    toks = np.asarray(held_pod["tokens"])
+    return [ServeRequest(rid=i, prompt=toks[i, :plen].astype(np.int32),
+                         max_new_tokens=max_new,
+                         arrival_s=0.01 * i, deadline_s=10.0)
+            for i in range(n)]
+
+
+def _spec_stats(report):
+    return {
+        "acceptance_rate": report["acceptance_rate"],
+        "proposed_drafts": report["proposed_drafts"],
+        "accepted_drafts": report["accepted_drafts"],
+        "spec_steps": report["spec_steps"],
+        "draft_forwards": report["draft_forwards"],
+        "decode_steps": report["decode_steps"],
+        "total_new_tokens": report["total_new_tokens"],
+        "sim_time_s": report["sim_time_s"],
+    }
+
+
+def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
+    try:
+        from benchmarks.common import bench_session, emit
+    except ImportError:          # invoked as `python benchmarks/...py`
+        from common import bench_session, emit
+
+    from repro.api import LoopHooks
+    from repro.serve import (PrefillCostModel, SpecDecodeCostModel,
+                             serve_continuous)
+
+    quiet = LoopHooks(log_every=10 ** 9, log_fn=lambda *a, **k: None)
+    ses = bench_session("flad-adllm", mesh=(2,), shape="16x8",
+                        strategy="distill_fl", learning_rate=3e-2,
+                        hooks=quiet, topology=TOPOLOGY, codec="int8",
+                        local_steps=2, lora_rank=4, kd_weight=0.1,
+                        mix=0.25, warmup_steps=30, beta=0.05,
+                        samples_per_vehicle=128, heldout=64)
+    ses.run(ROUNDS)
+
+    st = ses.strategy
+    global_model = ses.merged_params()
+    _, held, _ = st.datasets(ses.cfg, ses.shape)
+
+    pods = []
+    for e in range(len(held)):
+        target = st.pod_params(ses.state, e)
+        reqs = _pod_requests(held[e], REQUESTS_PER_POD, PROMPT_LEN,
+                             MAX_NEW)
+        common = dict(params=target, slots=2, block_size=4,
+                      max_context=PROMPT_LEN + MAX_NEW,
+                      prefill="chunked", prefill_chunk=8,
+                      prefix_cache=True, requests=reqs, log_fn=None,
+                      warm_passes=1)
+        base = serve_continuous(ses.cfg, prefill_cost=PrefillCostModel(),
+                                **common)
+        pod_draft = serve_continuous(
+            ses.cfg, speculative=True, draft_k=DRAFT_K,
+            draft_params=st.pod_params(ses.state, e),
+            prefill_cost=SpecDecodeCostModel(), **common)
+        glob_draft = serve_continuous(
+            ses.cfg, speculative=True, draft_k=DRAFT_K,
+            draft_params=global_model,
+            prefill_cost=SpecDecodeCostModel(), **common)
+        pods.append({
+            "pod": e,
+            "baseline": {
+                "decode_steps": base["decode_steps"],
+                "total_new_tokens": base["total_new_tokens"],
+                "sim_time_s": base["sim_time_s"],
+            },
+            "pod_draft": _spec_stats(pod_draft),
+            "global_draft": _spec_stats(glob_draft),
+            "speedup_pod": base["sim_time_s"] / pod_draft["sim_time_s"],
+            "speedup_global": base["sim_time_s"]
+            / glob_draft["sim_time_s"],
+            "streams_match_pod": pod_draft["sequences"]
+            == base["sequences"],
+            "streams_match_global": glob_draft["sequences"]
+            == base["sequences"],
+        })
+
+    topo = st.topology
+    payload = {
+        "bench": "specdec",
+        "schema_version": 1,
+        "arch": ses.cfg.name,
+        "quick": bool(quick),
+        "rounds": ROUNDS,
+        "draft_k": DRAFT_K,
+        "topology": {
+            "spec": TOPOLOGY,
+            "edges": topo.n_edges,
+            "vehicles": topo.n_clients,
+        },
+        "workload": {
+            "requests_per_pod": REQUESTS_PER_POD,
+            "prompt_len": PROMPT_LEN,
+            "max_new_tokens": MAX_NEW,
+        },
+        "pods": pods,
+        "summary": {
+            "streams_match": all(p["streams_match_pod"]
+                                 and p["streams_match_global"]
+                                 for p in pods),
+            "min_pod_speedup": min(p["speedup_pod"] for p in pods),
+            "mean_pod_acceptance": sum(
+                p["pod_draft"]["acceptance_rate"] for p in pods)
+            / len(pods),
+            "mean_global_acceptance": sum(
+                p["global_draft"]["acceptance_rate"] for p in pods)
+            / len(pods),
+            "min_acceptance_gap": min(
+                p["pod_draft"]["acceptance_rate"]
+                - p["global_draft"]["acceptance_rate"] for p in pods),
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    for p in pods:
+        emit(f"specdec/pod{p['pod']}/speedup", p["speedup_pod"],
+             f"acc_pod={p['pod_draft']['acceptance_rate']:.3f} "
+             f"acc_global={p['global_draft']['acceptance_rate']:.3f}")
+    s = payload["summary"]
+    print(f"specdec: x{s['min_pod_speedup']:.2f} min sim speedup with "
+          f"the pod draft, acceptance gap "
+          f">={s['min_acceptance_gap']:+.3f} over the global draft, "
+          f"streams_match={s['streams_match']} -> {out}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

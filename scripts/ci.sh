@@ -61,6 +61,11 @@ if [[ "${1:-}" != "--fast" ]]; then
       --slots 2 --context 16 --requests 4 --block-size 8 \
       --prefill chunked --prefill-chunk 8 --prefix-cache
 
+  echo "=== smoke: speculative decoding (draft-verify serve) ==="
+  python -m repro.launch.serve --devices 2 --scheduler continuous \
+      --slots 2 --context 16 --requests 4 --block-size 8 \
+      --prefill chunked --prefill-chunk 8 --speculative --draft-k 4
+
   echo "=== smoke: traced continuous serve (repro.obs) ==="
   python -m repro.launch.serve --devices 2 --scheduler continuous \
       --slots 2 --context 16 --requests 4 --block-size 8 \
@@ -109,6 +114,11 @@ if [[ "${1:-}" != "--fast" ]]; then
       --out /tmp/BENCH_distill.quick.json
   python scripts/validate_bench.py /tmp/BENCH_distill.quick.json
 
+  echo "=== bench: speculative decoding (quick, scratch output) ==="
+  python benchmarks/specdec_bench.py --quick \
+      --out /tmp/BENCH_specdec.quick.json
+  python scripts/validate_bench.py /tmp/BENCH_specdec.quick.json
+
   echo "=== validate committed perf-trajectory artifacts ==="
   python scripts/validate_bench.py BENCH_repartition.json
   python scripts/validate_bench.py BENCH_attention.json
@@ -117,6 +127,7 @@ if [[ "${1:-}" != "--fast" ]]; then
   python scripts/validate_bench.py BENCH_serving.json
   python scripts/validate_bench.py BENCH_prefill.json
   python scripts/validate_bench.py BENCH_distill.json
+  python scripts/validate_bench.py BENCH_specdec.json
 fi
 
 echo "CI OK"

@@ -40,6 +40,13 @@ schemas. Dispatches on the payload's ``bench`` field:
     pod adapter) is no worse than the global model on its own held-out
     partition (non-negative waypoint-L1 delta, strictly positive on
     average).
+  * ``specdec`` (BENCH_specdec.json) — enforces the speculative-decoding
+    claims of :mod:`repro.serve`: drafting with the pod's distilled
+    student sustains >= 1.3x the plain greedy baseline's sim-time
+    throughput with bit-identical streams on every pod, and the
+    pod-matched draft's acceptance rate strictly beats the global
+    (cloud-merged) draft's — personalization measured as accepted
+    draft tokens.
 
     python scripts/validate_bench.py BENCH_repartition.json
     python scripts/validate_bench.py BENCH_attention.json
@@ -48,6 +55,7 @@ schemas. Dispatches on the payload's ``bench`` field:
     python scripts/validate_bench.py BENCH_serving.json
     python scripts/validate_bench.py BENCH_prefill.json
     python scripts/validate_bench.py BENCH_distill.json
+    python scripts/validate_bench.py BENCH_specdec.json
 """
 import json
 import math
@@ -168,6 +176,23 @@ DISTILL_POD = {
 }
 MIN_ADAPTER_UP_REDUCTION = 20.0  # adapter uplink vs full-delta hier_fl
 MIN_POD_DELTA = 0.0              # no pod may lose to the global model
+
+SPECDEC_TOP = {
+    "bench": str, "schema_version": int, "arch": str, "quick": bool,
+    "rounds": int, "draft_k": int, "topology": dict, "workload": dict,
+    "pods": list, "summary": dict,
+}
+SPECDEC_BASE = {
+    "decode_steps": int, "total_new_tokens": int,
+    "sim_time_s": (int, float),
+}
+SPECDEC_DRAFT = {
+    "acceptance_rate": (int, float), "proposed_drafts": int,
+    "accepted_drafts": int, "spec_steps": int, "draft_forwards": int,
+    "decode_steps": int, "total_new_tokens": int,
+    "sim_time_s": (int, float),
+}
+MIN_SPECDEC_SPEEDUP = 1.3        # pod-draft sim tok/s vs plain greedy
 
 # the kernel VJP's normalized peak may wobble (padding, residual dtype)
 # but must not grow with S; the reference VJP's raw peak is the
@@ -515,6 +540,63 @@ def validate_distill(data: dict, path: str) -> None:
           f"mean delta {mean_delta:+.4f})")
 
 
+def validate_specdec(data: dict, path: str) -> None:
+    check_keys(data, SPECDEC_TOP, "payload")
+    if data["draft_k"] <= 0:
+        fail("draft_k not positive")
+    pods = data["pods"]
+    if len(pods) != data["topology"].get("edges"):
+        fail(f"{len(pods)} pod entries for "
+             f"{data['topology'].get('edges')} edges")
+    for p in pods:
+        where = f"pods[{p.get('pod')}]"
+        check_keys(p["baseline"], SPECDEC_BASE, f"{where}[baseline]")
+        for side in ("pod_draft", "global_draft"):
+            d = p[side]
+            check_keys(d, SPECDEC_DRAFT, f"{where}[{side}]")
+            if not (d["sim_time_s"] > 0 and math.isfinite(d["sim_time_s"])):
+                fail(f"{where}[{side}] sim_time_s not positive-finite")
+            if not 0.0 <= d["acceptance_rate"] <= 1.0:
+                fail(f"{where}[{side}] acceptance_rate outside [0, 1]")
+            if d["spec_steps"] <= 0 or d["proposed_drafts"] <= 0:
+                fail(f"{where}[{side}] never speculated — the draft "
+                     "engine is not on the decode path")
+            if d["accepted_drafts"] > d["proposed_drafts"]:
+                fail(f"{where}[{side}] accepted more drafts than "
+                     "proposed")
+            if d["total_new_tokens"] != p["baseline"]["total_new_tokens"]:
+                fail(f"{where}[{side}] served different work than the "
+                     "baseline — the speedup is not like-for-like")
+        if not (p["streams_match_pod"] and p["streams_match_global"]):
+            fail(f"{where} speculative greedy streams differ from plain "
+                 "decode — acceptance is rewriting tokens, not just "
+                 "skipping steps")
+        if p["speedup_pod"] < MIN_SPECDEC_SPEEDUP:
+            fail(f"{where} pod-draft sim speedup x{p['speedup_pod']:.2f} "
+                 f"below the x{MIN_SPECDEC_SPEEDUP} acceptance bar — "
+                 "speculation is not earning its verify chunk")
+        gap = (p["pod_draft"]["acceptance_rate"]
+               - p["global_draft"]["acceptance_rate"])
+        if gap <= 0:
+            fail(f"{where} pod-matched draft acceptance does not beat "
+                 f"the global draft (gap {gap:+.3f}) — the personalized "
+                 "student is not a better speculator on its own traffic")
+        if p["pod_draft"]["decode_steps"] >= p["baseline"]["decode_steps"]:
+            fail(f"{where} pod draft took no fewer target steps than "
+                 "plain decode — accepted drafts are not being emitted")
+    s = data["summary"]
+    if not s.get("streams_match"):
+        fail("summary streams_match is false")
+    if abs(s.get("min_pod_speedup", 0.0)
+           - min(p["speedup_pod"] for p in pods)) > 1e-9:
+        fail("summary min_pod_speedup inconsistent with pod entries")
+
+    print(f"validate_bench: OK — {path} (pod draft x"
+          f"{s['min_pod_speedup']:.2f} min sim speedup over {len(pods)} "
+          f"pods, acceptance {s['mean_pod_acceptance']:.2f} vs "
+          f"{s['mean_global_acceptance']:.2f} global, streams identical)")
+
+
 VALIDATORS = {
     "repartition_latency": validate_repartition,
     "attention_fwd_bwd": validate_attention,
@@ -523,6 +605,7 @@ VALIDATORS = {
     "serving_tier": validate_serving,
     "prefill_tier": validate_prefill,
     "distill_fl": validate_distill,
+    "specdec": validate_specdec,
 }
 
 

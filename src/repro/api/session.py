@@ -309,7 +309,9 @@ class Session:
     def serve(self, *, requests: int = 3, batch: int = 8, context: int = 64,
               decode_steps: int = 16, params=None, scheduler: str = "legacy",
               sampling: str = "greedy", temperature: float = 1.0,
-              pod: Optional[int] = None, trace=None, log_fn=print,
+              pod: Optional[int] = None, trace=None,
+              speculative: bool = False,
+              draft_pod: Optional[int] = None, log_fn=print,
               **serve_options) -> Dict:
         """Batched prefill+decode serving (paper Fig. 2); uses the trained
         session params when available, else a fresh init.
@@ -332,7 +334,15 @@ class Session:
         ``pod``: serve edge pod ``pod``'s **personalized** model — the
         strategy's ``pod_params`` view (``distill_fl``: base weights with
         that pod's LoRA adapter folded in via ``merge_lora``) instead of
-        the global merge."""
+        the global merge.
+
+        ``speculative``: draft-verify speculative decoding (continuous
+        scheduler, greedy only; streams stay bit-identical). The draft
+        model defaults to the target weights (self-draft); pass
+        ``draft_pod`` to draft with pod ``draft_pod``'s distilled
+        student — same base weights, that pod's LoRA factors merged in,
+        no second checkpoint (``distill_fl`` only). ``draft_k`` and
+        ``preemption`` ride through ``serve_options``."""
         self.mesh  # force device setup once, like every other entrypoint
         if pod is not None:
             if params is not None:
@@ -347,6 +357,25 @@ class Session:
             params = self.strategy.pod_params(self.state, pod)
         if params is None and self.state is not None:
             params = self.merged_params()
+        if draft_pod is not None and not speculative:
+            raise ValueError("draft_pod= needs speculative=True")
+        if speculative:
+            if scheduler != "continuous":
+                raise ValueError("speculative decoding needs "
+                                 "scheduler='continuous'")
+            serve_options["speculative"] = True
+            if draft_pod is not None:
+                if not hasattr(self.strategy, "pod_params"):
+                    raise ValueError(
+                        f"strategy {self.strategy.name!r} has no per-pod "
+                        f"student to draft with (draft_pod= needs "
+                        f"distill_fl)")
+                if self.state is None:
+                    raise RuntimeError(
+                        "no state yet; run() before drafting with a "
+                        "distilled pod student")
+                serve_options["draft_params"] = self.strategy.pod_params(
+                    self.state, draft_pod)
         if scheduler == "continuous":
             from repro.serve import serve_continuous
             return serve_continuous(self.cfg, params=params,

@@ -852,6 +852,23 @@ class DistillFLStrategy(HierFLStrategy):
         gf = hierarchical_mean(factors, w, self.topology)
         return merge_lora(base, gf, self.lora_cfg)
 
+    def teacher_params(self, state=None):
+        """The frozen cloud teacher (warmed-up base, no adapter).
+
+        This is the verify-side target for speculative decoding: pod
+        students draft against the teacher they were distilled from, so
+        pod-matched drafts accept more than the global-average draft.
+        ``state`` is accepted for signature symmetry with
+        :meth:`pod_params` but only the frozen base is consulted."""
+        if state is not None:
+            base, _ = self._unpack(state[0])
+            return base
+        if self._base is None:
+            raise RuntimeError(
+                "distill_fl has no frozen base yet; init the session "
+                "(build/run) before asking for the teacher")
+        return self._base
+
     def pod_params(self, state, pod: int):
         """Pod ``pod``'s personalized model: base + that pod's adapter
         folded in (the serving handoff)."""

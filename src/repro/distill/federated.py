@@ -191,6 +191,30 @@ def warmup_base(params, acfg: ModelConfig, batches, *, lr: float = 1e-3):
     return params, losses
 
 
+def greedy_agreement(target, draft, cfg: ModelConfig, tokens, *,
+                     draft_lora=None, lora_scale: float = 1.0) -> float:
+    """Teacher-forced greedy next-token agreement of ``draft`` with
+    ``target`` over ``tokens`` [B, S] — the analytical predictor of
+    speculative-decode acceptance.
+
+    Both models see the same ground-truth prefixes, so a position counts
+    as agreeing iff the draft's greedy token equals the target's at that
+    prefix — exactly the event the serving tier's greedy exact-match
+    verifier accepts. A pod student scored against the teacher it was
+    distilled from should agree more often on its own pod's traffic than
+    the global-average adapter does; the specdec bench reports this
+    number next to the acceptance rate the scheduler actually measured.
+
+    ``draft_lora`` runs the draft as base + factors through the fused
+    kernel (no merged weights); otherwise ``draft`` is a full param tree.
+    """
+    toks = jnp.asarray(tokens, jnp.int32)
+    tl, _, _ = lm.forward(target, cfg, toks)
+    dl, _, _ = lm.forward(draft, cfg, toks, lora=draft_lora,
+                          lora_scale=lora_scale)
+    return float((tl.argmax(-1) == dl.argmax(-1)).mean())
+
+
 def waypoint_eval(base, acfg: ModelConfig, data, *, lora=None,
                   lora_scale: float = 1.0) -> float:
     """Mean waypoint L1 of (base [+ adapter]) over a held-out dataset."""

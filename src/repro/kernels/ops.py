@@ -134,6 +134,31 @@ def paged_prefill_attention(q, k_pages, v_pages, block_table, q_offset,
                                        interpret=_auto_interpret(interpret))
 
 
+# Serving hot path (repro.serve): speculative-decode verification. A
+# draft window is exactly a chunk of C = k+1 decode positions attending
+# through the lane's block table, so verification reuses the chunked
+# prefill kernel per lane — the lane loop is static (slots is a compile
+# constant) and unrolls into independent kernel calls inside one jit.
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_verify_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                           chunk_lens, *, scale=None, k_scales=None,
+                           v_scales=None, interpret=None):
+    """q: [B, Hq, C, D] per-lane draft-window queries (row c of lane b at
+    position ctx_lens[b] + c); k_pages/v_pages: [Hkv, NB, bs, D] pools
+    already holding the window's own K/V rows; block_tables: [B, T];
+    ctx_lens/chunk_lens: [B] int32 (lane b's window covers positions
+    [ctx_lens[b], ctx_lens[b] + chunk_lens[b])). Returns [B, Hq, C, D];
+    rows at or past a lane's chunk_len are garbage."""
+    outs = [
+        _fa.paged_prefill_attention(
+            q[b], k_pages, v_pages, block_tables[b], ctx_lens[b],
+            ctx_lens[b] + chunk_lens[b], scale=scale, k_scales=k_scales,
+            v_scales=v_scales, interpret=_auto_interpret(interpret))
+        for b in range(q.shape[0])
+    ]
+    return jnp.stack(outs)
+
+
 # Codec hot path (repro.comm): no custom_vjp — encode/decode runs outside
 # the differentiated path, so the pair stays a plain kernel call.
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -47,6 +47,12 @@ def main():
     ap.add_argument("--fleet", default="nano*2,agx*2",
                     help="vehicle fleet spec for the load generator "
                          "(continuous)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-verify speculative decoding (continuous, "
+                         "greedy; streams stay bit-identical)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens proposed per lane per step "
+                         "(with --speculative)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Perfetto-loadable sim-time trace of "
                          "the final warm pass to PATH (continuous)")
@@ -69,9 +75,12 @@ def main():
         kw = dict(block_size=args.block_size, cache=args.cache,
                   fleet=args.fleet, prefill=args.prefill,
                   prefill_chunk=args.prefill_chunk,
-                  prefix_cache=args.prefix_cache, trace=args.trace)
+                  prefix_cache=args.prefix_cache, trace=args.trace,
+                  speculative=args.speculative, draft_k=args.draft_k)
     elif args.trace:
         raise SystemExit("--trace requires --scheduler continuous")
+    elif args.speculative:
+        raise SystemExit("--speculative requires --scheduler continuous")
     report = session.serve(requests=args.requests,
                            batch=args.slots or args.batch,
                            context=args.context,

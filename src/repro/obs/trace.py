@@ -26,7 +26,8 @@ Track conventions (pid groups tracks; tid orders them):
     (``vehicle_tid``), one per edge pod (``edge_tid``), one for the
     cloud (``CLOUD_TID``).
   * ``SERVE_PID``  — the serving tier: a queue track (``QUEUE_TID``)
-    for admission waits plus one track per scheduler lane
+    for admission waits, a speculative-decode track (``SPEC_TID``) for
+    the per-step draft/verify spans, plus one track per scheduler lane
     (``lane_tid``).
 """
 from __future__ import annotations
@@ -46,6 +47,9 @@ _EDGE_TID0 = 100
 _VEHICLE_TID0 = 1000
 #: tid layout inside SERVE_PID
 QUEUE_TID = 1
+#: draft/verify spans of the speculative decoder (batched across lanes,
+#: so they live on their own track rather than any one lane's)
+SPEC_TID = 2
 _LANE_TID0 = 10
 
 

@@ -15,19 +15,19 @@ from typing import Callable, Dict, Optional
 import jax
 
 from repro.config import ModelConfig
-from repro.serve.engine import PagedEngine
+from repro.serve.engine import DraftEngine, PagedEngine
 from repro.serve.kvcache import (BlockAllocator, PagedCacheSpec,
                                  PrefixCache)
-from repro.serve.loadgen import (PrefillCostModel, drive,
-                                 generate_fleet_requests,
+from repro.serve.loadgen import (PrefillCostModel, SpecDecodeCostModel,
+                                 drive, generate_fleet_requests,
                                  generate_pod_requests)
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
 
-__all__ = ["BlockAllocator", "ContinuousScheduler", "PagedCacheSpec",
-           "PagedEngine", "PrefillCostModel", "PrefixCache",
-           "ServeRequest", "drive", "generate_fleet_requests",
-           "generate_pod_requests", "int8_cache_fidelity",
-           "serve_continuous"]
+__all__ = ["BlockAllocator", "ContinuousScheduler", "DraftEngine",
+           "PagedCacheSpec", "PagedEngine", "PrefillCostModel",
+           "PrefixCache", "ServeRequest", "SpecDecodeCostModel", "drive",
+           "generate_fleet_requests", "generate_pod_requests",
+           "int8_cache_fidelity", "serve_continuous"]
 
 
 def int8_cache_fidelity(cfg: ModelConfig, params, requests, streams: Dict,
@@ -121,6 +121,8 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
                      long_frac: float = 0.2, warm_passes: int = 1,
                      requests=None, dt_step: float = 0.01,
                      prefill_cost=None, trace=None,
+                     speculative: bool = False, draft_k: int = 4,
+                     draft_params=None, preemption: Optional[bool] = None,
                      log_fn: Optional[Callable] = print) -> Dict:
     """Serve a fleet request trace through the paged engine.
 
@@ -140,6 +142,15 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
     ``trace`` (a :class:`repro.obs.Tracer` or a path) records the FINAL
     warm pass — one clean steady-state pass, not the jit-noisy cold one —
     as sim-time queue/lane spans; a path is saved before returning.
+    ``speculative=True`` turns on draft-verify speculative decoding
+    (``draft_k`` drafts per lane per step from ``draft_params`` — the
+    distilled pod student; defaults to self-drafting with the target
+    weights) and, under chunked prefill, block-level preemption
+    (override with ``preemption``); greedy streams stay bit-identical
+    to non-speculative decode. Pass a
+    :class:`repro.serve.loadgen.SpecDecodeCostModel` as ``prefill_cost``
+    so the sim clock charges draft forwards and the verify chunk
+    instead of k extra target steps.
     Returns the loadgen report plus both throughputs and the per-request
     token streams (greedy streams are deterministic — the equivalence
     tests compare them across policies, prefill modes and cache modes).
@@ -153,6 +164,10 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
 
     tracer, trace_path = resolve_tracer(trace)
 
+    if speculative and prefill_cost is None:
+        # price draft forwards + the verify chunk instead of silently
+        # charging k extra full target steps on the sim clock
+        prefill_cost = SpecDecodeCostModel()
     if params is None:
         params = lm.init(jax.random.PRNGKey(seed), cfg)
     max_prompt = max_prompt if max_prompt is not None else max_context // 2
@@ -183,7 +198,11 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
                                    prefix_cache=prefix_cache,
                                    sampling=sampling,
                                    temperature=temperature, seed=seed,
-                                   tracer=tracer)
+                                   tracer=tracer,
+                                   speculative=speculative,
+                                   draft_k=draft_k,
+                                   draft_params=draft_params,
+                                   preemption=preemption)
 
     t0 = time.time()
     sched = fresh_scheduler()
@@ -219,6 +238,12 @@ def serve_continuous(cfg: ModelConfig, *, params=None, seed: int = 0,
     if trace_path is not None:
         report["trace_path"] = trace_path
     if log_fn:
+        if speculative:
+            log_fn(f"[serve:specdec] k={draft_k} "
+                   f"acceptance={report['acceptance_rate']:.2f} "
+                   f"({report['accepted_drafts']}/"
+                   f"{report['proposed_drafts']} drafts), "
+                   f"{report.get('preemptions', 0)} preemptions")
         log_fn(f"[serve:{policy}/{cache}] {report['requests']} requests, "
                f"{report['total_new_tokens']} tokens in "
                f"{report['decode_steps']} decode steps; "

@@ -60,6 +60,7 @@ class PagedEngine:
         self._prefill = jax.jit(self._prefill_impl)
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
         self._decode = jax.jit(self._decode_impl)
+        self._verify = jax.jit(self._verify_impl)
         self._write = jax.jit(functools.partial(KC.write_prefill, spec=spec))
         self._copy_block = jax.jit(self._copy_block_impl)
 
@@ -246,6 +247,95 @@ class PagedEngine:
     def decode(self, params, pools, tokens, tables, ctx_lens) -> Tuple:
         return self._decode(params, pools, tokens, tables, ctx_lens)
 
+    # ---- speculative verify -------------------------------------------
+    def _verify_impl(self, params, pools, tokens, tables, ctx_lens,
+                     chunk_lens):
+        """Score a draft window of C = k+1 tokens per lane in ONE target
+        forward (the speculative-decode verify pass).
+
+        tokens: [slots, C] int32 — column 0 is the lane's pending token,
+        columns 1..k its greedy draft proposals; tables: [slots, T];
+        ctx_lens: [slots] int32 (KV written so far — column c sits at
+        absolute position ctx + c); chunk_lens: [slots] int32 per-lane
+        window (rows at or past a lane's chunk_len neither append K/V
+        nor produce meaningful logits — they are masked to the
+        null-block contract, which also covers dead lanes via ctx 0 /
+        table 0 / chunk C). Verification is exactly a chunk of decode
+        positions attending through the lane's block table, so the walk
+        mirrors ``_prefill_chunk_impl`` batched over lanes (the chunked
+        Pallas kernel runs per lane inside the jit via
+        :func:`repro.kernels.ops.paged_verify_attention`). Returns
+        (logits [slots, C, V], updated pools) — row c of a lane is the
+        next-token distribution after draft position c, which the
+        scheduler compares against the proposals for exact-match
+        acceptance."""
+        cfg, spec = self.cfg, self.spec
+        nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        slots, c = tokens.shape
+        scale = hd ** -0.5
+
+        x = B.embed(params["embed"], tokens)               # [slots, C, d]
+        cols = jnp.arange(c, dtype=jnp.int32)
+        positions = ctx_lens[:, None] + cols[None, :]      # [slots, C]
+        valid = cols[None, :] < chunk_lens[:, None]
+        safe_pos = jnp.where(valid, positions, 0)
+        blk = safe_pos // spec.block_size
+        phys = jnp.take_along_axis(tables, blk, axis=1)
+        phys = jnp.where(valid, phys, 0).reshape(-1)       # [slots*C]
+        off = jnp.where(valid, safe_pos % spec.block_size, 0).reshape(-1)
+
+        def body(carry, layer):
+            h_in = carry
+            lp, layer_pools = layer
+            ap = lp["attn"]
+            h = B.rms_norm(lp["ln1"], h_in, cfg.norm_eps)
+            q = h @ ap["wq"]
+            k = h @ ap["wk"]
+            v = h @ ap["wv"]
+            if "bq" in ap:
+                q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+            q = B._split_heads(q, nq, hd)                  # [slots,Hq,C,D]
+            k = B._split_heads(k, nkv, hd)
+            v = B._split_heads(v, nkv, hd)
+            if "q_norm" in ap:
+                q = B._head_rmsnorm(q, ap["q_norm"], cfg.norm_eps)
+                k = B._head_rmsnorm(k, ap["k_norm"], cfg.norm_eps)
+            q = B.rope(q, positions, cfg.rope_theta)
+            k = B.rope(k, positions, cfg.rope_theta)
+
+            k_rows = k.transpose(1, 0, 2, 3).reshape(nkv, slots * c, hd)
+            v_rows = v.transpose(1, 0, 2, 3).reshape(nkv, slots * c, hd)
+            new_pools = KC.append_token(layer_pools, spec, k_rows, v_rows,
+                                        phys, off)
+            from repro.kernels import ops as kops
+            o = kops.paged_verify_attention(
+                q, new_pools["k"], new_pools["v"], tables, ctx_lens,
+                chunk_lens, scale=scale,
+                k_scales=new_pools.get("k_scale"),
+                v_scales=new_pools.get("v_scale"))     # [slots, Hq, C, D]
+            h_in = h_in + (o.transpose(0, 2, 1, 3).reshape(slots, c,
+                                                           nq * hd)
+                           @ ap["wo"]).astype(h_in.dtype)
+            hh = B.rms_norm(lp["ln2"], h_in, cfg.norm_eps)
+            if "moe" in lp:
+                f, _ = B.moe_block(lp["moe"], hh, cfg)
+            else:
+                f = B.mlp(lp["ffn"], hh)
+            return h_in + f, new_pools
+
+        x, new_pools = jax.lax.scan(body, x, (params["blocks"], pools))
+        x = B.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = B.unembed(params["embed"], x)
+        else:
+            logits = B.linear(params["head"], x).astype(jnp.float32)
+        return logits, new_pools
+
+    def verify(self, params, pools, tokens, tables, ctx_lens,
+               chunk_lens) -> Tuple:
+        return self._verify(params, pools, tokens, tables, ctx_lens,
+                            chunk_lens)
+
     # ---- sampling -----------------------------------------------------
     def make_sampler(self, sampling: str = "greedy",
                      temperature: float = 1.0):
@@ -277,3 +367,81 @@ class PagedEngine:
         buf = np.zeros((1, self.max_context), np.int32)
         buf[0, :s] = np.asarray(prompt, np.int32)
         return jnp.asarray(buf), jnp.int32(s)
+
+
+class DraftEngine:
+    """Speculative-decode draft proposer sharing the target's machinery.
+
+    Wraps the *target* :class:`PagedEngine`'s compiled forwards with the
+    distilled student's params (base + merged LoRA factors from
+    ``DistillFLStrategy.pod_params`` — shared weights, no second
+    checkpoint, no second compile) and a parallel set of pool tensors.
+    Block tables and context lengths are the scheduler's own: K/V rows
+    are a pure function of the token prefix, so the target's logical
+    layout — including prefix-shared blocks, which the scheduler mirrors
+    into the draft pools at prefill/copy-on-write time — is valid for
+    the draft pools verbatim."""
+
+    def __init__(self, engine: PagedEngine, params, *, draft_k: int):
+        if draft_k < 1:
+            raise ValueError("draft_k must be >= 1")
+        self.engine = engine
+        self.spec = engine.spec
+        self.params = params
+        self.draft_k = int(draft_k)
+        self.pools = engine.init_pools()
+
+    def propose(self, tokens, tables, ctx_lens, window):
+        """Greedily draft up to ``draft_k`` tokens per lane.
+
+        tokens: [slots] int32 pending tokens; tables: [slots, T];
+        ctx_lens: [slots]; window: [slots] per-lane draft budget
+        (min(draft_k + 1, tokens the lane may still emit); 0 masks a
+        lane out entirely). Runs ``draft_k + 1`` batched draft decode
+        forwards — forward i deposits token i's K/V at position ctx + i
+        and proposes token i+1 — so even after a full accept the draft
+        pools hold the true stream's K/V at every position below the new
+        context length. A lane is masked to the dead-lane contract for
+        forwards at or past its window, keeping appends inside its
+        funded blocks. Returns drafts [slots, draft_k] int32 (zeros past
+        a lane's window)."""
+        import numpy as np
+        slots = len(tokens)
+        drafts = np.zeros((slots, self.draft_k), np.int32)
+        tok = np.asarray(tokens, np.int32)
+        tables = np.asarray(tables, np.int32)
+        ctx = np.asarray(ctx_lens, np.int32)
+        window = np.asarray(window, np.int32)
+        for i in range(self.draft_k + 1):
+            live = window > i
+            t_i = np.where(live, tok, 0).astype(np.int32)
+            tab_i = np.where(live[:, None], tables, 0).astype(np.int32)
+            c_i = np.where(live, ctx + i, 0).astype(np.int32)
+            logits, self.pools = self.engine.decode(
+                self.params, self.pools, jnp.asarray(t_i),
+                jnp.asarray(tab_i), jnp.asarray(c_i))
+            tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            if i < self.draft_k:
+                drafts[:, i] = np.where(window > i + 1, tok, 0)
+        return drafts
+
+    # ---- prefill mirroring (scheduler-driven) -------------------------
+    def prefill(self, tokens, length) -> None:
+        """Monolithic mirror: run the draft model's bucketed prefill and
+        keep only its K/V (the stream samples from the target)."""
+        _, k, v = self.engine.prefill(self.params, tokens, length)
+        self._mirror_kv = (k, v)
+
+    def write_prefill(self, table_row) -> None:
+        k, v = self._mirror_kv
+        self.pools = self.engine.write_prefill(self.pools, k, v, table_row)
+        self._mirror_kv = None
+
+    def prefill_chunk(self, tokens, table, pos, clen) -> None:
+        """Chunked mirror: same chunk, draft params, draft pools."""
+        _, self.pools = self.engine.prefill_chunk(
+            self.params, self.pools, tokens, table, pos, clen)
+
+    def copy_block(self, src, dst) -> None:
+        """Copy-on-write mirror for whole-prompt prefix hits."""
+        self.pools = self.engine.copy_block(self.pools, src, dst)

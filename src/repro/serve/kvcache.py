@@ -329,6 +329,32 @@ def write_prefill(pools: Dict, spec: PagedCacheSpec, k_layers, v_layers,
     return out
 
 
+def gather_rows(pools: Dict, phys, off) -> Dict:
+    """Snapshot pool rows at ``(phys, off)`` token positions (jit-safe).
+
+    ``phys``/``off``: [N] int32 physical block ids and in-block offsets.
+    Returns ``{key: [L, Hkv, N, ...]}`` — the exact stored rows (int8
+    codes AND their scales in quantized mode), so a later
+    :func:`scatter_rows` restores them bitwise. This is the speculative
+    decoder's rollback snapshot: taken over a lane's draft window before
+    the batched verify appends draft K/V, then written back over the
+    rejected tail so the pools are indistinguishable from never having
+    drafted."""
+    return {key: p[:, :, phys, off] for key, p in pools.items()}
+
+
+def scatter_rows(pools: Dict, rows: Dict, phys, off) -> Dict:
+    """Write :func:`gather_rows` snapshots back at ``(phys, off)``.
+
+    Callers mask a *partial* restore by redirecting kept positions to the
+    null block (``phys = where(rejected, phys, 0)``); duplicate scatters
+    into block 0 are harmless by the null-block contract."""
+    out = dict(pools)
+    for key, p in pools.items():
+        out[key] = p.at[:, :, phys, off].set(rows[key].astype(p.dtype))
+    return out
+
+
 def append_token(pools: Dict, spec: PagedCacheSpec, k_tok, v_tok, phys, off
                  ) -> Dict:
     """Append one decode token's K/V per request into per-layer pools.

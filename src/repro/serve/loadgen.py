@@ -154,6 +154,31 @@ class PrefillCostModel:
                 + stats.get("prefill_attn_mac", 0) * self.s_per_mac)
 
 
+@dataclasses.dataclass(frozen=True)
+class SpecDecodeCostModel(PrefillCostModel):
+    """Sim-time pricing for speculative draft-verify steps.
+
+    A speculative step's target-side cost IS the ``dt_step`` every step
+    already pays — the batched verify is one target forward, weight-load
+    bound exactly like a plain decode step — so the surcharges here are
+    only what speculation ADDS: ``s_per_draft_forward`` per draft-model
+    forward (the distilled compact student of the paper's CELLAdapt
+    tier, deployed at a fraction of the teacher's cost — the default is
+    dt_step/8), plus the verify chunk's extra linear work
+    (``verify_tokens`` x ``s_per_token``) and attention score MACs
+    (``verify_attn_mac`` x ``s_per_mac``). Draft prefill mirroring is
+    charged one draft forward per mirrored unit. What speculation BUYS
+    is up to ``draft_k + 1`` tokens per lane out of that single priced
+    step instead of one."""
+    s_per_draft_forward: float = 0.00125
+
+    def step_cost(self, stats: Dict) -> float:
+        return (super().step_cost(stats)
+                + stats.get("draft_forwards", 0) * self.s_per_draft_forward
+                + stats.get("verify_tokens", 0) * self.s_per_token
+                + stats.get("verify_attn_mac", 0) * self.s_per_mac)
+
+
 def _pct(sorted_vals: List[float], p: float) -> float:
     if not sorted_vals:
         return 0.0
@@ -214,13 +239,18 @@ def drive(scheduler: ContinuousScheduler,
             raise RuntimeError("loadgen failed to drain the request trace")
 
     done = scheduler.finished
-    lats = sorted(r.latency_s for r in done)
+    lats = sorted(r.latency_s for r in done if r.latency_s is not None)
     ttfts = sorted(r.ttft_s for r in done if r.ttft_s is not None)
     waits = sorted(r.queue_wait_s for r in done
                    if r.queue_wait_s is not None)
+    # A request that never emitted a token before the drain has no
+    # meaningful deadline outcome (its ttft_s/queue_wait_s are None, not
+    # stale zeros) — score the SLO only over requests that started.
+    scored = [r for r in done if r.t_first_token is not None]
 
     report = {
         "requests": len(done),
+        "unstarted_requests": len(done) - len(scored),
         "total_new_tokens": scheduler.total_new_tokens,
         "decode_steps": scheduler.decode_steps_run,
         "prefills": scheduler.prefills_run,
@@ -234,9 +264,20 @@ def drive(scheduler: ContinuousScheduler,
         "p99_ttft_s": _pct(ttfts, 99.0),
         "p50_queue_wait_s": _pct(waits, 50.0),
         "p99_queue_wait_s": _pct(waits, 99.0),
-        "deadline_hit_rate": (sum(r.met_deadline for r in done)
-                              / max(1, len(done))),
+        "deadline_hit_rate": (sum(r.met_deadline for r in scored)
+                              / max(1, len(scored))),
     }
+    if scheduler.speculative:
+        prop = scheduler.proposed_drafts
+        report.update({
+            "spec_steps": scheduler.spec_steps_run,
+            "draft_forwards": scheduler.draft_forwards_run,
+            "proposed_drafts": prop,
+            "accepted_drafts": scheduler.accepted_drafts,
+            "acceptance_rate": scheduler.accepted_drafts / max(1, prop),
+        })
+    if scheduler.preemption:
+        report["preemptions"] = scheduler.preemptions
     pool = scheduler.metrics.gauge("serve_pool_blocks_in_use").stats()
     if pool is not None:
         report["pool_blocks_mean"] = pool["mean"]

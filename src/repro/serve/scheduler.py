@@ -38,7 +38,34 @@ Admission is gated by the :class:`repro.serve.kvcache.BlockAllocator`
 (all-or-nothing block reservation for prompt + max_new_tokens) and by
 ``max_inflight_blocks`` so a fleet burst cannot overcommit the pool;
 when the prefix registry's cold entries are what exhausts the pool they
-are LRU-evicted before admission gives up.
+are LRU-evicted before admission gives up. With ``preemption`` enabled
+(the default in speculative mode) admission has one more lever before
+giving up: preempt the lowest-priority live lane — latest deadline,
+then latest arrival — if it ranks strictly below the incoming request.
+The victim's computed K/V chain (prompt, or prompt + emitted stream) is
+re-registered in the prefix cache so its resume is a cache hit, its
+blocks are released through the refcounted allocator, and it requeues
+at the head of the waiting line behind the request that displaced it.
+Greedy resume is exact: chunked prefill replays only the uncached tail
+of the chain and the stream continues from its recorded last token.
+
+``speculative=True`` replaces the per-step single-token decode with
+draft-verify speculative decoding: a :class:`repro.serve.engine.
+DraftEngine` (the pod's distilled student — shared base weights plus
+merged LoRA factors) proposes up to ``draft_k`` greedy tokens per lane
+(``draft_k + 1`` batched draft forwards, so the draft pools stay
+stream-complete even on a full accept), then ONE batched target forward
+scores every draft position through the paged pools
+(:meth:`PagedEngine.verify` — verification is exactly a k+1-token chunk
+attending through the lane's block table). Greedy exact-match
+acceptance emits the matched prefix plus the target's own next token,
+so the output streams are bit-identical to non-speculative greedy
+decode; the rejected tail's K/V rows are rolled back bitwise
+(:func:`repro.serve.kvcache.gather_rows` snapshot before the verify
+append, :func:`repro.serve.kvcache.scatter_rows` restore after) and the
+per-lane context rewinds to the accepted length. Lanes near completion
+shrink their window to the tokens they may still emit, which keeps
+every append inside the blocks reserved at admission.
 
 Determinism: greedy decoding makes the token streams a pure function of
 (params, prompts) — per-request streams are bit-identical between the two
@@ -62,7 +89,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve import kvcache as KC
-from repro.serve.engine import PagedEngine
+from repro.serve.engine import DraftEngine, PagedEngine
 
 _POLICIES = ("continuous", "rebatch")
 _PREFILL_MODES = ("chunked", "monolithic")
@@ -124,7 +151,10 @@ class ContinuousScheduler:
                  prefix_cache: bool = False,
                  max_inflight_blocks: Optional[int] = None,
                  sampling: str = "greedy", temperature: float = 1.0,
-                 seed: int = 0, tracer=None, metrics=None):
+                 seed: int = 0, tracer=None, metrics=None,
+                 speculative: bool = False, draft_k: int = 4,
+                 draft_params=None,
+                 preemption: Optional[bool] = None):
         if policy not in _POLICIES:
             raise ValueError(f"unknown policy {policy!r} ({_POLICIES})")
         if prefill not in _PREFILL_MODES:
@@ -136,6 +166,20 @@ class ContinuousScheduler:
             raise ValueError(
                 "prefix_cache requires prefill='chunked' (monolithic "
                 "write_prefill would clobber shared blocks)")
+        if speculative and sampling != "greedy":
+            raise ValueError(
+                "speculative decoding is defined by greedy exact-match "
+                "acceptance; sampling must be 'greedy'")
+        if preemption is None:
+            # A lane's draft window is funded out of its admission
+            # reservation, so speculative mode leans on preemption for
+            # pool pressure; chunked prefill is what makes a preempted
+            # lane's resume replay only the uncached tail.
+            preemption = speculative and prefill == "chunked"
+        if preemption and prefill != "chunked":
+            raise ValueError(
+                "preemption requires prefill='chunked' (a resumed chain "
+                "can exceed the monolithic prefill bucket)")
         self.engine = engine
         self.params = params
         self.policy = policy
@@ -152,6 +196,16 @@ class ContinuousScheduler:
         self.sampler = engine.make_sampler(sampling, temperature)
         self._base_key = jax.random.PRNGKey(seed)
         self._sample_step = 0
+        self.speculative = bool(speculative)
+        self.preemption = bool(preemption)
+        self.draft: Optional[DraftEngine] = None
+        if self.speculative:
+            # No distilled student supplied -> self-draft with the target
+            # weights (acceptance 1.0; useful for smokes and plumbing).
+            self.draft = DraftEngine(
+                engine, params if draft_params is None else draft_params,
+                draft_k=draft_k)
+        self.draft_k = int(draft_k)
 
         self.pools = engine.init_pools()
         self.tables = np.zeros((self.slots, self.spec.max_blocks_per_req),
@@ -162,6 +216,10 @@ class ContinuousScheduler:
         self.blocks: List[Optional[List[int]]] = [None] * self.slots
         self.prefill_pos = np.zeros(self.slots, np.int32)
         self.prefill_done = np.zeros(self.slots, bool)
+        # per-slot prefill token chain: the prompt, or — for a request
+        # resumed after preemption — prompt + the emitted stream whose
+        # K/V the lane had already computed (all but the pending token)
+        self._chain: List[Optional[np.ndarray]] = [None] * self.slots
         self._prefill_queue: Deque[int] = collections.deque()
         self.waiting: Deque[ServeRequest] = collections.deque()
         self.finished: List[ServeRequest] = []
@@ -171,6 +229,11 @@ class ContinuousScheduler:
         self.prefill_chunks_run = 0
         self.total_new_tokens = 0
         self.fresh_blocks_allocated = 0
+        self.spec_steps_run = 0
+        self.draft_forwards_run = 0
+        self.proposed_drafts = 0         # draft tokens verify could use
+        self.accepted_drafts = 0
+        self.preemptions = 0
         # per-step cost stats for the loadgen's sim clock
         self.last_stats: Dict[str, int] = {}
         # requests stamped (first token / done) during the current step;
@@ -189,6 +252,8 @@ class ContinuousScheduler:
             from repro.obs import trace as T
             self.tracer.process(T.SERVE_PID, "serving", sort_index=2)
             self.tracer.track(T.SERVE_PID, T.QUEUE_TID, "queue")
+            if self.speculative:
+                self.tracer.track(T.SERVE_PID, T.SPEC_TID, "specdec")
             for s in range(self.slots):
                 self.tracer.track(T.SERVE_PID, T.lane_tid(s), f"lane {s}")
         self._pending_trace: List = []
@@ -199,6 +264,17 @@ class ContinuousScheduler:
             from repro.obs.metrics import MetricsRegistry
             metrics = MetricsRegistry()
         self.metrics = metrics
+        # register the speculative instruments eagerly so a spec
+        # scheduler's snapshot always carries them, samples or not
+        if self.speculative:
+            self.metrics.histogram(
+                "serve_spec_accepted_len",
+                "accepted draft tokens per lane per speculative step",
+                buckets=tuple(float(i) for i in range(self.draft_k + 1)))
+        if self.preemption:
+            self.metrics.counter(
+                "serve_preemptions",
+                "live lanes preempted to fund a higher-priority admission")
 
     # ---- bookkeeping --------------------------------------------------
     @property
@@ -247,6 +323,9 @@ class ContinuousScheduler:
             self._pending_trace.append(emit)
         self.finished.append(req)
         self.allocator.release(self.blocks[slot])
+        self._clear_slot(slot)
+
+    def _clear_slot(self, slot: int) -> None:
         self.active[slot] = None
         self.blocks[slot] = None
         self.tables[slot] = 0
@@ -254,6 +333,7 @@ class ContinuousScheduler:
         self.pending_tok[slot] = 0
         self.prefill_pos[slot] = 0
         self.prefill_done[slot] = False
+        self._chain[slot] = None
 
     # ---- admission ----------------------------------------------------
     def _try_alloc(self, n: int) -> Optional[List[int]]:
@@ -271,6 +351,73 @@ class ContinuousScheduler:
             return None
         return self.allocator.alloc(n)
 
+    @staticmethod
+    def _priority(req: ServeRequest):
+        """Scheduling priority key; LARGER sorts lower-priority (latest
+        deadline, then latest arrival, then highest rid)."""
+        return (req.deadline_s, req.arrival_s, req.rid)
+
+    def _pick_victim(self, incoming: ServeRequest) -> Optional[int]:
+        """Lowest-priority live lane ranking strictly below ``incoming``
+        (a preempted request can never preempt its displacer back, so
+        admission cannot thrash)."""
+        worst_slot = None
+        worst = None
+        for slot in range(self.slots):
+            r = self.active[slot]
+            if r is None:
+                continue
+            if worst is None or self._priority(r) > self._priority(worst):
+                worst, worst_slot = r, slot
+        if worst is None or self._priority(worst) <= self._priority(incoming):
+            return None
+        return worst_slot
+
+    def _computed_chain(self, slot: int) -> np.ndarray:
+        """The token chain whose K/V the lane holds: the prefilled prompt
+        prefix, plus — once decoding — every emitted token except the
+        pending one (its K/V is written by the NEXT forward)."""
+        req = self.active[slot]
+        prompt = np.asarray(req.prompt, np.int32)
+        if not self.prefill_done[slot]:
+            return np.asarray(self._chain[slot],
+                              np.int32)[:int(self.prefill_pos[slot])]
+        if not req.tokens:
+            return prompt
+        return np.concatenate(
+            [prompt, np.asarray(req.tokens[:-1], np.int32)])
+
+    def _preempt(self, slot: int, t: float) -> None:
+        """Evict a live lane to fund a higher-priority admission.
+
+        The lane's computed chain is re-registered in the prefix cache
+        (so its resume replays only the uncached tail), its blocks are
+        released through the refcounted allocator — registered blocks
+        survive on the registry's reference — and the request requeues
+        at the head of the waiting line."""
+        req = self.active[slot]
+        if self.prefix is not None:
+            chain = self._computed_chain(slot)
+            if len(chain) >= self.spec.block_size:
+                self.prefix.insert(chain, self.tables[slot])
+        self.preemptions += 1
+        self.metrics.counter(
+            "serve_preemptions",
+            "live lanes preempted to fund a higher-priority admission"
+            ).inc()
+        if self.tracer is not None:
+            from repro.obs import trace as T
+            self.tracer.instant(
+                "preempted", t, pid=T.SERVE_PID, tid=T.lane_tid(slot),
+                cat="preempt",
+                args={"trace_id": req.trace_id, "rid": req.rid,
+                      "emitted_tokens": len(req.tokens)})
+        self.allocator.release(self.blocks[slot])
+        self._prefill_queue = collections.deque(
+            s for s in self._prefill_queue if s != slot)
+        self._clear_slot(slot)
+        self.waiting.appendleft(req)
+
     def _admit(self, t: float) -> None:
         """Reserve lanes + blocks for waiting requests (bookkeeping only —
         prompt compute happens one prefill unit per :meth:`step`)."""
@@ -280,15 +427,35 @@ class ContinuousScheduler:
             if self.active[slot] is not None or not self.waiting:
                 continue
             req = self.waiting[0]
+            # A request resumed after preemption prefills its full
+            # computed chain (prompt + emitted stream minus the pending
+            # token); greedy replay of the tail is exact.
+            if req.tokens:
+                chain = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(req.tokens[:-1], np.int32)])
+            else:
+                chain = np.asarray(req.prompt, np.int32)
             need = self.spec.blocks_needed(len(req.prompt)
                                            + req.max_new_tokens)
             shared: List[int] = []
             cow_src: Optional[int] = None
             resume = 0
             if self.prefix is not None:
-                shared, cow_src, resume = self.prefix.match(req.prompt)
+                shared, cow_src, resume = self.prefix.match(chain)
             fresh_need = need - len(shared)
             fresh = self._try_alloc(fresh_need)
+            if fresh is None and self.preemption:
+                # Pop the incoming request first so preempted victims
+                # requeue BEHIND it at the head of the line.
+                self.waiting.popleft()
+                while fresh is None:
+                    victim = self._pick_victim(req)
+                    if victim is None:
+                        break
+                    self._preempt(victim, t)
+                    fresh = self._try_alloc(fresh_need)
+                self.waiting.appendleft(req)
             if fresh is None:
                 # Undo the prefix refs and keep FIFO order (don't starve
                 # the head by admitting a smaller request behind it).
@@ -299,12 +466,15 @@ class ContinuousScheduler:
             self.waiting.popleft()
             self.fresh_blocks_allocated += fresh_need
             if cow_src is not None:
-                # Whole prompt was cached: clone the last shared block so
+                # Whole chain was cached: clone the last shared block so
                 # the final-token recompute writes a private copy.
                 dst = fresh[0]
                 self.pools = self.engine.copy_block(self.pools, cow_src, dst)
+                if self.draft is not None:
+                    self.draft.copy_block(cow_src, dst)
                 self.allocator.release([cow_src])
-            req.t_admit = t
+            if req.t_admit is None:
+                req.t_admit = t
             if self.tracer is not None:
                 from repro.obs import trace as T
                 self.tracer.complete(
@@ -323,37 +493,48 @@ class ContinuousScheduler:
             self.pending_tok[slot] = 0
             self.prefill_pos[slot] = resume
             self.prefill_done[slot] = False
+            self._chain[slot] = chain
             self._prefill_queue.append(slot)
 
     # ---- prefill work -------------------------------------------------
     def _finish_prefill(self, slot: int, logits, t: float) -> None:
         req = self.active[slot]
-        first = int(self.sampler(logits, self._next_key())[0])
-        req.tokens.append(first)
-        req.t_first_token = t
-        self.step_events.append(req)
-        if self.tracer is not None:
-            def emit(t_end, cost_model, *, req=req, slot=slot):
-                from repro.obs import trace as T
-                self.tracer.instant(
-                    "first_token", req.t_first_token, pid=T.SERVE_PID,
-                    tid=T.lane_tid(slot), cat="ttft",
-                    args={"trace_id": req.trace_id, "rid": req.rid,
-                          "ttft_s": req.ttft_s})
-            self._pending_trace.append(emit)
-        self.total_new_tokens += 1
-        self.ctx[slot] = len(req.prompt)
+        chain = self._chain[slot]
+        resumed = len(req.tokens) > 0
+        if resumed:
+            # Preemption resume: the chain's last-token logits reproduce
+            # the already-recorded pending token (greedy replay is
+            # exact); pin it rather than re-emitting into the stream.
+            first = int(req.tokens[-1])
+        else:
+            first = int(self.sampler(logits, self._next_key())[0])
+            req.tokens.append(first)
+            req.t_first_token = t
+            self.step_events.append(req)
+            if self.tracer is not None:
+                def emit(t_end, cost_model, *, req=req, slot=slot):
+                    from repro.obs import trace as T
+                    self.tracer.instant(
+                        "first_token", req.t_first_token, pid=T.SERVE_PID,
+                        tid=T.lane_tid(slot), cat="ttft",
+                        args={"trace_id": req.trace_id, "rid": req.rid,
+                              "ttft_s": req.ttft_s})
+                self._pending_trace.append(emit)
+            self.total_new_tokens += 1
+        self.ctx[slot] = len(chain)
         self.pending_tok[slot] = first
         self.prefill_done[slot] = True
         if self.prefix is not None:
-            self.prefix.insert(req.prompt, self.tables[slot])
-        if req.max_new_tokens == 1:
+            self.prefix.insert(chain, self.tables[slot])
+        if len(req.tokens) >= req.max_new_tokens:
             self._retire(slot, t)
 
     def _run_prefill(self, t: float) -> None:
         """Run AT MOST ONE prefill unit: the oldest admitted lane still
         prefilling gets one chunk (chunked) or its whole bucketed prefill
-        (monolithic)."""
+        (monolithic). In speculative mode every unit is mirrored through
+        the draft engine (same chunk, draft params, draft pools) so the
+        draft cache tracks the target's logical layout."""
         while self._prefill_queue and (
                 self.active[self._prefill_queue[0]] is None
                 or self.prefill_done[self._prefill_queue[0]]):
@@ -362,12 +543,18 @@ class ContinuousScheduler:
             return
         slot = self._prefill_queue[0]
         req = self.active[slot]
-        plen = len(req.prompt)
+        chain = self._chain[slot]
+        plen = len(chain)
         if self.prefill_mode == "monolithic":
-            toks, length = self.engine.pad_prompt(req.prompt)
+            toks, length = self.engine.pad_prompt(chain)
             logits, k, v = self.engine.prefill(self.params, toks, length)
             self.pools = self.engine.write_prefill(
                 self.pools, k, v, jnp.asarray(self.tables[slot]))
+            if self.draft is not None:
+                self.draft.prefill(toks, length)
+                self.draft.write_prefill(jnp.asarray(self.tables[slot]))
+                self.last_stats["draft_forwards"] = (
+                    self.last_stats.get("draft_forwards", 0) + 1)
             self.prefills_run += 1
             self.prefill_pos[slot] = plen
             mc = self.engine.max_context
@@ -384,10 +571,16 @@ class ContinuousScheduler:
         pos = int(self.prefill_pos[slot])
         clen = min(c, plen - pos)
         buf = np.zeros(c, np.int32)
-        buf[:clen] = np.asarray(req.prompt[pos:pos + clen], np.int32)
+        buf[:clen] = np.asarray(chain[pos:pos + clen], np.int32)
         logits, self.pools = self.engine.prefill_chunk(
             self.params, self.pools, jnp.asarray(buf),
             jnp.asarray(self.tables[slot]), pos, clen)
+        if self.draft is not None:
+            self.draft.prefill_chunk(jnp.asarray(buf),
+                                     jnp.asarray(self.tables[slot]),
+                                     pos, clen)
+            self.last_stats["draft_forwards"] = (
+                self.last_stats.get("draft_forwards", 0) + 1)
         self.prefill_chunks_run += 1
         self.prefill_pos[slot] = pos + clen
         self.last_stats["prefill_padded_tokens"] = c
@@ -445,6 +638,10 @@ class ContinuousScheduler:
         if not ready.any():
             self._sample_metrics(t, 0)
             return 0
+        if self.speculative:
+            emitted = self._spec_step(ready, t)
+            self._sample_metrics(t, emitted)
+            return emitted
         # Lanes still prefilling are masked to the dead-lane contract so
         # the fused decode never writes into their (possibly shared)
         # blocks: table 0 -> null block, ctx 0, token 0.
@@ -468,6 +665,120 @@ class ContinuousScheduler:
             if len(req.tokens) >= req.max_new_tokens:
                 self._retire(slot, t)
         self._sample_metrics(t, emitted)
+        return emitted
+
+    def _spec_step(self, ready: np.ndarray, t: float) -> int:
+        """One draft-verify speculative step over every ready lane.
+
+        Drafts up to ``draft_k`` greedy tokens per lane through the
+        draft engine, verifies all of them in ONE batched target forward
+        (:meth:`PagedEngine.verify`), emits the exact-match prefix plus
+        the target's own next token, and rolls the rejected tail's K/V
+        back bitwise. Per-lane windows shrink to the tokens a lane may
+        still emit, so appends never leave the blocks reserved at
+        admission. Greedy streams are bit-identical to non-speculative
+        decode: every emitted token is the target's argmax given exactly
+        the prefix before it."""
+        k = self.draft_k
+        c = k + 1
+        bs = self.spec.block_size
+        remaining = np.array(
+            [self.active[s].max_new_tokens - len(self.active[s].tokens)
+             if ready[s] else 0 for s in range(self.slots)], np.int32)
+        window = np.minimum(c, remaining)               # [slots]
+        live = window > 0
+        dec_tables = np.where(live[:, None], self.tables, 0).astype(np.int32)
+        ctx = np.where(live, self.ctx, 0).astype(np.int32)
+        pend = np.where(live, self.pending_tok, 0).astype(np.int32)
+
+        drafts = self.draft.propose(pend, dec_tables, ctx, window)
+        self.draft_forwards_run += k + 1
+        self.last_stats["draft_forwards"] = (
+            self.last_stats.get("draft_forwards", 0) + k + 1)
+
+        # rollback snapshot of every pool row the verify append may touch
+        cols = np.arange(c, dtype=np.int32)[None, :]
+        positions = ctx[:, None] + cols                 # [slots, C]
+        valid = cols < window[:, None]
+        safe_pos = np.where(valid, positions, 0)
+        phys = np.take_along_axis(dec_tables, safe_pos // bs, axis=1)
+        phys = np.where(valid, phys, 0).astype(np.int32)
+        off = np.where(valid, safe_pos % bs, 0).astype(np.int32)
+        phys_f = jnp.asarray(phys.reshape(-1))
+        off_f = jnp.asarray(off.reshape(-1))
+        saved = KC.gather_rows(self.pools, phys_f, off_f)
+
+        tokens = np.concatenate([pend[:, None], drafts], axis=1)
+        logits, self.pools = self.engine.verify(
+            self.params, self.pools, jnp.asarray(tokens),
+            jnp.asarray(dec_tables), jnp.asarray(ctx),
+            jnp.asarray(window))
+        self.decode_steps_run += 1
+        self.spec_steps_run += 1
+        greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+        # greedy exact-match acceptance (pure; mutations follow rollback)
+        accepted = np.zeros(self.slots, np.int32)
+        for slot in np.flatnonzero(live):
+            w = int(window[slot])
+            a = 0
+            while a < w - 1 and greedy[slot, a] == drafts[slot, a]:
+                a += 1
+            accepted[slot] = a
+
+        # roll the rejected tail back to the never-drafted pool state
+        restore = valid & (cols > accepted[:, None])
+        if restore.any():
+            r_phys = jnp.asarray(np.where(restore, phys, 0).reshape(-1))
+            r_off = jnp.asarray(np.where(restore, off, 0).reshape(-1))
+            self.pools = KC.scatter_rows(self.pools, saved, r_phys, r_off)
+
+        hist = self.metrics.histogram(
+            "serve_spec_accepted_len",
+            "accepted draft tokens per lane per speculative step",
+            buckets=tuple(float(i) for i in range(k + 1)))
+        emitted = 0
+        for slot in np.flatnonzero(live):
+            req = self.active[slot]
+            w = int(window[slot])
+            a = int(accepted[slot])
+            out = [int(x) for x in drafts[slot, :a]] + [int(greedy[slot, a])]
+            req.tokens.extend(out)
+            self.ctx[slot] = int(ctx[slot]) + a + 1
+            self.pending_tok[slot] = out[-1]
+            self.total_new_tokens += len(out)
+            emitted += len(out)
+            self.proposed_drafts += w - 1
+            self.accepted_drafts += a
+            hist.observe(float(a))
+            if len(req.tokens) >= req.max_new_tokens:
+                self._retire(slot, t)
+
+        n_live = int(live.sum())
+        verify_tokens = int(window.sum())
+        verify_mac = int(sum(int(w) * (int(cx) + int(w))
+                             for w, cx in zip(window, ctx) if w > 0))
+        self.last_stats["verify_tokens"] = (
+            self.last_stats.get("verify_tokens", 0) + verify_tokens)
+        self.last_stats["verify_attn_mac"] = (
+            self.last_stats.get("verify_attn_mac", 0) + verify_mac)
+        if self.tracer is not None:
+            def emit_spec(t_end, cost_model, *, t0=t, n_live=n_live,
+                          verify_tokens=verify_tokens,
+                          verify_mac=verify_mac, emitted=emitted,
+                          acc=int(accepted.sum())):
+                from repro.obs import trace as T
+                mid = t0 + (t_end - t0) * 0.5
+                self.tracer.complete(
+                    "draft", t0, mid, pid=T.SERVE_PID, tid=T.SPEC_TID,
+                    cat="spec",
+                    args={"forwards": k + 1, "lanes": n_live})
+                self.tracer.complete(
+                    "verify", mid, t_end, pid=T.SERVE_PID, tid=T.SPEC_TID,
+                    cat="spec",
+                    args={"tokens": verify_tokens, "attn_mac": verify_mac,
+                          "accepted_drafts": acc, "emitted": emitted})
+            self._pending_trace.append(emit_spec)
         return emitted
 
     def _sample_metrics(self, t: float, emitted: int) -> None:

@@ -22,10 +22,11 @@ from repro.configs.common import reduced
 from repro.obs import (Counter, FL_PID, Gauge, Histogram, MetricsRegistry,
                        ProfileOptions, SERVE_PID, Tracer, kernel_cost_args,
                        profiled, resolve_tracer)
-from repro.obs.trace import (CLOUD_TID, QUEUE_TID, edge_tid, lane_tid,
-                             vehicle_tid)
+from repro.obs.trace import (CLOUD_TID, QUEUE_TID, SPEC_TID, edge_tid,
+                             lane_tid, vehicle_tid)
 from repro.serve import (PrefillCostModel, ServeRequest,
-                         generate_pod_requests, serve_continuous)
+                         SpecDecodeCostModel, generate_pod_requests,
+                         serve_continuous)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 TOPO = parse_topology("2@nano*2,agx*2")
@@ -333,6 +334,65 @@ def test_serve_tracing_is_bitwise_zero_cost(lm_setup):
     assert any(e["ph"] == "C" and e["name"] == "kv blocks" for e in events)
 
 
+def test_speculative_serve_tracing_and_metrics(lm_setup):
+    """Speculative mode keeps the zero-cost contract: draft/verify spans
+    land on the SPEC_TID track, the trace is byte-deterministic, and the
+    traced streams stay bitwise equal to an untraced run. The
+    accepted-draft-length histogram and preemption counter are in the
+    scheduler's always-on registry snapshot from construction."""
+    from repro.serve import ContinuousScheduler, PagedCacheSpec, PagedEngine
+    cfg, params = lm_setup
+    opts = _serve_opts(cfg)
+    opts["prefill_cost"] = SpecDecodeCostModel()
+    plain = serve_continuous(cfg, params=params, speculative=True,
+                             draft_k=3, **opts)
+    raws, rep = [], None
+    for _ in range(2):
+        tr = Tracer()
+        rep = serve_continuous(cfg, params=params, speculative=True,
+                               draft_k=3, trace=tr, **opts)
+        raws.append(tr.to_bytes())
+    assert rep["sequences"] == plain["sequences"]
+    assert raws[0] == raws[1]
+    events = json.loads(raws[0])["traceEvents"]
+    assert VT.validate(events) == []
+    spec_spans = [e for e in events
+                  if e["ph"] == "X" and e["tid"] == SPEC_TID]
+    assert {e["name"] for e in spec_spans} == {"draft", "verify"}
+    assert all(e["pid"] == SERVE_PID for e in spec_spans)
+    assert sum(e["name"] == "verify" for e in spec_spans) \
+        == rep["spec_steps"]
+    assert all(e["args"]["forwards"] == 4 for e in spec_spans
+               if e["name"] == "draft")
+    acc = sum(e["args"]["accepted_drafts"] for e in spec_spans
+              if e["name"] == "verify")
+    assert acc == rep["accepted_drafts"]
+    # the specdec track is named
+    assert any(e["ph"] == "M" and e["name"] == "thread_name"
+               and e["tid"] == SPEC_TID
+               and e["args"]["name"] == "specdec" for e in events)
+
+    # satellite: always-on registry carries the speculative instruments
+    # the moment the scheduler is built — no samples needed
+    reg = MetricsRegistry()
+    pspec = PagedCacheSpec.for_requests(1, 16, block_size=4)
+    eng = PagedEngine(cfg, pspec, max_context=8, slots=1)
+    sched = ContinuousScheduler(eng, params, speculative=True, draft_k=3,
+                                prefix_cache=True, metrics=reg)
+    snap = reg.snapshot()["metrics"]
+    assert snap["serve_spec_accepted_len"]["type"] == "histogram"
+    assert snap["serve_preemptions"]["type"] == "counter"
+    # and a drained run populates the histogram
+    rng = np.random.default_rng(0)
+    sched.run_to_completion(
+        [ServeRequest(rid=0,
+                      prompt=rng.integers(1, cfg.vocab_size,
+                                          (4,)).astype(np.int32),
+                      max_new_tokens=6)])
+    series = reg.snapshot()["metrics"]["serve_spec_accepted_len"]["series"]
+    assert series and series[0]["count"] > 0
+
+
 def test_serve_request_trace_id_defaults_to_rid():
     prompt = np.zeros(3, np.int32)
     assert ServeRequest(7, prompt, 2).trace_id == 7
@@ -433,5 +493,5 @@ def test_benchmarks_list_prints_registry():
          "--list"], capture_output=True, text=True, timeout=60, cwd=REPO)
     assert out.returncode == 0, out.stderr
     names = out.stdout.split()
-    assert len(names) == 14 and len(set(names)) == 14
-    assert {"serving", "prefill", "async", "comm"} <= set(names)
+    assert len(names) == 15 and len(set(names)) == 15
+    assert {"serving", "prefill", "async", "comm", "specdec"} <= set(names)

@@ -576,6 +576,246 @@ def test_ttft_and_queue_wait_in_report(dense_setup):
     assert rep["p50_ttft_s"] >= rep["p50_queue_wait_s"]
 
 
+# ------------------------------------- speculative decoding (draft-verify)
+def _spec_trace(cfg, n=6, seed=3):
+    return generate_pod_requests("nano*1,agx*1", num_requests=n, pods=2,
+                                 template_len=8, max_suffix=4, seed=seed,
+                                 short_new=(3, 6), long_new=(8, 12),
+                                 long_frac=0.4, vocab_size=cfg.vocab_size)
+
+
+@pytest.mark.parametrize("cache", ["fp32", "int8"])
+def test_speculative_streams_bit_identical(dense_setup, cache):
+    """Draft-verify speculation must not change a single emitted token —
+    self-drafting (acceptance 1.0) and an unrelated random draft
+    (acceptance ~0, every speculative step rolls back) both reproduce
+    the non-speculative greedy streams bitwise, in fp32 AND int8 cache
+    mode, while speculation still wins sim time at high acceptance."""
+    from repro.models import lm
+    from repro.serve import SpecDecodeCostModel
+    cfg, params = dense_setup
+    common = dict(params=params, slots=2, block_size=4, max_context=16,
+                  prefill="chunked", prefill_chunk=4, prefix_cache=True,
+                  cache=cache, requests=_spec_trace(cfg), log_fn=None,
+                  warm_passes=1)
+    base = serve_continuous(cfg, prefill_cost=PrefillCostModel(), **common)
+    spec = serve_continuous(cfg, speculative=True, draft_k=3,
+                            prefill_cost=SpecDecodeCostModel(), **common)
+    assert spec["sequences"] == base["sequences"]
+    assert spec["spec_steps"] > 0
+    assert spec["acceptance_rate"] == 1.0       # self-draft agrees always
+    assert spec["decode_steps"] < base["decode_steps"]
+    assert spec["sim_time_s"] < base["sim_time_s"]
+    # unrelated draft weights: every draft rejected, rollback must leave
+    # the pools indistinguishable from never having drafted -> streams
+    # still bitwise equal (a single corrupt K/V row would cascade)
+    rej = serve_continuous(cfg, speculative=True, draft_k=3,
+                           draft_params=lm.init(jax.random.PRNGKey(7), cfg),
+                           prefill_cost=SpecDecodeCostModel(), **common)
+    assert rej["sequences"] == base["sequences"]
+    assert rej["acceptance_rate"] < 0.2
+    assert rej["proposed_drafts"] > 0
+
+
+def test_speculative_validation(dense_setup):
+    cfg, params = dense_setup
+    spec = PagedCacheSpec.for_requests(1, 16, block_size=4)
+    eng = PagedEngine(cfg, spec, max_context=8, slots=1)
+    with pytest.raises(ValueError):             # greedy-only by definition
+        ContinuousScheduler(eng, params, speculative=True,
+                            sampling="temperature")
+    with pytest.raises(ValueError):             # resume needs chunked
+        ContinuousScheduler(eng, params, prefill="monolithic",
+                            preemption=True)
+    with pytest.raises(ValueError):             # draft_k >= 1
+        ContinuousScheduler(eng, params, speculative=True, draft_k=0)
+    # speculative + monolithic is allowed, preemption just defaults off
+    s = ContinuousScheduler(eng, params, speculative=True,
+                            prefill="monolithic")
+    assert s.speculative and not s.preemption
+
+
+def _rollback_cycle(salt, quantized):
+    """Draft-append-then-reject cycle must restore the pools bitwise
+    (fp32 and int8 — codes AND scales); a partial accept restores
+    exactly the rejected tail while leaving accepted rows."""
+    from repro.config import ModelConfig
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=8,
+                      num_heads=2, num_kv_heads=1, d_ff=16, vocab_size=32,
+                      param_dtype="float32")
+    spec = PagedCacheSpec(num_blocks=5, block_size=4, max_blocks_per_req=4,
+                          quantized=quantized)
+    rng = np.random.default_rng(salt)
+    pools = KC.init_pools(cfg, spec)
+    if quantized:
+        pools = {
+            "k": jnp.asarray(rng.integers(-127, 128, pools["k"].shape),
+                             jnp.int8),
+            "v": jnp.asarray(rng.integers(-127, 128, pools["v"].shape),
+                             jnp.int8),
+            "k_scale": jnp.asarray(rng.random(pools["k_scale"].shape),
+                                   jnp.float32),
+            "v_scale": jnp.asarray(rng.random(pools["v_scale"].shape),
+                                   jnp.float32)}
+    else:
+        pools = {k: jnp.asarray(rng.standard_normal(p.shape), p.dtype)
+                 for k, p in pools.items()}
+    before = {k: np.asarray(p).copy() for k, p in pools.items()}
+
+    # a draft window somewhere in blocks 1..4
+    w = int(rng.integers(1, 9))
+    start = int(rng.integers(0, 16 - w))
+    pos = np.arange(start, start + w)
+    phys = jnp.asarray(1 + pos // spec.block_size, jnp.int32)
+    off = jnp.asarray(pos % spec.block_size, jnp.int32)
+
+    saved = KC.gather_rows(pools, phys, off)
+    garbage = {k: jnp.asarray(rng.standard_normal(r.shape), r.dtype)
+               if not np.issubdtype(np.asarray(r).dtype, np.integer)
+               else jnp.asarray(rng.integers(-127, 128, r.shape), r.dtype)
+               for k, r in saved.items()}
+    pools = KC.scatter_rows(pools, garbage, phys, off)   # the draft append
+    assert any(not np.array_equal(np.asarray(pools[k]), before[k])
+               for k in pools)
+
+    accepted = int(rng.integers(0, w + 1))
+    # kept positions redirect to the null block: garbage lands in block 0
+    keep = np.arange(w) < accepted
+    r_phys = jnp.asarray(np.where(keep, 0, np.asarray(phys)), jnp.int32)
+    r_off = jnp.asarray(np.where(keep, 0, np.asarray(off)), jnp.int32)
+    pools = KC.scatter_rows(pools, saved, r_phys, r_off)
+    for k in pools:
+        got = np.asarray(pools[k])
+        # expected pool: pristine everywhere except the accepted rows,
+        # which keep the drafted values (their tokens were emitted)
+        want = before[k].copy()
+        if accepted:
+            ap, ao = np.asarray(phys)[:accepted], np.asarray(off)[:accepted]
+            want[:, :, ap, ao] = np.asarray(garbage[k])[:, :, :accepted]
+        # block 0 is garbage by contract; everything else must be exact
+        assert np.array_equal(got[:, :, 1:], want[:, :, 1:]), k
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_draft_rollback_bitwise_walk(quantized):
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        _rollback_cycle(int(rng.integers(0, 1 << 20)), quantized)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1 << 20), st.booleans())
+def test_draft_rollback_bitwise_property(salt, quantized):
+    _rollback_cycle(salt, quantized)
+
+
+def test_prefix_evict_never_drops_shared_blocks():
+    """Satellite regression: ``PrefixCache.evict`` must skip any block a
+    live request still holds (refcount > 1) — evicting it would hand a
+    mapped, readable block back to the allocator for reuse."""
+    spec = PagedCacheSpec(num_blocks=12, block_size=4, max_blocks_per_req=4)
+    alloc = BlockAllocator(spec)
+    pc = PrefixCache(alloc)
+    prompt = np.arange(1, 9, dtype=np.int32)       # 2 full blocks
+    blocks = alloc.alloc(2)
+    pc.insert(prompt, blocks + [0, 0])
+    shared, cow, resume = pc.match(prompt[:8])     # CoW hold on block 1
+    held = shared + [cow]
+    assert alloc.refcount(blocks[0]) == 3          # request+registry+match
+    assert pc.evict(10) == 0                       # all entries are shared
+    assert len(pc) == 2 and alloc.refcount(blocks[0]) == 3
+    alloc.release(held)
+    alloc.release(blocks)                          # the request retires
+    assert pc.evict(10) == 2                       # now registry-only
+    assert alloc.in_use == 0
+
+
+def test_preemption_resume_exact(dense_setup):
+    """A tight pool + a later-but-tighter-deadline arrival preempts the
+    live lane; the victim's resume replays through the prefix cache and
+    its stream stays bit-identical to an unpressured run."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(4)
+    pa = rng.integers(1, cfg.vocab_size, (6,)).astype(np.int32)
+    pb = rng.integers(1, cfg.vocab_size, (6,)).astype(np.int32)
+
+    def mk():
+        return [ServeRequest(rid=0, prompt=pa.copy(), max_new_tokens=8,
+                             deadline_s=100.0),
+                ServeRequest(rid=1, prompt=pb.copy(), max_new_tokens=4,
+                             deadline_s=1.0)]
+
+    spec = PagedCacheSpec.for_requests(2, 16, block_size=4)
+    eng = PagedEngine(cfg, spec, max_context=8, slots=2)
+    oracle = ContinuousScheduler(eng, params, prefill="chunked",
+                                 prefill_chunk=4, prefix_cache=True)
+    want = {r.rid: list(r.tokens) for r in oracle.run_to_completion(mk())}
+
+    # each request needs 4 blocks; a 5-block cap cannot host both
+    sched = ContinuousScheduler(eng, params, prefill="chunked",
+                                prefill_chunk=4, prefix_cache=True,
+                                preemption=True, max_inflight_blocks=5)
+    ra, rb = mk()
+    sched.submit(ra)
+    for step in range(4):               # admit + prefill A, decode a bit
+        sched.step(float(step))
+        sched.flush_trace(step + 1.0)
+    assert len(ra.tokens) > 0 and not sched.idle
+    sched.submit(rb)
+    steps = 4
+    while not sched.idle:
+        sched.step(float(steps))
+        sched.flush_trace(steps + 1.0)
+        steps += 1
+        assert steps < 200
+    got = {r.rid: list(r.tokens) for r in sched.finished}
+    assert got == want
+    assert sched.preemptions == 1
+    assert [r.rid for r in sched.finished] == [1, 0]   # B jumped the line
+    # the victim's re-registered chain is what remains allocated
+    assert sched.allocator.in_use == sched.prefix.registered_blocks
+    m = sched.metrics.snapshot()["metrics"]
+    assert m["serve_preemptions"]["series"][0]["value"] == 1.0
+    # without a strictly-lower-priority victim nothing is preempted: the
+    # same pressure with deadlines flipped just queues the newcomer
+    s2 = ContinuousScheduler(eng, params, prefill="chunked",
+                             prefill_chunk=4, prefix_cache=True,
+                             preemption=True, max_inflight_blocks=5)
+    ra2 = ServeRequest(rid=0, prompt=pa.copy(), max_new_tokens=8,
+                       deadline_s=1.0)
+    rb2 = ServeRequest(rid=1, prompt=pb.copy(), max_new_tokens=4,
+                       deadline_s=100.0)
+    s2.submit(ra2)
+    for step in range(4):
+        s2.step(float(step))
+        s2.flush_trace(step + 1.0)
+    s2.submit(rb2)
+    steps = 4
+    while not s2.idle:
+        s2.step(float(steps))
+        s2.flush_trace(steps + 1.0)
+        steps += 1
+        assert steps < 200
+    assert s2.preemptions == 0
+    assert [r.rid for r in s2.finished] == [0, 1]
+
+
+def test_unstarted_request_report_none(dense_setup):
+    """Satellite: a request that never produced a token reports None for
+    ttft/queue-wait (not stale zeros), and the loadgen's deadline hit
+    rate scores only requests that started."""
+    cfg, params = dense_setup
+    r = ServeRequest(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                     max_new_tokens=2)
+    assert r.ttft_s is None and r.queue_wait_s is None
+    assert r.latency_s is None and not r.met_deadline
+    rep = serve_continuous(cfg, params=params, requests=_trace(cfg),
+                           slots=2, block_size=4, max_context=12,
+                           prefill_cost=PrefillCostModel(), log_fn=None)
+    assert rep["unstarted_requests"] == 0       # a drained trace all ran
+    assert 0 <= rep["deadline_hit_rate"] <= 1
+
+
 # ----------------------------------------------------- session plumbing ---
 def test_session_serve_continuous_smoke():
     from repro.api import MeshSpec, Session
@@ -587,8 +827,20 @@ def test_session_serve_continuous_smoke():
     assert out["requests"] == 3
     assert out["total_new_tokens"] > 0
     assert out["warm_tokens_per_s"] > 0
+    spec = ses.serve(scheduler="continuous", requests=3, batch=2,
+                     context=12, block_size=4, max_prompt=6,
+                     short_new=(3, 4), long_new=(6, 8),
+                     speculative=True, draft_k=2, log_fn=None)
+    assert spec["sequences"] == out["sequences"]  # bit-identical via API too
+    assert spec["acceptance_rate"] == 1.0         # default self-draft
     with pytest.raises(ValueError):
         ses.serve(scheduler="bogus")
+    with pytest.raises(ValueError):
+        ses.serve(speculative=True)               # legacy can't speculate
+    with pytest.raises(ValueError):
+        ses.serve(scheduler="continuous", draft_pod=0)  # needs speculative
+    with pytest.raises(ValueError):               # tensor has no pod view
+        ses.serve(scheduler="continuous", speculative=True, draft_pod=0)
 
 
 def test_legacy_serve_sampling():
